@@ -1,0 +1,64 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import numpy as np
+
+from repro.configs import SMOKE_UNET
+from repro.configs.base import FLConfig
+from repro.data import SMOKE_DATA, ClientData, make_dataset, shards_per_client
+from repro.fl.client import Client
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def smoke_clients(num_clients: int = 6, classes_per_client: int = 1,
+                  iid_split: bool = False, seed: int = 0):
+    images, labels = make_dataset(SMOKE_DATA, seed=seed)
+    if iid_split:
+        from repro.data import iid
+        parts = iid(labels, num_clients, seed=seed)
+    else:
+        parts = shards_per_client(labels, num_clients, classes_per_client,
+                                  seed=seed)
+    return [Client(i, ClientData(images[p], labels[p], batch_size=32, seed=i),
+                   SMOKE_DATA.num_classes) for i, p in enumerate(parts)], \
+        images, labels
+
+
+def smoke_fl(rounds: int = 4, **kw) -> FLConfig:
+    base = dict(num_clients=6, num_edges=2, local_epochs=1, edge_agg_every=1,
+                cloud_agg_every=2, rounds=rounds, sparse_rounds=2,
+                prune_ratio=0.44, sh_a=1000.0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def sample_images(params, cfg, n: int = 64, steps: int = 10, seed: int = 0):
+    """DDIM-sample n images from a trained U-Net."""
+    import jax
+    from repro.diffusion import ddim_sample, linear_schedule
+    from repro.models.unet import apply_unet
+    sched = linear_schedule(cfg.diffusion_steps)
+    eps_fn = lambda x, t: apply_unet(params, cfg, x, t)
+    out = ddim_sample(eps_fn, sched, jax.random.PRNGKey(seed),
+                      (n, cfg.image_size, cfg.image_size, cfg.in_channels),
+                      num_steps=steps)
+    return np.asarray(out)

@@ -1,0 +1,39 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — correctness-scale
+timings; the BlockSpec tiling is the TPU deliverable)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.block_masked_matmul.ops import masked_matmul
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.rglru_scan.ops import linear_recurrence
+
+
+def main() -> None:
+    rng = jax.random.PRNGKey(0)
+    x = jax.random.normal(rng, (256, 512))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (512, 512))
+    for ratio in (0.0, 0.44):
+        cm = (jax.random.uniform(jax.random.fold_in(rng, 2), (512,))
+              >= ratio).astype(jnp.float32)
+        rm = jnp.ones(512)
+        fn = lambda: masked_matmul(x, w, cm, rm).block_until_ready()
+        emit(f"kernels/masked_matmul_r{int(ratio*100)}", time_fn(fn),
+             f"M=256;K=512;N=512")
+
+    q = jax.random.normal(rng, (2, 256, 4, 64))
+    k = jax.random.normal(jax.random.fold_in(rng, 3), (2, 256, 2, 64))
+    v = jax.random.normal(jax.random.fold_in(rng, 4), (2, 256, 2, 64))
+    fn = lambda: flash_attention(q, k, v, causal=True).block_until_ready()
+    emit("kernels/flash_attention", time_fn(fn), "B=2;S=256;H=4;hd=64")
+
+    a = jax.random.uniform(rng, (2, 512, 256), minval=0.5, maxval=0.99)
+    b = jax.random.normal(jax.random.fold_in(rng, 5), (2, 512, 256))
+    fn = lambda: linear_recurrence(a, b).block_until_ready()
+    emit("kernels/rglru_scan", time_fn(fn), "B=2;S=512;W=256")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""§Roofline report: render the dry-run JSON into the per-(arch x shape)
+three-term table (also emitted as benchmark rows)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def render(path: str = "results_dryrun_single_pod.json") -> None:
+    if not os.path.exists(path):
+        emit("roofline/missing", 0.0, f"run dryrun --all --out {path}")
+        return
+    with open(path) as f:
+        records = json.load(f)
+    for r in records:
+        rf = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}",
+             max(rf["compute_s"], rf["memory_s"], rf["collective_s"]) * 1e6,
+             f"dominant={rf['dominant']};compute_ms={rf['compute_s']*1e3:.2f};"
+             f"memory_ms={rf['memory_s']*1e3:.2f};"
+             f"collective_ms={rf['collective_s']*1e3:.2f};"
+             f"useful={r['useful_flops_ratio'] if r['useful_flops_ratio'] is None else round(r['useful_flops_ratio'],3)}")
+
+
+def main() -> None:
+    render()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper Table I (micro): FID/IS quality of FedPhD vs baselines.
+
+Reduced scale (smoke U-Net, synthetic 4-class data, few rounds, 10-step
+DDIM, proxy-FID) — the paper's ordering claims, not its absolute values.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (emit, sample_images, smoke_clients, smoke_fl,
+                               time_fn)
+from repro.configs import SMOKE_UNET
+from repro.core.hfl import FedPhD
+from repro.fl.baselines import run_flat_fl
+from repro.metrics import fid_proxy, inception_score_proxy
+
+
+def main(rounds: int = 6) -> None:
+    clients, images, labels = smoke_clients()
+    fl = smoke_fl(rounds=rounds)
+    real = images[:256]
+
+    def evaluate(params, cfg, tag):
+        fake = sample_images(params, cfg, n=128, steps=10)
+        fid = fid_proxy(real, fake)
+        is_ = inception_score_proxy(fake)
+        return fid, is_
+
+    # FedPhD
+    t0 = time.perf_counter()
+    trainer = FedPhD(SMOKE_UNET, fl, clients, rng_seed=0)
+    trainer.run(rounds)
+    dt = (time.perf_counter() - t0) * 1e6 / rounds
+    fid, is_ = evaluate(trainer.params, trainer.cfg, "fedphd")
+    emit("table1/fedphd", dt, f"fid={fid:.2f};is={is_:.3f};"
+         f"params_m={trainer.history[-1].params_m:.3f}")
+
+    # FedPhD-OS
+    import dataclasses
+    trainer = FedPhD(SMOKE_UNET, dataclasses.replace(
+        fl, prune_mode="oneshot_l2"), clients, rng_seed=0)
+    trainer.run(rounds)
+    fid, is_ = evaluate(trainer.params, trainer.cfg, "fedphd-os")
+    emit("table1/fedphd_os", dt, f"fid={fid:.2f};is={is_:.3f}")
+
+    for method in ("fedavg", "fedprox", "moon", "scaffold", "feddiffuse"):
+        t0 = time.perf_counter()
+        res = run_flat_fl(method, SMOKE_UNET, fl, clients, rounds=rounds)
+        dt = (time.perf_counter() - t0) * 1e6 / rounds
+        fid, is_ = evaluate(res.params, SMOKE_UNET, method)
+        emit(f"table1/{method}", dt, f"fid={fid:.2f};is={is_:.3f}")
+
+
+if __name__ == "__main__":
+    main()

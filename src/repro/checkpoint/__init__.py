@@ -1,0 +1,3 @@
+from repro.checkpoint.ckpt import save, load
+
+__all__ = ["save", "load"]

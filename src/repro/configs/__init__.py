@@ -1,0 +1,183 @@
+"""Config registry: ``get_config(arch_id)`` + reduced smoke variants.
+
+The 10 assigned architectures are selectable via ``--arch <id>`` in the
+launchers; the paper's own DDPM U-Net configs live alongside them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.configs.base import (
+    ModelConfig, MoEConfig, MLAConfig, InputShape, ShardingRules, FLConfig,
+    INPUT_SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K,
+    ATTN_GLOBAL, ATTN_LOCAL, RECURRENT, RWKV,
+)
+
+from repro.configs.recurrentgemma_9b import CONFIG as _recurrentgemma_9b
+from repro.configs.whisper_base import CONFIG as _whisper_base
+from repro.configs.internlm2_20b import CONFIG as _internlm2_20b
+from repro.configs.gemma2_2b import CONFIG as _gemma2_2b
+from repro.configs.internvl2_76b import CONFIG as _internvl2_76b
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moonshot
+from repro.configs.deepseek_v3_671b import CONFIG as _deepseek_v3
+from repro.configs.qwen3_moe_235b_a22b import CONFIG as _qwen3_moe
+from repro.configs.rwkv6_7b import CONFIG as _rwkv6_7b
+from repro.configs.command_r_35b import CONFIG as _command_r
+from repro.configs.ddpm_unet import CIFAR10_UNET, CELEBA_UNET, SMOKE_UNET
+
+ARCHS: Dict[str, ModelConfig] = {
+    "recurrentgemma-9b": _recurrentgemma_9b,
+    "whisper-base": _whisper_base,
+    "internlm2-20b": _internlm2_20b,
+    "gemma2-2b": _gemma2_2b,
+    "internvl2-76b": _internvl2_76b,
+    "moonshot-v1-16b-a3b": _moonshot,
+    "deepseek-v3-671b": _deepseek_v3,
+    "qwen3-moe-235b-a22b": _qwen3_moe,
+    "rwkv6-7b": _rwkv6_7b,
+    "command-r-35b": _command_r,
+}
+
+UNETS: Dict[str, ModelConfig] = {
+    "ddpm-unet-cifar10": CIFAR10_UNET,
+    "ddpm-unet-celeba": CELEBA_UNET,
+    "ddpm-unet-smoke": SMOKE_UNET,
+}
+
+ALL_CONFIGS: Dict[str, ModelConfig] = {**ARCHS, **UNETS}
+
+
+def list_archs() -> List[str]:
+    return sorted(ARCHS.keys())
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ALL_CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ALL_CONFIGS)}")
+    return ALL_CONFIGS[name]
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+# ---------------------------------------------------------------------------
+# Shape-specific config adaptation (DESIGN.md §4 decode-shape policy).
+# ---------------------------------------------------------------------------
+def adapt_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Adapt an architecture config for a given input shape.
+
+    For ``long_500k`` decode, pure-full-attention architectures get an
+    explicit sliding-window override (window=4096) so the KV cache and
+    per-token cost stay sub-quadratic/bounded.  Architectures with native
+    sub-quadratic structure (rwkv6, recurrentgemma, gemma2's local layers)
+    are untouched.  The override is visible in the returned config's
+    ``layer_pattern`` / ``name`` and recorded in EXPERIMENTS.md.
+    """
+    if shape.name != "long_500k" or cfg.arch_type == "unet":
+        return cfg
+    kinds = set(cfg.layer_kinds())
+    if kinds <= {ATTN_LOCAL, RECURRENT, RWKV}:
+        return cfg  # natively sub-quadratic
+    if cfg.name == "gemma2-2b":
+        # native alternating local/global: decode over 500k is linear per
+        # token; keep as-is (global layers hold the full KV cache).
+        return cfg
+    # dense / MoE / enc-dec / vlm: switch all global attention to windowed.
+    pattern = tuple(ATTN_LOCAL if k == ATTN_GLOBAL else k for k in cfg.layer_pattern)
+    return cfg.replace(
+        name=cfg.name + "+swa4096",
+        layer_pattern=pattern,
+        sliding_window=4096,
+        max_seq_len=max(cfg.max_seq_len, shape.seq_len),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reduced smoke variants: same family, ≤2 layers, d_model ≤ 512, ≤4 experts.
+# ---------------------------------------------------------------------------
+def smoke_variant(name: str) -> ModelConfig:
+    cfg = get_config(name)
+    if cfg.arch_type == "unet":
+        return SMOKE_UNET
+    d_model = min(cfg.d_model, 256)
+    head_dim = 32
+    num_heads = max(2, min(4, cfg.num_heads))
+    num_kv = max(1, min(num_heads, cfg.num_kv_heads if cfg.num_kv_heads < cfg.num_heads else num_heads))
+    # keep GQA ratio flavour: MQA stays MQA, MHA stays MHA
+    if cfg.num_kv_heads == 1:
+        num_kv = 1
+    elif cfg.num_kv_heads == cfg.num_heads:
+        num_kv = num_heads
+    else:
+        num_kv = max(1, num_heads // 2)
+    pattern = cfg.layer_pattern
+    num_layers = max(2, len(pattern))       # at least one full pattern cycle
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(
+            cfg.moe,
+            num_experts=4,
+            experts_per_token=2,
+            d_expert=64,
+            num_shared_experts=min(1, cfg.moe.num_shared_experts),
+            d_shared=64 if cfg.moe.num_shared_experts else 0,
+            first_dense_layers=min(1, cfg.moe.first_dense_layers),
+        )
+    mla = None
+    if cfg.mla is not None:
+        mla = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                        qk_nope_head_dim=head_dim, qk_rope_head_dim=16,
+                        v_head_dim=head_dim)
+    return cfg.replace(
+        name=cfg.name + "-smoke",
+        num_layers=num_layers,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        head_dim=head_dim,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 512,
+        vocab_size=min(cfg.vocab_size, 1024),
+        moe=moe,
+        mla=mla,
+        lru_width=d_model,
+        sliding_window=min(cfg.sliding_window, 64),
+        num_encoder_layers=min(cfg.num_encoder_layers, 2),
+        encoder_seq_len=min(cfg.encoder_seq_len, 32) if cfg.arch_type == "encdec" else cfg.encoder_seq_len,
+        num_image_tokens=min(cfg.num_image_tokens, 8),
+        max_seq_len=1024,
+        dtype="float32",
+        param_dtype="float32",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-arch sharding rules (DESIGN.md §6).
+# ---------------------------------------------------------------------------
+_BIG = {"internvl2-76b", "deepseek-v3-671b", "qwen3-moe-235b-a22b",
+        "command-r-35b", "internlm2-20b", "recurrentgemma-9b"}
+
+
+def sharding_rules(cfg: ModelConfig) -> ShardingRules:
+    base_name = cfg.name.replace("-smoke", "").replace("+swa4096", "")
+    fsdp = ("data", "pod") if base_name in _BIG else ("data",)
+    return ShardingRules(
+        batch=("pod", "data"),
+        heads=("model",),
+        ffn=("model",),
+        experts=("model",),
+        vocab=("model",),
+        fsdp_axes=fsdp,
+        shard_kv_cache_seq=False,
+    )
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "InputShape", "ShardingRules",
+    "FLConfig", "INPUT_SHAPES", "TRAIN_4K", "PREFILL_32K", "DECODE_32K",
+    "LONG_500K", "ARCHS", "UNETS", "ALL_CONFIGS", "list_archs", "get_config",
+    "get_shape", "adapt_for_shape", "smoke_variant", "sharding_rules",
+    "ATTN_GLOBAL", "ATTN_LOCAL", "RECURRENT", "RWKV",
+    "CIFAR10_UNET", "CELEBA_UNET", "SMOKE_UNET",
+]

@@ -1,0 +1,35 @@
+"""whisper-base — audio encoder-decoder transformer backbone.
+
+[arXiv:2212.04356] Whisper base: 6 encoder + 6 decoder layers, d_model=512,
+8 heads (full MHA, kv=8), d_ff=2048, vocab 51865.  The mel-spectrogram +
+conv frontend is a STUB per the assignment: ``input_specs()`` provides
+precomputed frame embeddings of shape (batch, 1500, 512).
+
+Positional scheme adapted to RoPE (framework-uniform); whisper's learned
+absolute embeddings are an equivalent-capacity substitute — recorded in
+DESIGN.md §8.
+"""
+from repro.configs.base import ModelConfig, ATTN_GLOBAL
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    arch_type="encdec",
+    source="arXiv:2212.04356",
+    num_layers=6,              # decoder layers
+    num_encoder_layers=6,
+    encoder_seq_len=1500,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    layer_pattern=(ATTN_GLOBAL,),
+    activation="gelu",
+    glu=False,                 # whisper uses plain GELU MLP
+    use_qkv_bias=True,
+    use_attn_out_bias=True,
+    use_ffn_bias=True,
+    norm_eps=1e-5,
+    max_seq_len=32768,
+)

@@ -1,0 +1,30 @@
+"""FedPhD core: the paper's primary contribution.
+
+- sh_score:     Statistical Homogeneity score + accumulated distributions
+                (Eqs. 18-20)
+- aggregation:  homogeneity-aware weighted aggregation (Eqs. 21-24)
+- selection:    SH-driven client->edge selection (Eq. 25)
+- hfl:          the hierarchical-FL orchestrator (Algorithm 1)
+- pruning:      DepGraph-lite structured pruning (Eqs. 16-17)
+"""
+from repro.core.sh_score import (sh_score, label_distribution, uniform_target,
+                                 AccumulatedDistribution)
+from repro.core.aggregation import (weighted_average, fedavg_weights,
+                                    sh_weights, aggregate_fedavg, aggregate_sh)
+from repro.core.selection import (selection_probabilities, select_edge,
+                                  ranked_alternatives, random_selection)
+
+
+def __getattr__(name):
+    # lazy: repro.core.hfl imports repro.fl.client, which imports
+    # repro.core.pruning — avoid the circular import at package init.
+    if name in ("FedPhD", "RoundRecord"):
+        from repro.core import hfl
+        return getattr(hfl, name)
+    raise AttributeError(name)
+
+__all__ = ["sh_score", "label_distribution", "uniform_target",
+           "AccumulatedDistribution", "weighted_average", "fedavg_weights",
+           "sh_weights", "aggregate_fedavg", "aggregate_sh",
+           "selection_probabilities", "select_edge", "ranked_alternatives",
+           "random_selection", "FedPhD", "RoundRecord"]

@@ -1,0 +1,59 @@
+"""Model aggregation: FedAvg weighting and FedPhD homogeneity-aware
+weighting (paper Eqs. 21–24).
+
+All aggregations are weighted pytree sums; they run on host (numpy-free,
+jax.tree based) and are identical at the edge and cloud tiers — only the
+weights differ.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def weighted_average(param_trees: Sequence, weights: Sequence[float]):
+    """sum_i w_i * theta_i with weights normalized to 1."""
+    w = np.asarray(weights, np.float64)
+    total = w.sum()
+    if total <= 0:
+        w = np.full_like(w, 1.0 / len(w))
+    else:
+        w = w / total
+    def combine(*leaves):
+        acc = leaves[0].astype(jnp.float32) * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            acc = acc + leaf.astype(jnp.float32) * wi
+        return acc.astype(leaves[0].dtype)
+    return jax.tree.map(combine, *param_trees)
+
+
+def fedavg_weights(sample_counts: Sequence[int]) -> np.ndarray:
+    """rho_n = D_n / D (Eq. 10)."""
+    n = np.asarray(sample_counts, np.float64)
+    return n / max(n.sum(), 1.0)
+
+
+def sh_weights(sample_counts: Sequence[int], sh_scores: Sequence[float],
+               a: float, b: float) -> np.ndarray:
+    """Eqs. 22/24: rho = ReLU(n + a*mu + b) / sum ReLU(...)."""
+    n = np.asarray(sample_counts, np.float64)
+    mu = np.asarray(sh_scores, np.float64)
+    raw = np.maximum(n + a * mu + b, 0.0)
+    total = raw.sum()
+    if total <= 0:                      # degenerate: fall back to FedAvg
+        return fedavg_weights(sample_counts)
+    return raw / total
+
+
+def aggregate_fedavg(param_trees: Sequence, sample_counts: Sequence[int]):
+    return weighted_average(param_trees, fedavg_weights(sample_counts))
+
+
+def aggregate_sh(param_trees: Sequence, sample_counts: Sequence[int],
+                 sh_scores: Sequence[float], a: float, b: float):
+    """Homogeneity-aware aggregation (edge: Eq. 23/24; cloud: Eq. 21/22)."""
+    return weighted_average(param_trees, sh_weights(sample_counts, sh_scores,
+                                                    a, b))

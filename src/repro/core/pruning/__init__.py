@@ -1,0 +1,15 @@
+from repro.core.pruning.groups import (PruneGroup, GroupMember, build_groups,
+                                       get_path, set_path)
+from repro.core.pruning.criteria import l2_scores, random_scores, group_sq_norms
+from repro.core.pruning.masks import (make_masks, apply_masks, kept_count,
+                                      keep_indices, sparsity_report)
+from repro.core.pruning.regularizer import omega, depth_lambdas
+from repro.core.pruning.compact import compact, compact_params, compact_config
+
+__all__ = [
+    "PruneGroup", "GroupMember", "build_groups", "get_path", "set_path",
+    "l2_scores", "random_scores", "group_sq_norms",
+    "make_masks", "apply_masks", "kept_count", "keep_indices",
+    "sparsity_report", "omega", "depth_lambdas",
+    "compact", "compact_params", "compact_config",
+]

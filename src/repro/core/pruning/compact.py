@@ -1,0 +1,129 @@
+"""Physical compaction: slice pruned units out, emit a smaller config.
+
+This is the paper's "structured pruning on theta at r = R_s" (Alg. 1
+line 26) adapted to JAX/TPU: masks keep shapes static during sparse
+training; compaction happens ONCE at the cloud and triggers a single
+re-jit of the training step with genuinely smaller tensors (DESIGN.md §3.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.pruning.groups import PruneGroup, get_path, set_path
+from repro.core.pruning.masks import keep_indices
+
+
+def _unit_flat_indices(keep_idx, chunk: int, offset: int):
+    """(k,) unit indices -> (k*chunk,) flat element indices."""
+    base = keep_idx * chunk + offset
+    return (base[..., :, None] + jnp.arange(chunk)[None, :]).reshape(
+        keep_idx.shape[:-1] + (-1,))
+
+
+def _compact_param_axis(param, axis: int, members, g: PruneGroup,
+                        keep_idx) -> jnp.ndarray:
+    """Rebuild one parameter along one axis, gathering kept units.
+
+    members: the group's members on this (path, axis), sorted by offset.
+    Unowned regions of the axis are kept whole.
+    """
+    stacked = bool(g.stacked)
+    dim = param.shape[axis]
+    pieces = []
+    cursor = 0
+    for m in sorted(members, key=lambda m: m.offset):
+        if m.offset > cursor:
+            pieces.append(jax.lax.slice_in_dim(param, cursor, m.offset,
+                                               axis=axis))
+        flat = _unit_flat_indices(keep_idx, m.chunk, m.offset)
+        if stacked:
+            take = jax.vmap(lambda p, i: jnp.take(p, i, axis=axis - 1))
+            pieces.append(take(param, flat))
+        else:
+            pieces.append(jnp.take(param, flat, axis=axis))
+        cursor = m.offset + g.size * m.chunk
+    if cursor < dim:
+        pieces.append(jax.lax.slice_in_dim(param, cursor, dim, axis=axis))
+    return jnp.concatenate(pieces, axis=axis) if len(pieces) > 1 else pieces[0]
+
+
+def compact_params(params, groups: List[PruneGroup],
+                   masks: Dict[str, jnp.ndarray]) -> Tuple[Dict, Dict[str, int]]:
+    """Slice kept units out of every group.  Returns (params, kept-counts)."""
+    kept_counts: Dict[str, int] = {}
+    for g in groups:
+        mask = masks[g.name]
+        row = mask[0] if g.stacked else mask
+        k = int(jnp.sum(row))
+        kept_counts[g.name] = k
+        keep_idx = keep_indices(mask, k)
+        # group members by (path, axis) so shared params are rebuilt once
+        by_pa = defaultdict(list)
+        for m in g.members:
+            axis = m.axis + (1 if g.stacked else 0)
+            by_pa[(m.path, axis)].append(m)
+        for (path, axis), members in by_pa.items():
+            p = get_path(params, path)
+            new_p = _compact_param_axis(p, axis, members, g, keep_idx)
+            params = set_path(params, path, new_p)
+    return params, kept_counts
+
+
+def _uniform(groups: List[PruneGroup], kept: Dict[str, int],
+             suffix: str) -> int:
+    vals = {kept[g.name] for g in groups if g.name.endswith(suffix)}
+    if not vals:
+        return 0
+    assert len(vals) == 1, f"non-uniform kept counts for {suffix}: {vals}"
+    return vals.pop()
+
+
+def compact_config(cfg: ModelConfig, groups: List[PruneGroup],
+                   kept: Dict[str, int]) -> ModelConfig:
+    """Derive the post-compaction config (uniform-ratio pruning keeps the
+    scan-stacked layers shape-compatible)."""
+    if cfg.arch_type == "unet":
+        return cfg  # internal channel counts live in param shapes only
+    changes = {}
+    k_heads = _uniform(groups, kept, "/heads")
+    if k_heads:
+        changes["num_kv_heads"] = k_heads
+        changes["num_heads"] = k_heads * cfg.q_per_kv
+    k_ffn = _uniform(groups, kept, "/ffn") or _uniform(groups, kept, "/cmix_ffn")
+    if k_ffn:
+        changes["d_ff"] = k_ffn
+    k_lru = _uniform(groups, kept, "/lru")
+    if k_lru:
+        changes["lru_width"] = k_lru
+    k_tmix = _uniform(groups, kept, "/tmix_heads")
+    if k_tmix:
+        changes["num_heads"] = k_tmix
+        changes["num_kv_heads"] = k_tmix
+    if cfg.moe is not None:
+        moe_changes = {}
+        k_exp = _uniform(groups, kept, "/experts")
+        if k_exp:
+            moe_changes["num_experts"] = k_exp
+            moe_changes["experts_per_token"] = min(cfg.moe.experts_per_token,
+                                                   k_exp)
+        k_shared = _uniform(groups, kept, "/shared_ffn")
+        if k_shared:
+            moe_changes["d_shared"] = k_shared
+        if moe_changes:
+            changes["moe"] = dataclasses.replace(cfg.moe, **moe_changes)
+    return cfg.replace(name=cfg.name + "-pruned", **changes) if changes else cfg
+
+
+def compact(params, cfg: ModelConfig, groups: List[PruneGroup],
+            masks: Dict[str, jnp.ndarray]):
+    """Full compaction: (params, cfg, masks) -> (new_params, new_cfg, report)."""
+    new_params, kept = compact_params(params, groups, masks)
+    new_cfg = compact_config(cfg, groups, kept)
+    report = {g.name: (kept[g.name], g.size) for g in groups}
+    return new_params, new_cfg, report

@@ -1,0 +1,50 @@
+"""Pruning criteria: L2 group-norm (paper §IV-A) and random (FedPhD-OS)."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pruning.groups import PruneGroup, GroupMember, get_path
+
+
+def member_unit_sq(params, g: PruneGroup, m: GroupMember) -> jnp.ndarray:
+    """Sum of squares per unit for one member.
+
+    Returns (size,) or (stacked, size) float32.
+    """
+    p = get_path(params, m.path)
+    axis = m.axis + (1 if g.stacked else 0)
+    sl = jax.lax.slice_in_dim(p, m.offset, m.offset + g.size * m.chunk,
+                              axis=axis)
+    shape = list(sl.shape)
+    shape[axis:axis + 1] = [g.size, m.chunk]
+    r = sl.reshape(shape).astype(jnp.float32)
+    reduce_axes = tuple(i for i in range(r.ndim)
+                        if i != axis and not (g.stacked and i == 0))
+    return jnp.sum(jnp.square(r), axis=reduce_axes)
+
+
+def group_sq_norms(params, g: PruneGroup) -> jnp.ndarray:
+    """||theta^g[k]||_2^2 per unit k (Eq. 17 inner term)."""
+    out = None
+    for m in g.members:
+        s = member_unit_sq(params, g, m)
+        out = s if out is None else out + s
+    return out
+
+
+def l2_scores(params, groups: List[PruneGroup]) -> Dict[str, jnp.ndarray]:
+    """Group-norm importance scores (sqrt of summed squares)."""
+    return {g.name: jnp.sqrt(group_sq_norms(params, g)) for g in groups}
+
+
+def random_scores(rng, groups: List[PruneGroup]) -> Dict[str, jnp.ndarray]:
+    """FedPhD-OS one-shot random pruning scores."""
+    out = {}
+    for g in groups:
+        rng, sub = jax.random.split(rng)
+        shape = (g.stacked, g.size) if g.stacked else (g.size,)
+        out[g.name] = jax.random.uniform(sub, shape)
+    return out

@@ -1,0 +1,96 @@
+"""Pruning masks: selection from scores, mask application (sparse phase).
+
+TPU alignment policy (DESIGN.md §3.1): kept *channel/lane* counts are
+rounded to multiples of 8 (128 once the group is >=1024 wide, so MXU-fed
+dims stay lane-aligned after compaction); head/expert units are integral
+already and not rounded.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pruning.groups import PruneGroup, get_path, set_path
+
+
+def alignment_for(g: PruneGroup) -> int:
+    if g.unit in ("head", "expert"):
+        return 1
+    if g.size >= 1024 and g.size % 128 == 0:
+        return 128
+    if g.size >= 16 and g.size % 8 == 0:
+        return 8
+    return 1
+
+
+def kept_count(g: PruneGroup, ratio: float) -> int:
+    align = alignment_for(g)
+    keep = max(1, round(g.size * (1.0 - ratio)))
+    if align > 1:
+        keep = max(align, round(keep / align) * align)
+    return min(keep, g.size)
+
+
+def make_masks(scores: Dict[str, jnp.ndarray], groups: List[PruneGroup],
+               ratio: float) -> Dict[str, jnp.ndarray]:
+    """Top-k-by-score 0/1 masks, per group (per cycle for stacked groups)."""
+    masks = {}
+    for g in groups:
+        s = scores[g.name]
+        k = kept_count(g, ratio)
+        thresh = -jnp.sort(-s, axis=-1)[..., k - 1:k]       # k-th largest
+        mask = (s >= thresh).astype(jnp.float32)
+        # break ties deterministically: keep exactly k per row
+        idx = jnp.argsort(-s, axis=-1, stable=True)
+        rank = jnp.argsort(idx, axis=-1, stable=True)
+        mask = (rank < k).astype(jnp.float32)
+        masks[g.name] = mask
+    return masks
+
+
+def keep_indices(mask: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Sorted indices of kept units; mask (..., size) -> (..., k)."""
+    idx = jnp.argsort(-mask, axis=-1, stable=True)[..., :k]
+    return jnp.sort(idx, axis=-1)
+
+
+def _mask_vector(mask_row, g: PruneGroup, m, dim: int):
+    """Expand a (size,) mask into a (dim,) multiplier for one member."""
+    rep = jnp.repeat(mask_row, m.chunk)
+    full = jnp.ones((dim,), jnp.float32)
+    return jax.lax.dynamic_update_slice(full, rep, (m.offset,))
+
+
+def apply_masks(params, groups: List[PruneGroup],
+                masks: Dict[str, jnp.ndarray]):
+    """Zero out pruned units (shape-stable sparse-training phase)."""
+    for g in groups:
+        mask = masks[g.name]
+        for m in g.members:
+            p = get_path(params, m.path)
+            axis = m.axis + (1 if g.stacked else 0)
+            dim = p.shape[axis]
+            if g.stacked:
+                vec = jax.vmap(lambda mr: _mask_vector(mr, g, m, dim))(mask)
+                shape = [mask.shape[0]] + [1] * (p.ndim - 1)
+                shape[axis] = dim
+                mult = vec.reshape(shape)
+            else:
+                vec = _mask_vector(mask, g, m, dim)
+                shape = [1] * p.ndim
+                shape[axis] = dim
+                mult = vec.reshape(shape)
+            params = set_path(params, m.path, p * mult.astype(p.dtype))
+    return params
+
+
+def sparsity_report(groups: List[PruneGroup],
+                    masks: Dict[str, jnp.ndarray]) -> Dict[str, tuple]:
+    out = {}
+    for g in groups:
+        m = masks[g.name]
+        kept = int(jnp.sum(m[0] if g.stacked else m))
+        out[g.name] = (kept, g.size)
+    return out

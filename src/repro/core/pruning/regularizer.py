@@ -1,0 +1,44 @@
+"""Group-lasso sparse-training regularizer (paper Eqs. 16–17).
+
+Omega(G, k) = sum_g lambda_g * sum_k ||theta^g[k]||_2^2 with the
+depth-aware scale lambda_g = lambda_0 / Q(theta^g), where
+Q = mean |l - l_mid| — U-Net middle layers (most redundant) get the
+largest regularization pressure.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pruning.criteria import group_sq_norms
+from repro.core.pruning.groups import PruneGroup
+
+
+def depth_lambdas(groups: List[PruneGroup], lambda0: float) -> Dict[str, np.ndarray]:
+    """lambda_g per group (per cycle for stacked groups)."""
+    max_layer = max((max(g.layer_indices) for g in groups if g.layer_indices),
+                    default=0)
+    l_mid = max_layer / 2.0
+    out = {}
+    for g in groups:
+        idx = np.asarray(g.layer_indices, np.float32)
+        q = np.abs(idx - l_mid)
+        q = np.maximum(q, 0.5)          # avoid divide-by-zero at the middle
+        out[g.name] = (lambda0 / q).astype(np.float32)
+    return out
+
+
+def omega(params, groups: List[PruneGroup],
+          lambdas: Dict[str, np.ndarray]) -> jnp.ndarray:
+    """The regularization term added to the local loss during sparse rounds."""
+    total = jnp.zeros((), jnp.float32)
+    for g in groups:
+        sq = group_sq_norms(params, g)                       # (size,) or (C, size)
+        lam = jnp.asarray(lambdas[g.name])
+        if g.stacked:
+            total = total + jnp.sum(lam * jnp.sum(sq, axis=-1))
+        else:
+            total = total + lam[0] * jnp.sum(sq)
+    return total

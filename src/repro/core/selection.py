@@ -1,0 +1,47 @@
+"""Client -> edge-server selection (paper Eq. 25 + resilience ranking).
+
+P_n(e) ∝ ReLU(a * mu_e^{n'} - n_e^{n'} + b), where mu_e^{n'} / n_e^{n'}
+are the edge's SH score / sample count AFTER hypothetically adding client
+n — prefer the edge that becomes most homogeneous, penalize loaded edges.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.sh_score import AccumulatedDistribution
+
+
+def selection_probabilities(edges: Sequence[AccumulatedDistribution],
+                            q_n: np.ndarray, n_n: int, *, a: float, b: float,
+                            q_u: Optional[np.ndarray] = None) -> np.ndarray:
+    raw = np.zeros(len(edges), np.float64)
+    for i, e in enumerate(edges):
+        n_after, mu_after = e.peek_with(q_n, n_n)
+        raw[i] = max(a * mu_after - n_after + b, 0.0)
+    total = raw.sum()
+    if total <= 0:
+        return np.full(len(edges), 1.0 / len(edges))
+    return raw / total
+
+
+def select_edge(rng: np.random.Generator,
+                edges: Sequence[AccumulatedDistribution], q_n: np.ndarray,
+                n_n: int, *, a: float, b: float) -> int:
+    p = selection_probabilities(edges, q_n, n_n, a=a, b=b)
+    return int(rng.choice(len(edges), p=p))
+
+
+def ranked_alternatives(edges: Sequence[AccumulatedDistribution],
+                        q_n: np.ndarray, n_n: int, *, a: float,
+                        b: float) -> List[int]:
+    """Edges ranked by P_n(e) — the k-th entry is the k-th-best fallback
+    if an edge server fails (paper Appendix E resilience)."""
+    p = selection_probabilities(edges, q_n, n_n, a=a, b=b)
+    return list(np.argsort(-p))
+
+
+def random_selection(rng: np.random.Generator, num_edges: int) -> int:
+    """Baseline selection used in the paper's Fig. 7/8 comparison."""
+    return int(rng.integers(num_edges))

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (DatasetSpec, CIFAR10_LIKE, CELEBA_LIKE,
+                                  SMOKE_DATA, make_dataset, make_token_dataset)
+from repro.data.partition import iid, shards_per_client, dirichlet
+from repro.data.pipeline import ClientData
+
+__all__ = ["DatasetSpec", "CIFAR10_LIKE", "CELEBA_LIKE", "SMOKE_DATA",
+           "make_dataset", "make_token_dataset", "iid", "shards_per_client",
+           "dirichlet", "ClientData"]

@@ -1,0 +1,37 @@
+"""Minimal batching pipeline for client-local training."""
+from __future__ import annotations
+
+from typing import Dict, Iterator
+
+import numpy as np
+
+
+class ClientData:
+    """One client's local dataset with epoch iteration (Alg. 2)."""
+
+    def __init__(self, images: np.ndarray, labels: np.ndarray, *,
+                 batch_size: int, seed: int = 0):
+        self.images = images
+        self.labels = labels
+        self.batch_size = min(batch_size, len(images))
+        self._rng = np.random.default_rng(seed)
+
+    def __len__(self) -> int:
+        return len(self.images)
+
+    def epoch(self) -> Iterator[Dict[str, np.ndarray]]:
+        idx = self._rng.permutation(len(self.images))
+        nb = max(len(idx) // self.batch_size, 1)
+        for b in range(nb):
+            sel = idx[b * self.batch_size:(b + 1) * self.batch_size]
+            yield {"images": self.images[sel], "labels": self.labels[sel]}
+
+    def batches(self, num: int) -> Iterator[Dict[str, np.ndarray]]:
+        """num batches, reshuffling between epochs."""
+        produced = 0
+        while produced < num:
+            for batch in self.epoch():
+                yield batch
+                produced += 1
+                if produced >= num:
+                    return

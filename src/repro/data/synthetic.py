@@ -1,0 +1,82 @@
+"""Synthetic class-structured datasets (hardware/data-gate substitute).
+
+Real CIFAR-10 / CelebA are not downloadable in this container (repro
+band 2/5), so the FL experiments use class-conditional Gaussian-mixture
+images: every class has a deterministic smooth "prototype" pattern and
+samples are prototype + structured noise.  This preserves exactly what
+the paper's experiments need from the data: (i) distinct per-class
+distributions (so non-IID partitions bite), (ii) a well-defined global
+distribution for FID-style comparisons, (iii) image-shaped tensors for
+the U-Net.  DESIGN.md §1 records the substitution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    name: str
+    num_classes: int
+    image_size: int
+    channels: int = 3
+    samples_per_class: int = 512
+
+
+CIFAR10_LIKE = DatasetSpec("cifar10-like", num_classes=10, image_size=32)
+CELEBA_LIKE = DatasetSpec("celeba-like", num_classes=4, image_size=64)
+SMOKE_DATA = DatasetSpec("smoke", num_classes=4, image_size=16,
+                         samples_per_class=64)
+
+
+def _class_prototype(rng: np.random.Generator, size: int, channels: int):
+    """Smooth low-frequency pattern per class."""
+    coarse = rng.normal(size=(4, 4, channels))
+    # bilinear upsample to (size, size)
+    xi = np.linspace(0, 3, size)
+    x0 = np.floor(xi).astype(int)
+    x1 = np.minimum(x0 + 1, 3)
+    w = xi - x0                                               # (size,)
+    rows = (coarse[x0] * (1 - w)[:, None, None]
+            + coarse[x1] * w[:, None, None])                  # (size, 4, C)
+    proto = (rows[:, x0] * (1 - w)[None, :, None]
+             + rows[:, x1] * w[None, :, None])                # (size, size, C)
+    return np.tanh(proto * 1.5)
+
+
+def make_dataset(spec: DatasetSpec, seed: int = 0
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (images (N,H,W,C) float32 in [-1,1], labels (N,) int32)."""
+    rng = np.random.default_rng(seed)
+    protos = np.stack([_class_prototype(rng, spec.image_size, spec.channels)
+                       for _ in range(spec.num_classes)])
+    images, labels = [], []
+    for c in range(spec.num_classes):
+        noise = rng.normal(scale=0.35,
+                           size=(spec.samples_per_class, spec.image_size,
+                                 spec.image_size, spec.channels))
+        x = np.clip(protos[c][None] + noise, -1.0, 1.0)
+        images.append(x.astype(np.float32))
+        labels.append(np.full((spec.samples_per_class,), c, np.int32))
+    perm = rng.permutation(spec.num_classes * spec.samples_per_class)
+    return (np.concatenate(images)[perm], np.concatenate(labels)[perm])
+
+
+def make_token_dataset(num_classes: int, vocab_size: int, seq_len: int,
+                       samples_per_class: int, seed: int = 0
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Class-conditional token sequences (for FL-over-LM extensions):
+    each class has its own token unigram distribution."""
+    rng = np.random.default_rng(seed)
+    tokens, labels = [], []
+    for c in range(num_classes):
+        logits = rng.normal(size=(vocab_size,)) * 2.0
+        p = np.exp(logits) / np.exp(logits).sum()
+        t = rng.choice(vocab_size, size=(samples_per_class, seq_len), p=p)
+        tokens.append(t.astype(np.int32))
+        labels.append(np.full((samples_per_class,), c, np.int32))
+    perm = rng.permutation(num_classes * samples_per_class)
+    return np.concatenate(tokens)[perm], np.concatenate(labels)[perm]

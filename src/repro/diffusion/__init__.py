@@ -1,0 +1,7 @@
+from repro.diffusion.schedule import DiffusionSchedule, linear_schedule, cosine_schedule
+from repro.diffusion.ddpm import q_sample, ddpm_loss, ddpm_sample_step
+from repro.diffusion.ddim import ddim_sample, ddim_timesteps
+
+__all__ = ["DiffusionSchedule", "linear_schedule", "cosine_schedule",
+           "q_sample", "ddpm_loss", "ddpm_sample_step", "ddim_sample",
+           "ddim_timesteps"]

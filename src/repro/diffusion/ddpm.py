@@ -1,0 +1,43 @@
+"""DDPM forward process + training loss (paper Eqs. 5–7, Alg. 2 lines 6–12)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion.schedule import DiffusionSchedule
+
+
+def q_sample(schedule: DiffusionSchedule, x0, t, eps):
+    """Forward noising: x_t = sqrt(abar_t) x0 + sqrt(1-abar_t) eps."""
+    abar = schedule.alpha_bars[t]
+    shape = (-1,) + (1,) * (x0.ndim - 1)
+    return (jnp.sqrt(abar).reshape(shape) * x0
+            + jnp.sqrt(1.0 - abar).reshape(shape) * eps)
+
+
+def ddpm_loss(eps_fn: Callable, schedule: DiffusionSchedule, x0, rng):
+    """Simplified DDPM loss (Eq. 6): E ||eps - eps_theta(x_t, t)||^2.
+
+    eps_fn(x_t, t) -> predicted noise.  x0: (B, H, W, C) in [-1, 1].
+    """
+    B = x0.shape[0]
+    rng_t, rng_eps = jax.random.split(rng)
+    t = jax.random.randint(rng_t, (B,), 0, schedule.num_steps)
+    eps = jax.random.normal(rng_eps, x0.shape, x0.dtype)
+    x_t = q_sample(schedule, x0, t, eps)
+    pred = eps_fn(x_t, t)
+    return jnp.mean(jnp.square(eps - pred))
+
+
+def ddpm_sample_step(eps_fn: Callable, schedule: DiffusionSchedule, x_t, t, rng):
+    """One reverse step of ancestral DDPM sampling (Eq. 7)."""
+    beta = schedule.betas[t]
+    alpha = schedule.alphas[t]
+    abar = schedule.alpha_bars[t]
+    eps = eps_fn(x_t, jnp.full((x_t.shape[0],), t, jnp.int32))
+    mean = (x_t - beta / jnp.sqrt(1.0 - abar) * eps) / jnp.sqrt(alpha)
+    z = jax.random.normal(rng, x_t.shape, x_t.dtype)
+    sigma = jnp.sqrt(beta)
+    return mean + jnp.where(t > 0, sigma, 0.0) * z

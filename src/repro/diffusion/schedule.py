@@ -1,0 +1,35 @@
+"""Noise schedules for DDPM/DDIM (Ho et al. 2020, Song et al. 2021)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionSchedule:
+    betas: jnp.ndarray          # (T,)
+    alphas: jnp.ndarray         # (T,)
+    alpha_bars: jnp.ndarray     # (T,) cumulative products
+
+    @property
+    def num_steps(self) -> int:
+        return self.betas.shape[0]
+
+
+def linear_schedule(num_steps: int, beta_start: float = 1e-4,
+                    beta_end: float = 0.02) -> DiffusionSchedule:
+    betas = jnp.linspace(beta_start, beta_end, num_steps, dtype=jnp.float32)
+    alphas = 1.0 - betas
+    alpha_bars = jnp.cumprod(alphas)
+    return DiffusionSchedule(betas=betas, alphas=alphas, alpha_bars=alpha_bars)
+
+
+def cosine_schedule(num_steps: int, s: float = 0.008) -> DiffusionSchedule:
+    t = jnp.arange(num_steps + 1, dtype=jnp.float32) / num_steps
+    f = jnp.cos((t + s) / (1 + s) * jnp.pi / 2) ** 2
+    alpha_bars = f / f[0]
+    betas = jnp.clip(1.0 - alpha_bars[1:] / alpha_bars[:-1], 0.0, 0.999)
+    alphas = 1.0 - betas
+    return DiffusionSchedule(betas=betas, alphas=alphas,
+                             alpha_bars=jnp.cumprod(alphas))

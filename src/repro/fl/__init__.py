@@ -1,0 +1,6 @@
+from repro.fl.client import Client, make_local_step, run_local
+from repro.fl.comm import CommModel
+from repro.fl.baselines import run_flat_fl, run_centralized, FlatFLResult
+
+__all__ = ["Client", "make_local_step", "run_local", "CommModel",
+           "run_flat_fl", "run_centralized", "FlatFLResult"]

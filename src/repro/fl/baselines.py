@@ -1,0 +1,190 @@
+"""Flat (single-tier) FL baselines from the paper's Table II:
+
+FedAvg [6], FedProx [21], FedDiffuse [15] (partial-parameter updates),
+MOON [22] (model-contrastive), SCAFFOLD [23] (control variates), plus
+centralized training.  All share the client substrate in fl/client.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core.aggregation import aggregate_fedavg
+from repro.fl.client import Client, make_local_step, run_local
+from repro.fl.comm import CommModel
+from repro.models import model
+from repro.optim import adam_init, adam_update
+
+
+# ---------------------------------------------------------------------------
+# FedDiffuse parameter partition: shared (communicated) vs local subsets.
+# de Goede et al. split the U-Net; we share the encoder half (down+mid+temb)
+# and keep the decoder (up, out) local — their "UDEC" variant mirrored.
+# ---------------------------------------------------------------------------
+_SHARED_KEYS_UNET = ("conv_in", "temb1", "temb2", "down", "mid")
+
+
+def _split_shared(params: Dict, cfg: ModelConfig):
+    if cfg.arch_type == "unet":
+        shared = {k: v for k, v in params.items() if k in _SHARED_KEYS_UNET}
+        local = {k: v for k, v in params.items() if k not in _SHARED_KEYS_UNET}
+        return shared, local
+    # transformers: share everything except the lm head / final norm
+    local_keys = ("final_norm", "lm_head")
+    shared = {k: v for k, v in params.items() if k not in local_keys}
+    local = {k: v for k, v in params.items() if k in local_keys}
+    return shared, local
+
+
+def _merge(shared: Dict, local: Dict) -> Dict:
+    out = dict(shared)
+    out.update(local)
+    return out
+
+
+def shared_fraction(params: Dict, cfg: ModelConfig) -> float:
+    shared, local = _split_shared(params, cfg)
+    sb = sum(x.size for x in jax.tree.leaves(shared))
+    lb = sum(x.size for x in jax.tree.leaves(local))
+    return sb / max(sb + lb, 1)
+
+
+@dataclasses.dataclass
+class FlatFLResult:
+    history: List[Dict]
+    params: Dict
+
+
+def run_flat_fl(method: str, cfg: ModelConfig, fl: FLConfig,
+                clients: List[Client], *, rounds: Optional[int] = None,
+                lr: float = 2e-4, rng_seed: int = 0,
+                eval_fn: Optional[Callable] = None,
+                eval_every: int = 0) -> FlatFLResult:
+    """method in {fedavg, fedprox, feddiffuse, moon, scaffold}."""
+    assert method in ("fedavg", "fedprox", "feddiffuse", "moon", "scaffold")
+    rounds = rounds or fl.rounds
+    np_rng = np.random.default_rng(rng_seed)
+    rng = jax.random.PRNGKey(rng_seed)
+    rng, sub = jax.random.split(rng)
+    params = model.init(sub, cfg)
+    comm = CommModel()
+    mbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+    step_fn = make_local_step(cfg, fl, method=method, lr=lr)
+
+    # method-specific state
+    zeros_like = lambda t: jax.tree.map(
+        lambda p: jnp.zeros_like(p, jnp.float32), t)
+    c_global = zeros_like(params) if method == "scaffold" else None
+    c_locals = {c.cid: zeros_like(params) for c in clients} \
+        if method == "scaffold" else {}
+    prev_locals: Dict[int, Dict] = {}      # MOON
+    local_parts: Dict[int, Dict] = {}      # FedDiffuse
+
+    history: List[Dict] = []
+    for r in range(1, rounds + 1):
+        C = max(1, round(fl.participation * len(clients)))
+        sel = np_rng.choice(len(clients), size=C, replace=False)
+        client_models, counts, losses = [], [], []
+        c_deltas = []
+        for cid in sel:
+            cl = clients[cid]
+            start = params
+            if method == "feddiffuse" and cid in local_parts:
+                shared, _ = _split_shared(params, cfg)
+                start = _merge(shared, local_parts[cid])
+            ctx = {}
+            if method in ("fedprox", "moon"):
+                ctx["global_params"] = params
+            if method == "moon":
+                ctx["prev_params"] = prev_locals.get(cid, params)
+            if method == "scaffold":
+                ctx["c_local"] = c_locals[cid]
+                ctx["c_global"] = c_global
+            rng, sub = jax.random.split(rng)
+            new_p, _, loss = run_local(step_fn, start, cl,
+                                       epochs=fl.local_epochs, rng=sub,
+                                       ctx=ctx)
+            losses.append(loss)
+            counts.append(cl.n_samples)
+            if method == "moon":
+                prev_locals[cid] = new_p
+            if method == "feddiffuse":
+                shared, local = _split_shared(new_p, cfg)
+                local_parts[cid] = local
+                client_models.append(shared)
+            else:
+                client_models.append(new_p)
+            if method == "scaffold":
+                # c_i+ = c_i - c + (x - y_i) / (K * lr)
+                steps = fl.local_epochs * max(
+                    len(cl.data) // cl.data.batch_size, 1)
+                scale = 1.0 / (steps * lr)
+                new_ci = jax.tree.map(
+                    lambda ci, c, x, y: ci - c + scale
+                    * (x.astype(jnp.float32) - y.astype(jnp.float32)),
+                    c_locals[cid], c_global, start, new_p)
+                c_deltas.append(jax.tree.map(lambda a, b: a - b, new_ci,
+                                             c_locals[cid]))
+                c_locals[cid] = new_ci
+
+        agg = aggregate_fedavg(client_models, counts)
+        if method == "feddiffuse":
+            _, local = _split_shared(params, cfg)
+            params = _merge(agg, local)
+            vol = mbytes * shared_fraction(params, cfg)
+        else:
+            params = agg
+            vol = mbytes
+        if method == "scaffold":
+            mean_dc = aggregate_fedavg(c_deltas, [1] * len(c_deltas))
+            frac = len(sel) / len(clients)
+            c_global = jax.tree.map(lambda c, d: c + frac * d, c_global,
+                                    mean_dc)
+            vol = mbytes * 2  # model + control variate
+        comm_gb = comm.flat_fl_round(vol, len(sel)) / 1e9
+        rec = {"round": r, "loss": float(np.mean(losses)),
+               "comm_gb": comm_gb}
+        if eval_fn and eval_every and r % eval_every == 0:
+            rec["eval"] = eval_fn(params, cfg, r)
+        history.append(rec)
+    return FlatFLResult(history=history, params=params)
+
+
+def run_centralized(cfg: ModelConfig, images: np.ndarray, *, steps: int,
+                    batch_size: int, lr: float = 2e-4, rng_seed: int = 0,
+                    use_ema: bool = True):
+    """Centralized baseline (paper: 500K steps + EMA; scaled down here)."""
+    from repro.optim import ema_init, ema_update
+    rng = jax.random.PRNGKey(rng_seed)
+    rng, sub = jax.random.split(rng)
+    params = model.init(sub, cfg)
+    opt_state = adam_init(params)
+    ema = ema_init(params) if use_ema else None
+    np_rng = np.random.default_rng(rng_seed)
+
+    @jax.jit
+    def step(params, opt_state, batch, rng):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, batch, rng))(params)
+        params, opt_state = adam_update(grads, opt_state, params, lr=lr,
+                                        grad_clip=1.0)
+        return params, opt_state, loss
+
+    losses = []
+    for _ in range(steps):
+        sel = np_rng.integers(0, len(images), size=batch_size)
+        batch = {"images": jnp.asarray(images[sel])}
+        rng, sub = jax.random.split(rng)
+        params, opt_state, loss = step(params, opt_state, batch, sub)
+        losses.append(float(loss))
+        if use_ema:
+            ema = ema_update(ema, params, 0.999)
+    final = jax.tree.map(lambda e, p: e.astype(p.dtype), ema, params) \
+        if use_ema else params
+    return final, losses

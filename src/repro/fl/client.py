@@ -1,0 +1,131 @@
+"""Client-side local training (paper Alg. 2) + baseline variants.
+
+``make_local_step`` builds one jitted SGD/Adam step whose loss is
+composed from the DM loss (Eq. 6 via model.loss_fn) plus, depending on
+the method:
+  - FedPhD sparse rounds: + Omega(G, k) group-lasso (Eq. 16),
+  - FedProx:              + mu/2 ||theta - theta_global||^2,
+  - MOON:                 + contrastive term on model output features,
+  - SCAFFOLD:             gradient correction g - c_i + c.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core.pruning import depth_lambdas, omega
+from repro.data.pipeline import ClientData
+from repro.models import model
+from repro.optim import adam_init, adam_update
+
+
+def tree_sq_dist(a, b):
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32)
+                                  - y.astype(jnp.float32)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def model_features(params, cfg: ModelConfig, batch, rng):
+    """Representation for MOON's contrastive term.
+
+    For the diffusion U-Net we use the pooled noise prediction at a fixed
+    mid-schedule timestep — a function-space feature (MOON's penultimate-
+    layer choice has no direct analogue for eps-predictors; DESIGN.md §8).
+    """
+    if cfg.arch_type == "unet":
+        from repro.diffusion import linear_schedule, q_sample
+        from repro.models.unet import apply_unet
+        sched = linear_schedule(cfg.diffusion_steps)
+        B = batch["images"].shape[0]
+        t = jnp.full((B,), cfg.diffusion_steps // 2, jnp.int32)
+        eps = jax.random.normal(rng, batch["images"].shape)
+        x_t = q_sample(sched, batch["images"], t, eps)
+        pred = apply_unet(params, cfg, x_t, t)
+        return pred.reshape(B, -1)
+    from repro.models.transformer import forward
+    hidden, _ = forward(params, cfg, batch)
+    return jnp.mean(hidden, axis=1)
+
+
+def _cosine(a, b):
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + 1e-8
+    return num / den
+
+
+def make_local_step(cfg: ModelConfig, fl: FLConfig, *, method: str = "fedphd",
+                    sparse: bool = False, groups=None, lr: float = 2e-4):
+    """Returns jitted step(params, opt_state, batch, rng, ctx) -> (...)
+
+    ctx: dict with optional "global_params", "prev_params", "c_local",
+    "c_global" (present per method; static structure per jit).
+    """
+    lambdas = depth_lambdas(groups, fl.lambda0) if (sparse and groups) else None
+
+    def loss_fn(params, batch, rng, ctx):
+        loss = model.loss_fn(params, cfg, batch, rng)
+        if sparse and groups:
+            loss = loss + omega(params, groups, lambdas)
+        if method == "fedprox":
+            loss = loss + 0.5 * fl.fedprox_mu * tree_sq_dist(
+                params, ctx["global_params"])
+        if method == "moon":
+            rng_f = jax.random.fold_in(rng, 1)
+            z = model_features(params, cfg, batch, rng_f)
+            z_g = model_features(ctx["global_params"], cfg, batch, rng_f)
+            z_p = model_features(ctx["prev_params"], cfg, batch, rng_f)
+            sim_g = _cosine(z, z_g) / fl.moon_tau
+            sim_p = _cosine(z, z_p) / fl.moon_tau
+            con = -jnp.mean(sim_g - jnp.logaddexp(sim_g, sim_p))
+            loss = loss + fl.moon_mu * con
+        return loss
+
+    @jax.jit
+    def step(params, opt_state, batch, rng, ctx):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng, ctx)
+        if method == "scaffold":
+            grads = jax.tree.map(lambda g, ci, c: g - ci + c, grads,
+                                 ctx["c_local"], ctx["c_global"])
+        params, opt_state = adam_update(grads, opt_state, params, lr=lr,
+                                        grad_clip=1.0)
+        return params, opt_state, loss
+
+    return step
+
+
+@dataclasses.dataclass
+class Client:
+    """One federated client: local data + label distribution q_n."""
+    cid: int
+    data: ClientData
+    num_classes: int
+
+    def __post_init__(self):
+        from repro.core.sh_score import label_distribution
+        self.q_n = label_distribution(self.data.labels, self.num_classes)
+
+    @property
+    def n_samples(self) -> int:
+        return len(self.data)
+
+
+def run_local(step_fn, params, client: Client, *, epochs: int, rng,
+              ctx: Optional[Dict[str, Any]] = None, opt_state=None):
+    """Run E local epochs (Alg. 2).  Returns (params, opt_state, mean loss)."""
+    if opt_state is None:
+        opt_state = adam_init(params)
+    ctx = ctx or {}
+    losses = []
+    for _ in range(epochs):
+        for batch in client.data.epoch():
+            rng, sub = jax.random.split(rng)
+            jb = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt_state, loss = step_fn(params, opt_state, jb, sub, ctx)
+            losses.append(float(loss))
+    return params, opt_state, float(np.mean(losses)) if losses else 0.0

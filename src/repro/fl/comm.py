@@ -1,0 +1,37 @@
+"""Communication-cost model (paper §V-C, following ShapeFL [20]).
+
+C_ne = 0.002 * d_e * V   (client <-> edge)
+C_ce = 0.02  * d_c * V   (edge   <-> cloud),  d_c = 10 * d_e.
+
+V is transmitted volume.  The paper reports "standardized communication
+volume" per central-aggregation period; CommModel accumulates raw bytes
+and exposes the same standardized cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class CommModel:
+    d_e: float = 1.0
+    d_c: float = 10.0
+    k_edge: float = 0.002
+    k_cloud: float = 0.02
+
+    def client_edge(self, volume_bytes: float) -> float:
+        return self.k_edge * self.d_e * volume_bytes
+
+    def edge_cloud(self, volume_bytes: float) -> float:
+        return self.k_cloud * self.d_c * volume_bytes
+
+    def flat_fl_round(self, volume_bytes: float, num_clients: int) -> float:
+        """FedAvg-style round: C clients upload + download to the cloud."""
+        return 2 * num_clients * self.edge_cloud(volume_bytes)
+
+    def hfl_round(self, volume_bytes: float, num_clients: int,
+                  num_edges: int, cloud_round: bool) -> float:
+        c = 2 * num_clients * self.client_edge(volume_bytes)
+        if cloud_round:
+            c += 2 * num_edges * self.edge_cloud(volume_bytes)
+        return c

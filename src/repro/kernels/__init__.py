@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+- block_masked_matmul: structured-pruning sparse-phase matmul
+- flash_attention:     streaming-softmax attention, causal + window
+- rglru_scan:          blocked linear recurrence (RG-LRU / SSM)
+- group_l2_norms:      pruning-criterion group reductions
+"""

@@ -1,0 +1,34 @@
+"""Jitted wrapper: masked dense layer for the sparse-training phase."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_masked_matmul.block_masked_matmul import (
+    block_masked_matmul)
+from repro.kernels.block_masked_matmul.ref import block_masked_matmul_ref
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def masked_matmul(x, w, col_mask, row_mask, *, bm: int = 128, bk: int = 128,
+                  bn: int = 128, interpret: bool = True):
+    """2-D or 3-D x against a channel-masked weight.
+
+    Falls back to the jnp reference when shapes are not tile-aligned
+    (smoke-scale models); the kernel path is the TPU target.
+    """
+    orig_shape = x.shape
+    if x.ndim == 3:
+        x = x.reshape(-1, x.shape[-1])
+    M, K = x.shape
+    N = w.shape[1]
+    if M % bm or K % bk or N % bn:
+        out = block_masked_matmul_ref(x, w, col_mask, row_mask)
+    else:
+        out = block_masked_matmul(x, w, col_mask, row_mask, bm=bm, bk=bk,
+                                  bn=bn, interpret=interpret)
+    if len(orig_shape) == 3:
+        out = out.reshape(orig_shape[0], orig_shape[1], N)
+    return out

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the block-masked matmul."""
+import jax.numpy as jnp
+
+
+def block_masked_matmul_ref(x, w, col_mask, row_mask):
+    wm = (w * col_mask[None, :].astype(w.dtype)
+          * row_mask[:, None].astype(w.dtype))
+    return jnp.dot(x, wm, preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,32 @@
+"""Per-group L2 norms over channel-chunked weights — the pruning
+criterion (Eq. 17/18) and the Omega regularizer's inner reduction.
+
+A (K, G*C) weight is reduced to (G,) sums-of-squares: grid over groups,
+each step loads a (K, C) slab into VMEM and reduces it on the VPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[0] = jnp.sum(w * w)
+
+
+def group_l2_norms(w, num_groups: int, *, interpret: bool = False):
+    """w: (K, G*C) -> (G,) per-group sum of squares along the column
+    chunks (chunk = columns // num_groups)."""
+    K, N = w.shape
+    assert N % num_groups == 0
+    chunk = N // num_groups
+    return pl.pallas_call(
+        _kernel,
+        grid=(num_groups,),
+        in_specs=[pl.BlockSpec((K, chunk), lambda g: (0, g))],
+        out_specs=pl.BlockSpec((1,), lambda g: (g,)),
+        out_shape=jax.ShapeDtypeStruct((num_groups,), jnp.float32),
+        interpret=interpret,
+    )(w)

@@ -1,0 +1,14 @@
+"""Jitted wrapper for the group-norm reduction kernel."""
+from functools import partial
+
+import jax
+
+from repro.kernels.group_l2_norms.group_l2_norms import group_l2_norms
+from repro.kernels.group_l2_norms.ref import group_l2_norms_ref
+
+
+@partial(jax.jit, static_argnames=("num_groups", "interpret"))
+def group_sq_norms_kernel(w, num_groups: int, *, interpret: bool = True):
+    if w.shape[1] % num_groups:
+        return group_l2_norms_ref(w, num_groups)
+    return group_l2_norms(w, num_groups, interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for per-group L2 norms."""
+import jax.numpy as jnp
+
+
+def group_l2_norms_ref(w, num_groups: int):
+    K, N = w.shape
+    chunk = N // num_groups
+    wr = w.astype(jnp.float32).reshape(K, num_groups, chunk)
+    return jnp.sum(jnp.square(wr), axis=(0, 2))

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: associative-scan linear recurrence."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t * h_{t-1} + b_t over axis 1; h_{-1} = 0."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), b.astype(jnp.float32)), axis=1)
+    return h.astype(a.dtype)

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax
+device state.  The dry-run entrypoint sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE any jax
+import; smoke tests and benchmarks see the real single CPU device.
+
+TPU-topology mapping (DESIGN.md §3.3): the "pod" axis is the DCN tier
+(FedPhD's cloud aggregation), "data" x "model" the ICI tiers within a
+16x16 v5e pod (edge aggregation / tensor sharding).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Mesh over whatever devices exist (CPU smoke: 1 device)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

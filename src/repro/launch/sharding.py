@@ -1,0 +1,276 @@
+"""Sharding rules: Megatron-style tensor parallelism + ZeRO-1 optimizer.
+
+Layout (DESIGN.md §6, revised after the §Perf FSDP experiment — see
+EXPERIMENTS.md "hypothesis: FSDP contraction sharding"):
+
+  * activations:  batch over ("pod","data") — enforced by explicit
+                  constraints in the model code (act_batch_axes);
+  * weights:      bf16, column-parallel (output dim over "model") for
+                  up-projections, row-parallel (contracting dim over
+                  "model") for down-projections -> the canonical Megatron
+                  all-reduce of (B,S,d) activations, twice per layer;
+  * experts:      expert dim over the widest divisible axis tuple
+                  (("model","data") puts one DeepSeek expert per chip on a
+                  16x16 pod); per-expert hidden dim additionally over
+                  "data" when free (qwen3);
+  * optimizer:    fp32 master + moments, sharded like the weights PLUS
+                  "data"/"pod" on the largest free dim (ZeRO-1: XLA
+                  reduce-scatters grads into the update and all-gathers
+                  fresh bf16 params once per step).
+
+Every rule is divisibility-guarded so the same rules serve the 2B dense
+model, the 671B MoE, and 1-device smoke meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, ShardingRules
+
+
+def _axes_prod(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = 1
+    for a in axes:
+        out *= sizes.get(a, 1)
+    return out
+
+
+def _present(mesh: Mesh, axes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        axes = (axes,)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def _fit(mesh: Mesh, dim: int, axes) -> Any:
+    """Largest prefix of ``axes`` whose product divides ``dim``."""
+    axes = _present(mesh, axes)
+    while axes and (dim % _axes_prod(mesh, axes) != 0
+                    or _axes_prod(mesh, axes) > dim):
+        axes = axes[:-1]
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _first_fit(mesh: Mesh, dim: int, candidates) -> Any:
+    """First candidate axis-tuple that divides ``dim`` exactly."""
+    for cand in candidates:
+        cand = _present(mesh, cand)
+        if cand and dim % _axes_prod(mesh, cand) == 0:
+            return cand if len(cand) > 1 else cand[0]
+    return None
+
+
+def _spec_axes(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules (Megatron TP)
+# ---------------------------------------------------------------------------
+_COL_PARALLEL = {"wq", "wk", "wv", "w_in", "w_gate", "w_r", "w_k", "w_v",
+                 "w_g", "w_x", "w_y", "wq_b", "wkv_b", "decay_b", "w_a",
+                 "w_i"}
+_ROW_PARALLEL = {"wo", "w_out", "w_o"}
+_REPLICATED_2D = {"wq_a", "wkv_a", "decay_a", "router"}
+_MODEL_1D = {"log_lambda", "conv_b", "b_a", "b_i", "w0", "ln_scale", "b_in",
+             "bq", "bk", "bv"}
+
+
+def _param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                rules: ShardingRules) -> P:
+    model = rules.heads
+    d = len(shape)
+    leaf = path.rsplit("/", 1)[-1]
+    stacked = path.startswith(("cycles/", "encoder/"))
+    off = 1 if (stacked and d > 0) else 0   # leading n_cycles axis unsharded
+
+    def spec(*entries):
+        full = [None] * d
+        for i, ax in enumerate(entries):
+            full[off + i] = ax
+        return P(*full)
+
+    def fit(i, axes):
+        return _fit(mesh, shape[off + i], axes)
+
+    if leaf == "embed":
+        return P(_fit(mesh, shape[0], rules.vocab), None)
+    if leaf == "lm_head":
+        return P(None, _fit(mesh, shape[1], rules.vocab))
+
+    # --- MoE experts ----------------------------------------------------------
+    if "/moe/" in path and leaf in ("w_gate", "w_in", "w_out") and d - off == 3:
+        E = shape[off]
+        # ("data","model") ordering: the flat-token sharding used by the
+        # EP shard_map is then a refinement of the batch sharding (no
+        # device-order transpose at the boundary — see EXPERIMENTS §Perf)
+        e_ax = _first_fit(mesh, E, [("data", "model"), ("pod", "model"),
+                                    ("model",), ("data",)])
+        used = set(_spec_axes(e_ax))
+        de_cands = [] if rules.moe_ep \
+            else [a for a in ("data", "pod") if a not in used]
+        if leaf in ("w_gate", "w_in"):
+            de_ax = _fit(mesh, shape[off + 2], tuple(de_cands))
+            return spec(e_ax, None, de_ax)
+        de_ax = _fit(mesh, shape[off + 1], tuple(de_cands))
+        return spec(e_ax, de_ax, None)
+
+    if d - off == 2:
+        if leaf in _REPLICATED_2D:
+            return spec(None, None)
+        if leaf in _COL_PARALLEL:
+            return spec(None, fit(1, model))
+        if leaf in _ROW_PARALLEL:
+            return spec(fit(0, model), None)
+        if leaf == "u":                      # rwkv bonus (H, hd)
+            return spec(fit(0, model), None)
+        if leaf == "conv_w":                 # rglru temporal conv (cw, W)
+            return spec(None, fit(1, model))
+        if leaf == "w":                      # unet dense (small) — replicate
+            return spec(None, None)
+        return spec(None, None)
+
+    if d - off == 3 and leaf in ("lora_a", "lora_b", "mu"):
+        return spec(None, None, None)
+
+    if d - off == 4:                         # unet conv HWIO — replicate
+        return spec(None, None, None, None)
+
+    if d - off == 1:
+        if leaf in _MODEL_1D:
+            return spec(fit(0, model))
+        return spec(None)
+
+    return P(*([None] * d))
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(abstract_params, mesh: Mesh, rules: ShardingRules):
+    """NamedSharding pytree matching an abstract (eval_shape) params tree."""
+    def one(kp, leaf):
+        spec = _param_spec(_path_str(kp), leaf.shape, mesh, rules)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def _zero1_extend(spec: P, shape: Tuple[int, ...], mesh: Mesh,
+                  rules: ShardingRules) -> P:
+    """Add fsdp axes to the largest free dim — optimizer-state sharding."""
+    used = set()
+    for e in spec:
+        used |= set(_spec_axes(e))
+    free_axes = [a for a in rules.fsdp_axes if a in mesh.axis_names
+                 and a not in used]
+    if not free_axes:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if entries[i] is not None:
+            continue
+        ax = _fit(mesh, shape[i], tuple(free_axes))
+        if ax is not None:
+            entries[i] = ax
+            break
+    return P(*entries)
+
+
+def opt_state_shardings(abstract_opt_state, abstract_params, mesh: Mesh,
+                        rules: ShardingRules):
+    """ZeRO-1: master/mu/nu shard like params + fsdp axes; step replicated."""
+    def one(kp, leaf):
+        spec = _param_spec(_path_str(kp), leaf.shape, mesh, rules)
+        return NamedSharding(mesh, _zero1_extend(spec, leaf.shape, mesh,
+                                                 rules))
+    state_sh = jax.tree_util.tree_map_with_path(one, abstract_params)
+    step_sh = NamedSharding(mesh, P())
+    master_sh = state_sh if abstract_opt_state.master is not None else None
+    return type(abstract_opt_state)(step=step_sh, mu=state_sh, nu=state_sh,
+                                    master=master_sh)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+def batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh,
+                    rules: ShardingRules):
+    out = {}
+    for k, s in specs.items():
+        bdim = s.shape[0]
+        ax = _fit(mesh, bdim, rules.batch)
+        spec = [ax] + [None] * (len(s.shape) - 1)
+        if ax is None and len(s.shape) >= 2:
+            # can't shard batch (e.g. B=1): shard sequence instead
+            spec[1] = _fit(mesh, s.shape[1], rules.batch)
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def cache_shardings(abstract_cache, mesh: Mesh, rules: ShardingRules,
+                    batch: int):
+    """Decode-cache shardings: context parallelism.
+
+    KV tensors (B, S, ...) shard batch over ("pod","data") and SEQUENCE
+    over "model" (plus the data axes when B=1 — long_500k).  Sequence
+    sharding sidesteps every head-divisibility problem: decode logits are
+    local per KV shard and the softmax/PV reductions cross shards as
+    tiny (B, H, 1, 1)-sized collectives.  Recurrent states shard their
+    lane/head dims over "model"; rwkv states shard heads.
+    """
+    batch_ax = _fit(mesh, batch, rules.batch)
+    seq_axes = ("model",) if batch_ax is not None \
+        else ("model", "pod", "data")
+
+    def one(kp, leaf):
+        path = _path_str(kp)
+        shape = leaf.shape
+        d = len(shape)
+        spec = [None] * d
+        stacked = path.startswith("cycles/")
+        off = 1 if stacked else 0
+        leaf_name = path.rsplit("/", 1)[-1]
+        if leaf_name == "pos" or d - off == 0:
+            return NamedSharding(mesh, P())
+        if d - off >= 1 and shape[off] == batch and batch_ax is not None:
+            spec[off] = batch_ax
+        if leaf_name in ("k", "v", "c", "kr", "kv_pos"):
+            spec[off + 1] = _fit(mesh, shape[off + 1], seq_axes)
+        elif leaf_name == "S" and d - off == 4:       # rwkv (B,H,K,V)
+            spec[off + 1] = _fit(mesh, shape[off + 1], rules.heads)
+        elif leaf_name in ("h", "conv"):              # rglru states
+            spec[d - 1] = _fit(mesh, shape[-1], rules.heads)
+        elif leaf_name in ("shift_t", "shift_c"):     # rwkv shifts (B, d)
+            spec[d - 1] = _fit(mesh, shape[-1], rules.heads)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_cache)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,72 @@
+"""Step builders: train_step / prefill_step / serve_step.
+
+Each builder closes over a static ModelConfig + ApplyOptions and returns
+a pure function suitable for ``jax.jit(..., in_shardings=...,
+out_shardings=...)`` — used identically by the smoke tests (1 CPU
+device), the FL drivers, and the 512-device dry-run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model
+from repro.models.common import ApplyOptions, DEFAULT_OPTS
+from repro.optim import adam_init, adam_update
+
+
+def build_train_step(cfg: ModelConfig, opts: ApplyOptions = DEFAULT_OPTS, *,
+                     lr: float = 3e-4, state_dtype: str = "float32"):
+    """train_step(params, opt_state, batch, seed) -> (params, opt_state, loss).
+
+    ``state_dtype="bfloat16"`` stores Adam moments in bf16 — used for the
+    >=100B models where fp32 moments exceed per-chip HBM (EXPERIMENTS.md).
+    """
+    def train_step(params, opt_state, batch, seed):
+        rng = jax.random.PRNGKey(seed)
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, cfg, batch, rng, opts))(params)
+        new_params, new_opt = adam_update(grads, opt_state, params, lr=lr)
+        if state_dtype == "bfloat16":
+            new_opt = new_opt._replace(
+                mu=jax.tree.map(lambda x: x.astype(jnp.bfloat16), new_opt.mu),
+                nu=jax.tree.map(lambda x: x.astype(jnp.bfloat16), new_opt.nu))
+        return new_params, new_opt, loss
+    return train_step
+
+
+def build_opt_init(cfg: ModelConfig, state_dtype: str = "float32"):
+    use_master = cfg.param_dtype == "bfloat16"
+
+    def opt_init(params):
+        st = adam_init(params, use_master=use_master)
+        if state_dtype == "bfloat16":
+            st = st._replace(
+                mu=jax.tree.map(lambda x: x.astype(jnp.bfloat16), st.mu),
+                nu=jax.tree.map(lambda x: x.astype(jnp.bfloat16), st.nu))
+        return st
+    return opt_init
+
+
+def build_prefill_step(cfg: ModelConfig, opts: ApplyOptions = DEFAULT_OPTS):
+    """prefill_step(params, batch) -> last-token logits (B, V)."""
+    def prefill_step(params, batch):
+        return model.prefill(params, cfg, batch, opts)
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig, opts: ApplyOptions = DEFAULT_OPTS):
+    """serve_step(params, cache, tokens) -> (next_tokens, logits?, cache).
+
+    ONE new token against a KV cache of seq_len (decode_32k / long_500k).
+    Greedy sampling keeps the output small.
+    """
+    def serve_step(params, cache, tokens):
+        logits, new_cache = model.decode(params, cache, cfg, tokens, opts)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_cache
+    return serve_step

@@ -1,0 +1,103 @@
+"""Training launcher: run real train steps for any assigned architecture.
+
+On CPU this runs the reduced (smoke) variant by default; on a TPU fleet
+the same code path takes --full and the production mesh.  The FedPhD
+federated drivers live in examples/fedphd_train.py; this launcher is the
+dense/MoE pretraining path the dry-run lowers.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --steps 10
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (get_config, list_archs, sharding_rules,
+                           smoke_variant)
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.sharding import (batch_shardings, opt_state_shardings,
+                                   param_shardings, replicated)
+from repro.launch.steps import build_opt_init, build_train_step
+from repro.models import model
+from repro.models.common import ApplyOptions
+from repro import checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config on the production mesh (TPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt", default=None, help="save final params here")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = get_config(args.arch)
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        opts = ApplyOptions(
+            attn_chunk=1024, remat=True,
+            act_batch_axes=("pod", "data") if args.multi_pod else ("data",),
+            act_model_axes=("model",),
+            mesh_axis_sizes=tuple(zip(mesh.axis_names, mesh.devices.shape)))
+    else:
+        cfg = smoke_variant(args.arch)
+        mesh = make_host_mesh()
+        opts = ApplyOptions(attn_chunk=0, remat=False)
+
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    rules = sharding_rules(cfg)
+    rng = jax.random.PRNGKey(args.seed)
+
+    print(f"arch={cfg.name}  mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    params = model.init(rng, cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n/1e6:.2f}M")
+
+    step_fn = build_train_step(cfg, opts, lr=args.lr)
+    opt_init = build_opt_init(cfg)
+    with mesh:
+        p_sh = param_shardings(jax.eval_shape(lambda: params), mesh, rules)
+        params = jax.device_put(params, p_sh)
+        opt = opt_init(params)
+        o_sh = opt_state_shardings(jax.eval_shape(lambda: opt), params, mesh,
+                                   rules)
+        opt = jax.device_put(opt, o_sh)
+        specs = model.input_specs(cfg, shape)
+        b_sh = batch_shardings(specs, mesh, rules)
+        jitted = jax.jit(step_fn, in_shardings=(p_sh, o_sh, b_sh,
+                                                replicated(mesh)),
+                         out_shardings=(p_sh, o_sh, replicated(mesh)))
+
+        batch = model.make_inputs(rng, cfg, shape)
+        losses = []
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            params, opt, loss = jitted(params, opt, batch, i)
+            losses.append(float(loss))
+            if i % max(args.steps // 10, 1) == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss {losses[-1]:.4f}")
+        jax.block_until_ready(params)
+        dt = time.perf_counter() - t0
+    tok = args.batch * args.seq * args.steps
+    print(f"{args.steps} steps in {dt:.1f}s ({tok/dt:.0f} tok/s); "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, jax.device_get(params),
+                        {"arch": cfg.name, "steps": args.steps,
+                         "final_loss": losses[-1]})
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

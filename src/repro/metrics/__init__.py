@@ -1,0 +1,7 @@
+from repro.metrics.fid import fid_proxy, inception_score_proxy, features
+from repro.metrics.flops import (count_params, count_params_analytic,
+                                 active_params, model_flops, unet_macs)
+
+__all__ = ["fid_proxy", "inception_score_proxy", "features", "count_params",
+           "count_params_analytic", "active_params", "model_flops",
+           "unet_macs"]

@@ -1,0 +1,99 @@
+"""Proxy-FID and proxy-IS (hardware/data-gate substitute for Inception-v3).
+
+True FID embeds images with a pretrained Inception network — unavailable
+offline.  We use a FIXED random-feature CNN (weights from PRNGKey(42),
+never trained): random convolutional features preserve distributional
+geometry (random-projection/ELM literature), so the Fréchet distance in
+this feature space ranks generative models consistently for *relative*
+comparison — which is all the paper's tables do.  Absolute values are NOT
+comparable to Inception-FID (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_FEAT_DIM = 64
+_NUM_CLASSES_HEAD = 10
+
+
+@lru_cache(maxsize=4)
+def _feature_params(channels: int = 3):
+    rng = jax.random.PRNGKey(42)
+    ks = jax.random.split(rng, 4)
+    def conv_w(key, cin, cout):
+        return jax.random.normal(key, (3, 3, cin, cout)) / (9 * cin) ** 0.5
+    return {
+        "c1": conv_w(ks[0], channels, 32),
+        "c2": conv_w(ks[1], 32, 64),
+        "c3": conv_w(ks[2], 64, _FEAT_DIM),
+        "head": jax.random.normal(ks[3], (_FEAT_DIM, _NUM_CLASSES_HEAD))
+                 / _FEAT_DIM ** 0.5,
+    }
+
+
+def _features(x):
+    """x: (B, H, W, C) in [-1, 1] -> (B, FEAT_DIM).
+
+    NOT jitted: _feature_params is lru-cached and jitting would cache
+    tracers on first in-trace use (UnexpectedTracerError).
+    """
+    p = _feature_params(x.shape[-1])
+    def conv(x, w, stride):
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jax.nn.relu(conv(x, p["c1"], 2))
+    h = jax.nn.relu(conv(h, p["c2"], 2))
+    h = jax.nn.relu(conv(h, p["c3"], 2))
+    return jnp.mean(h, axis=(1, 2))
+
+
+def features(x: np.ndarray, batch: int = 256) -> np.ndarray:
+    out = []
+    for i in range(0, len(x), batch):
+        out.append(np.asarray(_features(jnp.asarray(x[i:i + batch]))))
+    return np.concatenate(out)
+
+
+def _sqrtm_psd(a: np.ndarray) -> np.ndarray:
+    """Matrix square root of a symmetric PSD matrix via eigendecomposition."""
+    w, v = np.linalg.eigh((a + a.T) / 2)
+    w = np.maximum(w, 0.0)
+    return (v * np.sqrt(w)) @ v.T
+
+
+def frechet_distance(mu1, sig1, mu2, sig2) -> float:
+    diff = mu1 - mu2
+    s1h = _sqrtm_psd(sig1)
+    covmean = _sqrtm_psd(s1h @ sig2 @ s1h)
+    return float(diff @ diff + np.trace(sig1) + np.trace(sig2)
+                 - 2.0 * np.trace(covmean))
+
+
+def fid_proxy(real: np.ndarray, fake: np.ndarray) -> float:
+    """Proxy-FID between two image sets (both (N,H,W,C) in [-1,1])."""
+    fr = features(real)
+    ff = features(fake)
+    mu1, mu2 = fr.mean(0), ff.mean(0)
+    s1 = np.cov(fr, rowvar=False) + 1e-6 * np.eye(fr.shape[1])
+    s2 = np.cov(ff, rowvar=False) + 1e-6 * np.eye(ff.shape[1])
+    return frechet_distance(mu1, s1, mu2, s2)
+
+
+def inception_score_proxy(fake: np.ndarray, splits: int = 4) -> float:
+    """Proxy-IS: exp(E_x KL(p(y|x) || p(y))) with the fixed random head."""
+    p = _feature_params(fake.shape[-1])
+    f = features(fake)
+    logits = f @ np.asarray(p["head"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    scores = []
+    for part in np.array_split(probs, splits):
+        py = part.mean(0, keepdims=True)
+        kl = (part * (np.log(part + 1e-10) - np.log(py + 1e-10))).sum(-1)
+        scores.append(np.exp(kl.mean()))
+    return float(np.mean(scores))

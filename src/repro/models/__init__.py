@@ -1,0 +1,4 @@
+from repro.models.common import ApplyOptions, DEFAULT_OPTS
+from repro.models import model
+
+__all__ = ["ApplyOptions", "DEFAULT_OPTS", "model"]

@@ -1,0 +1,139 @@
+"""Grouped-query attention: dense, chunked (memory-bounded), windowed, cached.
+
+Shapes (batch-major, seq-second):
+  q: (B, Sq, Hq, hd)   k/v: (B, Skv, Hkv, hd)   with Hq = G * Hkv.
+
+The chunked path scans over query blocks so the (Sq x Skv) logit tensor is
+never materialized — required for prefill_32k and the memory baseline the
+Pallas flash kernel is later benchmarked against.  Sliding-window attention
+slices the KV range per query block, making windowed prefill compute
+sub-quadratic (not just masked).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import softcap as _softcap
+
+NEG_INF = -1e30
+
+
+def _mask_bias(q_pos, kv_pos, *, causal: bool, window: int):
+    """Additive bias from positions.
+
+    Positions may be 1-D (shared across batch — train/prefill) giving a
+    batch-free (Sq, Skv) bias, or 2-D (B, S) (decode ring buffers) giving
+    (B, Sq, Skv).  Keeping the bias batch-free avoids materializing a
+    replicated (B, S, S) tensor (16 GiB/device at B=256, S=4k).
+    """
+    d = q_pos[..., :, None] - kv_pos[..., None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window > 0:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend_block(q, k, v, q_pos, kv_pos, *, causal, window, attn_softcap, scale):
+    """Dense attention for one q block. q: (B,Sq,Hkv,G,hd), k/v: (B,Skv,Hkv,hd).
+
+    Logits stay in the activation dtype (softmax reductions upcast to
+    fp32) — keeping the cotangent chain bf16; an fp32 logits tensor would
+    poison every upstream gradient to fp32 (2x HBM + 2x all-reduce).
+    """
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k) * jnp.asarray(scale, q.dtype)
+    if attn_softcap > 0.0:
+        logits = _softcap(logits, attn_softcap)
+    bias = _mask_bias(q_pos, kv_pos, causal=causal, window=window)
+    bias = bias.astype(logits.dtype)
+    if bias.ndim == 2:
+        logits = logits + bias[None, None, None, :, :]
+    else:
+        logits = logits + bias[:, None, None, :, :]
+    lmax = jax.lax.stop_gradient(
+        jnp.max(logits.astype(jnp.float32), axis=-1, keepdims=True))
+    unnorm = jnp.exp(logits - lmax.astype(logits.dtype))
+    denom = jnp.sum(unnorm.astype(jnp.float32), axis=-1,
+                    keepdims=True).astype(logits.dtype)
+    probs = unnorm / denom
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+
+def attend(q, k, v, *, q_positions, kv_positions, causal: bool = True,
+           window: int = 0, attn_softcap: float = 0.0, chunk: int = 0,
+           remat_chunks: bool = True):
+    """Generic GQA attention.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd)
+    q_positions: (Sq,) shared across batch, or (B, Sq) int32
+    kv_positions: (Skv,) or (B, Skv) int32
+    chunk: q-block size for the scanned path (0 or >= Sq -> dense).
+    """
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    hd_v = v.shape[-1]                    # may differ from hd (MLA)
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+
+    if chunk <= 0 or Sq <= chunk or Sq % chunk != 0:
+        # dense path (also the fallback for non-chunk-aligned lengths,
+        # e.g. whisper's 1500 encoder frames)
+        out = _attend_block(qg, k, v, q_positions, kv_positions,
+                            causal=causal, window=window,
+                            attn_softcap=attn_softcap, scale=scale)
+        return out.reshape(B, Sq, Hq, hd_v)
+
+    assert q_positions.ndim == 1 and kv_positions.ndim == 1, \
+        "chunked attention expects shared (1-D) positions"
+    n_blocks = Sq // chunk
+    qb = qg.reshape(B, n_blocks, chunk, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    pb = q_positions.reshape(n_blocks, chunk)
+
+    Skv = k.shape[1]
+    # For windowed causal attention with aligned positions we can slice the
+    # KV range touched by each query block: [blk_end - window - chunk, blk_end).
+    kv_span = 0
+    if window > 0 and causal:
+        kv_span = min(Skv, ((window + chunk + chunk - 1) // chunk) * chunk)
+
+    def body(_, xs):
+        qi, pi, idx = xs
+        if kv_span and kv_span < Skv:
+            start = jnp.clip((idx + 1) * chunk - kv_span, 0, Skv - kv_span)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_positions, start, kv_span,
+                                              axis=0)
+        else:
+            ks, vs, kp = k, v, kv_positions
+        out = _attend_block(qi, ks, vs, pi, kp, causal=causal, window=window,
+                            attn_softcap=attn_softcap, scale=scale)
+        return None, out
+
+    # remat each q-block: backward recomputes block logits instead of
+    # stashing per-block softmax residuals for every block at once.
+    body_fn = jax.checkpoint(body) if remat_chunks else body
+    _, ob = jax.lax.scan(body_fn, None,
+                         (qb, pb, jnp.arange(n_blocks, dtype=jnp.int32)))
+    out = ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, Hq, hd_v)
+    return out
+
+
+def decode_attend(q, k_cache, v_cache, pos, *, window: int = 0,
+                  attn_softcap: float = 0.0):
+    """Single-token decode attention against a (B, S, Hkv, hd) cache.
+
+    pos: (B,) int32 — index of the new token; cache entries > pos are invalid.
+    """
+    B, S, Hkv, hd = k_cache.shape
+    q_positions = pos[:, None]                                  # (B, 1)
+    kv_positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return attend(q, k_cache, v_cache, q_positions=q_positions,
+                  kv_positions=kv_positions, causal=True, window=window,
+                  attn_softcap=attn_softcap, chunk=0)

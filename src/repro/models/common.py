@@ -1,0 +1,242 @@
+"""Shared model building blocks: norms, RoPE, initializers, apply options."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ApplyOptions:
+    """Runtime options for model application (not part of the model config)."""
+    attn_chunk: int = 1024          # q-block size for chunked attention; 0 = dense
+    use_flash: bool = False         # use the Pallas flash-attention kernel
+    use_masked_matmul: bool = False # use the Pallas block-masked matmul for pruned nets
+    remat: bool = True              # activation checkpointing over layer blocks
+    deterministic: bool = True      # disable dropout
+    # activation-sharding constraints (mesh axis names; () = unconstrained).
+    # Without these XLA propagates the FSDP param sharding onto activations
+    # (feature-dim sharded, batch replicated) — catastrophic for attention
+    # logits.  Set by the launch layer; smoke tests leave them empty.
+    act_batch_axes: tuple = ()      # (B, ...) dims of activations
+    act_model_axes: tuple = ()      # head/ffn dims where applicable
+    mesh_axis_sizes: tuple = ()     # (("data",16),("model",16)) for checks
+    # expert-parallel MoE (shard_map all-to-all dispatch; §Perf hillclimb)
+    moe_ep: bool = False
+    ep_mesh: object = None          # jax Mesh (trace-time only)
+    ep_axes: tuple = ()             # mesh axes the expert dim shards over
+    ep_token_axes: tuple = ()       # mesh axes flat tokens shard over
+    wkv_chunk: int = 0              # chunk-parallel WKV (0 = exact scan)
+
+
+DEFAULT_OPTS = ApplyOptions()
+
+
+def constrain_activation(x, opts: "ApplyOptions", *, batch_dim: int = 0):
+    """Constrain an activation's batch dim to the data axes (no-op when
+    opts.act_batch_axes is empty or outside an active mesh)."""
+    if not opts.act_batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = [None] * x.ndim
+    spec[batch_dim] = tuple(opts.act_batch_axes) \
+        if len(opts.act_batch_axes) > 1 else opts.act_batch_axes[0]
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError):
+        return x
+
+
+def constrain_heads(x, opts: "ApplyOptions", *, seq_fallback: bool = False):
+    """Constrain a (B, S, H, hd) tensor: batch over data axes, heads over
+    the model axes when H divides — and NEVER shard across head_dim.
+
+    Without this, a flat (B, S, H*hd) column-parallel projection reshaped
+    to heads leaves head_dim partially sharded, and QK^T turns into
+    partial-sum all-reduces of full logit tensors.
+
+    seq_fallback: when heads do NOT divide the model axes (gemma2: 8
+    heads on 16-way TP), shard the SEQUENCE dim over "model" instead —
+    sequence-parallel attention: each model rank attends its own query
+    slice against the (batch-sharded, model-replicated) KV, so attention
+    compute still splits 16 ways and no logits collectives appear
+    (§Perf hillclimb #2).
+    """
+    if not opts.act_batch_axes or x.ndim != 4:
+        return x
+    from jax.sharding import PartitionSpec as P
+    sizes = dict(opts.mesh_axis_sizes)
+    batch = tuple(opts.act_batch_axes)
+    model = tuple(a for a in opts.act_model_axes if a in sizes)
+    mprod = 1
+    for a in model:
+        mprod *= sizes[a]
+    head_entry = None
+    seq_entry = None
+    if model and x.shape[2] % mprod == 0:
+        head_entry = model if len(model) > 1 else model[0]
+    elif seq_fallback and model and x.shape[1] % mprod == 0:
+        seq_entry = model if len(model) > 1 else model[0]
+    spec = P(batch if len(batch) > 1 else batch[0], seq_entry, head_entry,
+             None)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32, scale: float = 1.0):
+    std = scale / (in_dim ** 0.5)
+    return (jax.random.normal(key, (in_dim, out_dim)) * std).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, in_dim: int, out_dim: int, dtype=jnp.float32,
+                       scale: float = 1.0):
+    std = scale / (in_dim ** 0.5)
+    return (jax.random.normal(key, (n, in_dim, out_dim)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+from functools import partial as _partial
+
+
+def _sumsq_f32(a, b):
+    """sum(a*b) over the last axis with fp32 accumulation and NO
+    convert op (a dot with preferred_element_type) — a convert(x) here
+    gets hoisted by XLA onto whole remat-saved stacks (observed: a
+    72 GiB fp32 copy of the 48-layer saved carries)."""
+    return jnp.einsum("...d,...d->...", a, b,
+                      preferred_element_type=jnp.float32)[..., None]
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _rms_core(x, scale, eps):
+    var = _sumsq_f32(x, x) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + scale).astype(x.dtype)
+
+
+def _rms_fwd(x, scale, eps):
+    return _rms_core(x, scale, eps), (x, scale)
+
+
+def _rms_bwd(eps, res, dy):
+    # custom backward keeps cotangents in the activation dtype (reductions
+    # in fp32, fused) — without this the fp32 d(x^2) path poisons every
+    # downstream cotangent to fp32, doubling all-reduce and remat bytes.
+    x, scale = res
+    D = x.shape[-1]
+    var = _sumsq_f32(x, x) / D
+    inv = jax.lax.rsqrt(var + eps)                            # f32 (...,1)
+    s1 = (1.0 + scale).astype(x.dtype)
+    dys = dy * s1
+    t = _sumsq_f32(dys, x)                                    # f32, fused
+    coef = (inv ** 3 * t / D).astype(x.dtype)
+    dx = dys * inv.astype(x.dtype) - x * coef
+    dscale = jnp.einsum("...d,...->d", dy * x, inv[..., 0],
+                        preferred_element_type=jnp.float32)
+    return dx, dscale.astype(scale.dtype)
+
+
+_rms_core.defvjp(_rms_fwd, _rms_bwd)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    return _rms_core(x, scale, eps)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def group_norm(x, scale, bias, num_groups: int = 32, eps: float = 1e-5):
+    """GroupNorm over NHWC activations (U-Net)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    n, h, w, c = x.shape
+    g = min(num_groups, c)
+    while c % g != 0:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    y = xg.reshape(n, h, w, c) * scale + bias
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq).
+
+    Trig tables are computed in fp32 (they are position-sized, tiny) but
+    the rotation runs in the activation dtype — upcasting x here creates
+    program-level fp32 copies of every q/k tensor (forward AND backward),
+    ~10 TB/step of phantom HBM traffic at internlm2-20b scale.
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :].astype(x.dtype)   # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def sinusoidal_embedding(t, dim: int, max_period: float = 10000.0):
+    """Timestep embedding for diffusion models. t: (B,) -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]

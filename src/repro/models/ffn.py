@@ -1,0 +1,37 @@
+"""Dense feed-forward (optionally gated) blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation_fn, dense_init
+
+
+def init_ffn(key, d_model: int, d_ff: int, *, glu: bool, bias: bool,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_out": dense_init(ks[1], d_ff, d_model, dtype),
+    }
+    if glu:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    if bias:
+        p["b_in"] = jnp.zeros((d_ff,), dtype)
+        p["b_out"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def apply_ffn(p, x, *, activation: str, glu: bool):
+    act = activation_fn(activation)
+    h = x @ p["w_in"]
+    if "b_in" in p:
+        h = h + p["b_in"]
+    if glu:
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    out = h @ p["w_out"]
+    if "b_out" in p:
+        out = out + p["b_out"]
+    return out

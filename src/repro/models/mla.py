@@ -1,0 +1,114 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA).
+
+Train/prefill reconstructs per-head K/V from the shared KV latent
+(naive form); decode uses the matrix-absorbed form so the KV cache is
+only the latent c_kv (kv_lora_rank) + the shared RoPE key — the whole
+point of MLA (cache bytes independent of num_heads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.common import apply_rope, dense_init, rms_norm
+from repro.models.attention import attend
+
+
+def init_mla(key, d_model: int, num_heads: int, mla: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    H = num_heads
+    qk = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    p = {
+        "wq_a": dense_init(ks[0], d_model, mla.q_lora_rank, dtype),
+        "q_norm": jnp.zeros((mla.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], mla.q_lora_rank, H * qk, dtype),
+        "wkv_a": dense_init(ks[2], d_model, mla.kv_lora_rank + mla.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.zeros((mla.kv_lora_rank,), dtype),
+        "wkv_b": dense_init(ks[3], mla.kv_lora_rank,
+                            H * (mla.qk_nope_head_dim + mla.v_head_dim), dtype),
+        "wo": dense_init(ks[4], H * mla.v_head_dim, d_model, dtype),
+    }
+    return p
+
+
+def _project_q(p, x, mla: MLAConfig, num_heads: int, positions, rope_theta):
+    B, S, _ = x.shape
+    H = num_heads
+    qk = mla.qk_nope_head_dim + mla.qk_rope_head_dim
+    q = rms_norm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, qk)
+    q_nope = q[..., : mla.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., mla.qk_nope_head_dim:], positions, rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(p, x, mla: MLAConfig, positions, rope_theta):
+    kv_a = x @ p["wkv_a"]
+    c_kv = rms_norm(kv_a[..., : mla.kv_lora_rank], p["kv_norm"])
+    k_rope = kv_a[..., mla.kv_lora_rank:][:, :, None, :]      # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def apply_mla(p, x, mla: MLAConfig, num_heads: int, positions, *,
+              rope_theta: float, chunk: int = 0, window: int = 0):
+    """Full-sequence MLA (train / prefill).  x: (B, S, d)."""
+    B, S, _ = x.shape
+    H = num_heads
+    q_nope, q_rope = _project_q(p, x, mla, H, positions, rope_theta)
+    c_kv, k_rope = _latent_kv(p, x, mla, positions, rope_theta)
+
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, mla.qk_nope_head_dim + mla.v_head_dim)
+    k_nope = kv[..., : mla.qk_nope_head_dim]
+    v = kv[..., mla.qk_nope_head_dim:]
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, mla.qk_rope_head_dim))], axis=-1)
+    out = attend(q, k, v, q_positions=positions, kv_positions=positions,
+                 causal=True, window=window, chunk=chunk)
+    return out.reshape(B, S, H * mla.v_head_dim) @ p["wo"]
+
+
+def mla_decode(p, x, cache_c, cache_kr, pos, mla: MLAConfig, num_heads: int, *,
+               rope_theta: float, window: int = 0):
+    """Matrix-absorbed single-token decode.
+
+    x: (B, 1, d); cache_c: (B, S, L); cache_kr: (B, S, rope); pos: (B,).
+    Returns (out (B,1,d), new_cache_c, new_cache_kr).
+    """
+    B, _, d = x.shape
+    H, L = num_heads, mla.kv_lora_rank
+    positions = pos[:, None]
+    q_nope, q_rope = _project_q(p, x, mla, H, positions, rope_theta)
+
+    c_new, kr_new = _latent_kv(p, x, mla, positions, rope_theta)
+    bidx = jnp.arange(B)
+    cache_c = cache_c.at[bidx, pos].set(c_new[:, 0].astype(cache_c.dtype))
+    cache_kr = cache_kr.at[bidx, pos].set(kr_new[:, 0].astype(cache_kr.dtype))
+
+    wkv_b = p["wkv_b"].reshape(L, H, mla.qk_nope_head_dim + mla.v_head_dim)
+    w_uk = wkv_b[..., : mla.qk_nope_head_dim]                 # (L, H, nope)
+    w_uv = wkv_b[..., mla.qk_nope_head_dim:]                  # (L, H, v)
+
+    # absorb W_uk into the query: q_abs (B,1,H,L)
+    q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)
+    scale = (mla.qk_nope_head_dim + mla.qk_rope_head_dim) ** -0.5
+    logits = (jnp.einsum("bqhl,bsl->bhqs", q_abs, cache_c.astype(q_abs.dtype))
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope, cache_kr.astype(q_rope.dtype)))
+    logits = logits.astype(jnp.float32) * scale
+
+    S = cache_c.shape[1]
+    kv_pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    ok = kv_pos <= pos[:, None]
+    if window > 0:
+        ok &= (pos[:, None] - kv_pos) < window
+    logits = jnp.where(ok[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+
+    lat = jnp.einsum("bhqs,bsl->bqhl", probs, cache_c.astype(probs.dtype))
+    out = jnp.einsum("bqhl,lhv->bqhv", lat, w_uv)
+    out = out.reshape(B, 1, H * mla.v_head_dim) @ p["wo"]
+    return out, cache_c, cache_kr

@@ -1,0 +1,119 @@
+"""Unified model interface + dry-run input specs.
+
+``init / loss_fn / prefill / decode / init_cache`` dispatch on
+``cfg.arch_type`` so launchers, the FL runtime and the dry-run never
+branch on model family themselves.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.diffusion import ddpm_loss, linear_schedule
+from repro.models import transformer as tfm
+from repro.models import unet as unet_lib
+from repro.models.common import ApplyOptions, DEFAULT_OPTS, dtype_of
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init(rng, cfg: ModelConfig) -> Params:
+    if cfg.arch_type == "unet":
+        return unet_lib.init_unet(rng, cfg)
+    return tfm.init_params(rng, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            rng, opts: ApplyOptions = DEFAULT_OPTS) -> jnp.ndarray:
+    if cfg.arch_type == "unet":
+        schedule = linear_schedule(cfg.diffusion_steps)
+        eps_fn = lambda x_t, t: unet_lib.apply_unet(params, cfg, x_t, t)
+        return ddpm_loss(eps_fn, schedule, batch["images"], rng)
+    hidden, aux = tfm.forward(params, cfg, batch, opts)
+    return tfm.chunked_xent(params, cfg, hidden, batch["labels"],
+                            opts=opts) + aux
+
+
+# ---------------------------------------------------------------------------
+# Inference
+# ---------------------------------------------------------------------------
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            opts: ApplyOptions = DEFAULT_OPTS):
+    """Full-sequence forward; returns last-position logits (B, V)."""
+    hidden, _ = tfm.forward(params, cfg, batch, opts)
+    last = hidden[:, -1, :]
+    return tfm.logits_from_hidden(params, cfg, last[:, None, :])[:, 0, :]
+
+
+def init_cache(params: Params, cfg: ModelConfig, batch: int, seq_len: int,
+               *, opts: ApplyOptions = DEFAULT_OPTS):
+    enc_out = None
+    if cfg.arch_type == "encdec":
+        enc_out = jnp.zeros((batch, cfg.encoder_seq_len, cfg.d_model),
+                            dtype_of(cfg.dtype))
+    return tfm.init_cache(params, cfg, batch, seq_len, enc_out=enc_out,
+                          opts=opts)
+
+
+def decode(params: Params, cache, cfg: ModelConfig, tokens,
+           opts: ApplyOptions = DEFAULT_OPTS):
+    return tfm.decode_step(params, cache, cfg, tokens, opts)
+
+
+# ---------------------------------------------------------------------------
+# Input specs for the dry-run (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a given shape.
+
+    The modality frontends (whisper mel+conv, InternViT) are STUBS: their
+    outputs (frame / patch embeddings) are inputs here, per the assignment.
+    """
+    f32 = jnp.float32
+    i32 = jnp.int32
+    act = dtype_of(cfg.dtype)
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+
+    if cfg.arch_type == "unet":
+        return {"images": sds((B, cfg.image_size, cfg.image_size,
+                               cfg.in_channels), f32),
+                "labels": sds((B,), i32)}
+
+    if shape.mode == "decode":
+        return {"tokens": sds((B, 1), i32)}
+
+    specs: Dict[str, Any] = {}
+    s_text = S
+    if cfg.arch_type == "vlm":
+        s_text = S - cfg.num_image_tokens
+        specs["image_embeds"] = sds((B, cfg.num_image_tokens, cfg.d_model), act)
+    if cfg.arch_type == "encdec":
+        specs["frames"] = sds((B, cfg.encoder_seq_len, cfg.d_model), act)
+    specs["tokens"] = sds((B, s_text), i32)
+    if shape.mode == "train":
+        specs["labels"] = sds((B, S), i32)  # VLM: image positions = -1 (masked)
+    return specs
+
+
+def make_inputs(rng, cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Concrete random inputs matching ``input_specs`` (smoke tests)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, spec in specs.items():
+        rng, sub = jax.random.split(rng)
+        if spec.dtype == jnp.int32:
+            hi = cfg.vocab_size if cfg.arch_type != "unet" else max(cfg.num_classes, 1)
+            out[k] = jax.random.randint(sub, spec.shape, 0, max(hi, 2), jnp.int32)
+        else:
+            out[k] = jax.random.normal(sub, spec.shape, jnp.float32).astype(spec.dtype)
+    return out

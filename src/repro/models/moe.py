@@ -1,0 +1,111 @@
+"""Mixture-of-experts FFN with capacity-based scatter dispatch.
+
+Baseline dispatch (this file) is fully dense-shape static: tokens are
+scattered into an (E, C, d) buffer via position-in-expert indices computed
+with a one-hot cumsum, batched expert matmuls run on the buffer, and
+outputs are gathered back.  Under pjit the token axis shards over
+("pod","data") and the expert axis over "model"; XLA inserts the
+all-to-all-equivalent collectives.  The explicit shard_map all-to-all
+variant lives in repro/launch/expert_parallel.py (perf hillclimb).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import activation_fn, dense_init
+from repro.models.ffn import init_ffn, apply_ffn
+
+
+def init_moe(key, d_model: int, moe: MoEConfig, *, activation: str,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    E, de = moe.num_experts, moe.d_expert
+    std = 1.0 / (d_model ** 0.5)
+    p = {
+        "router": dense_init(ks[0], d_model, E, jnp.float32),  # router in fp32
+        "w_gate": (jax.random.normal(ks[1], (E, d_model, de)) * std).astype(dtype),
+        "w_in": (jax.random.normal(ks[2], (E, d_model, de)) * std).astype(dtype),
+        "w_out": (jax.random.normal(ks[3], (E, de, d_model)) * (de ** -0.5)).astype(dtype),
+    }
+    if moe.num_shared_experts > 0:
+        p["shared"] = init_ffn(ks[4], d_model, moe.d_shared, glu=True,
+                               bias=False, dtype=dtype)
+    return p
+
+
+def router_topk(logits, k: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """logits: (T, E) -> (weights (T,k), ids (T,k), probs (T,E))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)
+    weights = weights / (jnp.sum(weights, axis=-1, keepdims=True) + 1e-9)
+    return weights, ids, probs
+
+
+def load_balance_loss(probs, ids, num_experts: int) -> jnp.ndarray:
+    """Switch-style aux loss: E * sum_e f_e * P_e."""
+    T, k = ids.shape
+    counts = jnp.zeros((num_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f = counts / (T * k)
+    P = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * P)
+
+
+def capacity(T: int, k: int, num_experts: int, factor: float) -> int:
+    c = int(T * k * factor / num_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def dispatch_indices(ids, num_experts: int, cap: int):
+    """Position-in-expert for each (token, choice) pair.
+
+    ids: (T, k) int32 expert assignments.
+    Returns pos: (T, k) int32 position within the expert buffer, and
+    keep: (T, k) bool (False = dropped, over capacity).
+    """
+    T, k = ids.shape
+    flat = ids.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)
+    incl = jnp.cumsum(onehot, axis=0)                        # inclusive
+    pos = jnp.take_along_axis(incl - onehot, flat[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    return pos.reshape(T, k), keep.reshape(T, k)
+
+
+def apply_moe(p, x, moe: MoEConfig, *, activation: str):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    k, E = moe.experts_per_token, moe.num_experts
+
+    logits = xt.astype(jnp.float32) @ p["router"]
+    weights, ids, probs = router_topk(logits, k)
+    cap = capacity(T, k, E, moe.capacity_factor)
+    pos, keep = dispatch_indices(ids, E, cap)
+
+    # scatter tokens into (E, C, d)
+    flat_ids = ids.reshape(-1)
+    flat_pos = jnp.where(keep.reshape(-1), pos.reshape(-1), cap - 1)
+    contrib = jnp.repeat(xt, k, axis=0) * keep.reshape(-1, 1).astype(xt.dtype)
+    buf = jnp.zeros((E, cap, d), xt.dtype).at[flat_ids, flat_pos].add(contrib)
+
+    # batched expert FFN (swiglu)
+    act = activation_fn(activation)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    g = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", g * h, p["w_out"])
+
+    # gather + weighted combine
+    gathered = out_buf[flat_ids, flat_pos]                   # (T*k, d)
+    gathered = gathered * (weights.reshape(-1, 1) * keep.reshape(-1, 1)).astype(xt.dtype)
+    out = jnp.sum(gathered.reshape(T, k, d), axis=1)
+
+    if moe.num_shared_experts > 0:
+        out = out + apply_ffn(p["shared"], xt, activation=activation, glu=True)
+
+    aux = load_balance_loss(probs, ids, E) * moe.router_aux_loss
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,91 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU + output gate.
+
+Training uses an associative scan (parallel prefix) over the diagonal
+linear recurrence h_t = a_t * h_{t-1} + b_t; decode carries (h, conv
+window) state — O(1) per token, which is why long_500k runs natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+_C = 8.0  # RG-LRU temperature
+
+
+def init_rglru(key, d_model: int, lru_width: int, conv_width: int,
+               dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    W = lru_width
+    p = {
+        "w_x": dense_init(ks[0], d_model, W, dtype),         # recurrent branch in
+        "w_y": dense_init(ks[1], d_model, W, dtype),         # gate branch in
+        "conv_w": (jax.random.normal(ks[2], (conv_width, W)) * 0.02).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "w_a": dense_init(ks[3], W, W, dtype),               # recurrence gate
+        "b_a": jnp.zeros((W,), dtype),
+        "w_i": dense_init(ks[4], W, W, dtype),               # input gate
+        "b_i": jnp.zeros((W,), dtype),
+        # Lambda parametrized so a = exp(-c*softplus(L)) starts near 0.9..0.999
+        "log_lambda": (jax.random.uniform(ks[5], (W,), minval=-4.3, maxval=-1.0)
+                       ).astype(jnp.float32),
+        "w_out": dense_init(ks[6], W, d_model, dtype),
+    }
+    return p
+
+
+def _gates(p, xc):
+    """RG-LRU gate computation from conv output xc: (..., W)."""
+    r = jax.nn.sigmoid(xc @ p["w_a"] + p["b_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(xc @ p["w_i"] + p["b_i"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(p["log_lambda"]) * r       # (..., W)
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * gated_x
+    return a, b
+
+
+def _conv1d(p, x, conv_width: int):
+    """Causal temporal conv via shifted adds.  x: (B, S, W)."""
+    out = jnp.zeros_like(x)
+    for i in range(conv_width):
+        xi = x if i == 0 else jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xi * p["conv_w"][conv_width - 1 - i]
+    return out + p["conv_b"]
+
+
+def apply_rglru(p, x, *, conv_width: int):
+    """Full-sequence recurrent block.  x: (B, S, d) -> (B, S, d)."""
+    xr = x @ p["w_x"]
+    xc = _conv1d(p, xr, conv_width)
+    a, b = _gates(p, xc)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(x @ p["w_y"], approximate=True)
+    return (h.astype(x.dtype) * gate) @ p["w_out"]
+
+
+def init_rglru_state(batch: int, lru_width: int, conv_width: int, dtype):
+    return {
+        "h": jnp.zeros((batch, lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, lru_width), dtype),
+    }
+
+
+def rglru_decode(p, x, state, *, conv_width: int):
+    """Single-step decode.  x: (B, 1, d) -> (out (B,1,d), new state)."""
+    xr = (x @ p["w_x"])[:, 0]                                 # (B, W)
+    window = jnp.concatenate([state["conv"], xr[:, None, :]], axis=1)  # (B,cw,W)
+    xc = jnp.einsum("bcw,cw->bw", window, p["conv_w"]) + p["conv_b"]
+    a, b = _gates(p, xc)
+    h = a * state["h"] + b
+    gate = jax.nn.gelu(x[:, 0] @ p["w_y"], approximate=True)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    new_state = {"h": h, "conv": window[:, 1:]}
+    return out[:, None, :], new_state

@@ -1,0 +1,193 @@
+"""RWKV-6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+Attention-free: training scans the WKV linear recurrence over time
+(state (B, H, K, V) per layer); decode is O(1) per token, so long_500k
+runs natively.  Token-shift is the RWKV ddlerp (LoRA-modulated
+interpolation with the previous token).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+_LORA_R = 32
+_DECAY_R = 64
+_MIX = 5  # r, k, v, w, g
+
+
+def init_rwkv_tmix(key, d_model: int, num_heads: int, head_dim: int,
+                   dtype=jnp.float32):
+    ks = jax.random.split(key, 12)
+    d = d_model
+    dh = num_heads * head_dim
+    p = {
+        "mu_base": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dtype),
+        "mu": (jax.random.uniform(ks[1], (_MIX, d)) * 0.5).astype(dtype),
+        "lora_a": (jax.random.normal(ks[2], (_MIX, d, _LORA_R)) * 0.01).astype(dtype),
+        "lora_b": (jax.random.normal(ks[3], (_MIX, _LORA_R, d)) * 0.01).astype(dtype),
+        "w0": (jax.random.uniform(ks[4], (dh,), minval=-7.0, maxval=-4.0)
+               ).astype(jnp.float32),
+        "decay_a": (jax.random.normal(ks[5], (d, _DECAY_R)) * 0.01).astype(dtype),
+        "decay_b": (jax.random.normal(ks[6], (_DECAY_R, dh)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[7], (num_heads, head_dim)) * 0.1).astype(jnp.float32),
+        "w_r": dense_init(ks[8], d, dh, dtype),
+        "w_k": dense_init(ks[9], d, dh, dtype),
+        "w_v": dense_init(ks[10], d, dh, dtype),
+        "w_g": dense_init(ks[11], d, dh, dtype),
+        "w_o": dense_init(jax.random.fold_in(key, 99), dh, d, dtype),
+        "ln_scale": jnp.ones((dh,), dtype),
+    }
+    return p
+
+
+def init_rwkv_cmix(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "mu_k": (jax.random.uniform(ks[0], (d_model,)) * 0.5).astype(dtype),
+        "mu_r": (jax.random.uniform(ks[1], (d_model,)) * 0.5).astype(dtype),
+        "w_k": dense_init(ks[2], d_model, d_ff, dtype),
+        "w_v": dense_init(ks[3], d_ff, d_model, dtype),
+        "w_r": dense_init(jax.random.fold_in(key, 7), d_model, d_model, dtype),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift interpolation -> (r,k,v,w,g) inputs."""
+    dx = x_prev - x
+    xx = x + dx * p["mu_base"]
+    # two-step lora: tanh(xx @ A_m) @ B_m  per mix channel m
+    t = jnp.tanh(jnp.einsum("...d,mdr->m...r", xx, p["lora_a"]))
+    delta = jnp.einsum("m...r,mrd->m...d", t, p["lora_b"])
+    mixed = x[None] + dx[None] * (p["mu"][:, None, None, :] + delta)
+    return mixed  # (5, B, S, d)
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """WKV recurrence. r,k,w: (B,S,H,K); v: (B,S,H,V); state: (B,H,K,V)."""
+    def step(S_prev, xs):
+        rt, kt, vt, wt = xs                                  # (B,H,K/V)
+        kv = kt[..., :, None] * vt[..., None, :]             # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt,
+                         S_prev + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S_prev + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, out = jax.lax.scan(step, state, xs)
+    return state, jnp.moveaxis(out, 0, 1)                    # (B,S,H,V)
+
+
+_LOG_CLAMP = 25.0
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunk-parallel WKV (flash-linear-attention form) — §Perf hillclimb.
+
+    The per-step scan round-trips the (B,H,K,V) state through HBM once
+    per token (the dominant roofline term for rwkv6 training).  Here the
+    recurrence is evaluated in L-length chunks with two MXU matmuls per
+    chunk — the state crosses HBM once per CHUNK, an S/L-fold reduction
+    in state traffic.
+
+    Within a chunk (1-based t, C_t = prod_{s<=t} w_s):
+      y_t   = (r_t . C_{t-1}) @ S_0
+              + sum_{s<t} [(r_t . C_{t-1}) @ (k_s / C_s)] v_s
+              + (r_t . u . k_t) v_t
+      S_out = diag(C_L) (S_0 + sum_s (k_s / C_s) v_s^T)
+    Log-cumulative decays are clamped at +/-25 (contributions beyond
+    e^-25 are numerically zero) — exact for moderate decay, documented.
+    """
+    B, S, H, K = k.shape
+    assert S % chunk == 0
+    L = S // chunk
+
+    def resh(x):
+        return x.reshape(B, L, chunk, H, -1).transpose(1, 0, 2, 3, 4)
+
+    rb, kb, vb, wb = resh(r), resh(k), resh(v), resh(w)
+
+    def body(S0, xs):
+        rc, kc, vc, wc = xs                   # (B, chunk, H, K/V)
+        lw = jnp.log(jnp.maximum(wc, 1e-38))  # (B, chunk, H, K), <= 0
+        cum = jnp.cumsum(lw, axis=1)          # C_t in log space
+        cum_prev = cum - lw                   # C_{t-1}
+        r_t = rc * jnp.exp(jnp.maximum(cum_prev, -_LOG_CLAMP))
+        k_t = kc * jnp.exp(jnp.minimum(-cum, _LOG_CLAMP))
+        A = jnp.einsum("bthk,bshk->bhts", r_t, k_t)          # (B,H,c,c)
+        tri = jnp.tril(jnp.ones((chunk, chunk), A.dtype), k=-1)
+        diag = jnp.einsum("bthk,bthk->bht", rc * u[None, None], kc)
+        A = A * tri[None, None] + \
+            diag[..., None] * jnp.eye(chunk, dtype=A.dtype)[None, None]
+        y = jnp.einsum("bhts,bshv->bthv", A, vc)             # intra-chunk
+        y = y + jnp.einsum("bthk,bhkv->bthv", r_t, S0)       # state term
+        kv = jnp.einsum("bshk,bshv->bhkv", k_t, vc)
+        S_new = jnp.exp(jnp.maximum(cum[:, -1], -_LOG_CLAMP)
+                        )[..., None] * (S0 + kv)
+        return S_new, y
+
+    state, yb = jax.lax.scan(body, state.astype(jnp.float32),
+                             (rb.astype(jnp.float32), kb.astype(jnp.float32),
+                              vb.astype(jnp.float32), wb))
+    out = yb.transpose(1, 0, 2, 3, 4).reshape(B, S, H, -1)
+    return state, out
+
+
+def apply_tmix(p, x, num_heads: int, head_dim: int, *, state=None,
+               wkv_chunk: int = 0):
+    """Time-mix over a full sequence.  x: (B, S, d).
+
+    state: optional {"S": (B,H,K,V) fp32, "shift": (B, d)} for chunked /
+    decode continuation.  Returns (out, new_state).
+    """
+    B, S, d = x.shape
+    H, K = num_heads, head_dim
+    shift_in = state["shift"] if state is not None else jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([shift_in[:, None, :], x[:, :-1]], axis=1)
+    mixed = _ddlerp(p, x, x_prev)
+    lr, lk, lv, lw, lg = [mixed[i] for i in range(_MIX)]
+
+    r = (lr @ p["w_r"]).reshape(B, S, H, K)
+    k = (lk @ p["w_k"]).reshape(B, S, H, K)
+    v = (lv @ p["w_v"]).reshape(B, S, H, K)
+    g = jax.nn.silu(lg @ p["w_g"])
+    decay = p["w0"] + (jnp.tanh(lw @ p["decay_a"]) @ p["decay_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay)).reshape(B, S, H, K)
+
+    S0 = state["S"] if state is not None else jnp.zeros((B, H, K, K), jnp.float32)
+    if wkv_chunk and S % wkv_chunk == 0 and S > wkv_chunk:
+        S_new, wkv = _wkv_chunked(r, k, v, w, p["u"].astype(jnp.float32),
+                                  S0, wkv_chunk)
+    else:
+        S_new, wkv = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), w, p["u"], S0)
+
+    # per-head group norm
+    mu = jnp.mean(wkv, axis=-1, keepdims=True)
+    var = jnp.var(wkv, axis=-1, keepdims=True)
+    wkv = (wkv - mu) * jax.lax.rsqrt(var + 1e-5)
+    out = (wkv.reshape(B, S, H * K).astype(x.dtype) * p["ln_scale"]) * g
+    new_state = {"S": S_new, "shift": x[:, -1, :]}
+    return out @ p["w_o"], new_state
+
+
+def apply_cmix(p, x, *, state=None):
+    """Channel-mix.  x: (B, S, d); state: {"shift": (B, d)}."""
+    B, S, d = x.shape
+    shift_in = state["shift"] if state is not None else jnp.zeros((B, d), x.dtype)
+    x_prev = jnp.concatenate([shift_in[:, None, :], x[:, :-1]], axis=1)
+    dx = x_prev - x
+    xk = x + dx * p["mu_k"]
+    xr = x + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    out = jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"])
+    return out, {"shift": x[:, -1, :]}
+
+
+def init_rwkv_state(batch: int, d_model: int, num_heads: int, head_dim: int, dtype):
+    return {
+        "S": jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+        "shift_t": jnp.zeros((batch, d_model), dtype),
+        "shift_c": jnp.zeros((batch, d_model), dtype),
+    }

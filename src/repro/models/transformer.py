@@ -1,0 +1,656 @@
+"""Unified decoder stack for all assigned architectures.
+
+Layer layout = ``head`` (unstacked, e.g. deepseek's leading dense-FFN
+layers) + ``cycles`` (the layer pattern, param-stacked over repetitions and
+driven by ``lax.scan`` so the HLO stays compact for 512-way SPMD compiles)
++ ``tail`` (pattern remainder, unstacked).  Mixed layer kinds (gemma2
+local/global, recurrentgemma rec/rec/attn) are positions *within* the
+pattern — no ``lax.switch`` needed and no wasted parameters.
+
+Supports: dense GQA / MQA, sliding windows, gemma2 softcaps, command-r
+parallel blocks, MoE (+shared experts, leading dense layers), DeepSeek MLA,
+RG-LRU recurrent layers, RWKV6 layers, whisper-style encoder-decoder with
+cross-attention, and VLM patch-embedding prefix.  Single-token decode with
+per-kind caches: full KV for global attention, ring-buffer KV for windowed
+attention, latent cache for MLA, O(1) states for RG-LRU / RWKV.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ATTN_GLOBAL, ATTN_LOCAL,
+                                RECURRENT, RWKV)
+from repro.models import attention as attn_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.common import (ApplyOptions, DEFAULT_OPTS, apply_rope,
+                                 constrain_activation, constrain_heads,
+                                 dense_init, dtype_of, embed_init, rms_norm,
+                                 softcap)
+from repro.models.ffn import apply_ffn, init_ffn
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# Stack plan
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    n_head: int                 # leading unstacked layers (dense-FFN for MoE)
+    n_cycles: int               # scanned repetitions of the pattern
+    pattern: Tuple[int, ...]
+    tail_kinds: Tuple[int, ...]
+
+
+def stack_plan(cfg: ModelConfig) -> StackPlan:
+    n_head = cfg.moe.first_dense_layers if cfg.moe else 0
+    if n_head:
+        assert len(cfg.layer_pattern) == 1, "head layers need uniform pattern"
+    rem = cfg.num_layers - n_head
+    plen = len(cfg.layer_pattern)
+    return StackPlan(
+        n_head=n_head,
+        n_cycles=rem // plen,
+        pattern=cfg.layer_pattern,
+        tail_kinds=cfg.layer_pattern[: rem % plen],
+    )
+
+
+# ===========================================================================
+# Per-layer init
+# ===========================================================================
+def init_attn_params(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.num_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.num_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, d, dtype),
+    }
+    if cfg.use_qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.use_attn_out_bias:
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def init_layer(key, cfg: ModelConfig, kind: int, *, is_moe: bool,
+               cross_attn: bool = False, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Params = {"ln1": jnp.zeros((d,), dtype)}
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        if cfg.mla is not None:
+            p["mla"] = mla_lib.init_mla(ks[0], d, cfg.num_heads, cfg.mla, dtype)
+        else:
+            p["attn"] = init_attn_params(ks[0], cfg, dtype)
+        if cross_attn:
+            p["ln_cross"] = jnp.zeros((d,), dtype)
+            p["cross"] = init_attn_params(ks[1], cfg, dtype)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        if is_moe:
+            p["moe"] = moe_lib.init_moe(ks[2], d, cfg.moe,
+                                        activation=cfg.activation, dtype=dtype)
+        else:
+            p["ffn"] = init_ffn(ks[2], d, cfg.d_ff, glu=cfg.glu,
+                                bias=cfg.use_ffn_bias, dtype=dtype)
+    elif kind == RECURRENT:
+        p["rec"] = rglru_lib.init_rglru(ks[0], d, cfg.lru_width,
+                                        cfg.conv1d_width, dtype)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["ffn"] = init_ffn(ks[2], d, cfg.d_ff, glu=cfg.glu,
+                            bias=cfg.use_ffn_bias, dtype=dtype)
+    elif kind == RWKV:
+        p["tmix"] = rwkv_lib.init_rwkv_tmix(ks[0], d, cfg.num_heads,
+                                            cfg.head_dim, dtype)
+        p["ln2"] = jnp.zeros((d,), dtype)
+        p["cmix"] = rwkv_lib.init_rwkv_cmix(ks[2], d, cfg.d_ff, dtype)
+    else:
+        raise ValueError(f"unknown layer kind {kind}")
+    return p
+
+
+def _layer_is_moe(cfg: ModelConfig, kind: int) -> bool:
+    return cfg.moe is not None and kind in (ATTN_GLOBAL, ATTN_LOCAL)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    """Initialize the full model parameter pytree."""
+    dtype = dtype_of(cfg.param_dtype)
+    plan = stack_plan(cfg)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype)
+
+    cross = cfg.arch_type == "encdec"
+    # head layers (always dense-FFN)
+    params["head"] = [
+        init_layer(jax.random.fold_in(keys[2], i), cfg, cfg.layer_pattern[0],
+                   is_moe=False, cross_attn=cross, dtype=dtype)
+        for i in range(plan.n_head)
+    ]
+    # scanned cycles: one stacked param tree per pattern position
+    cyc = []
+    for pos, kind in enumerate(plan.pattern):
+        if plan.n_cycles == 0:
+            cyc.append(None)
+            continue
+        pos_keys = jax.random.split(jax.random.fold_in(keys[3], pos), plan.n_cycles)
+        stacked = jax.vmap(
+            lambda k: init_layer(k, cfg, kind, is_moe=_layer_is_moe(cfg, kind),
+                                 cross_attn=cross, dtype=dtype))(pos_keys)
+        cyc.append(stacked)
+    params["cycles"] = cyc
+    params["tail"] = [
+        init_layer(jax.random.fold_in(keys[4], 1000 + i), cfg, kind,
+                   is_moe=_layer_is_moe(cfg, kind), cross_attn=cross, dtype=dtype)
+        for i, kind in enumerate(plan.tail_kinds)
+    ]
+
+    if cfg.arch_type == "encdec":
+        enc_keys = jax.random.split(keys[5], max(cfg.num_encoder_layers, 1))
+        params["encoder"] = {
+            "blocks": jax.vmap(
+                lambda k: init_layer(k, cfg, ATTN_GLOBAL, is_moe=False,
+                                     dtype=dtype))(enc_keys),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+# ===========================================================================
+# Full-sequence layer application (train / prefill)
+# ===========================================================================
+def _self_attention(ap, h, positions, cfg: ModelConfig, *, window: int,
+                    opts: ApplyOptions, causal: bool = True):
+    B, S, d = h.shape
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = h @ ap["wq"]
+    k = h @ ap["wk"]
+    v = h @ ap["wv"]
+    if "bq" in ap:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    # GQA + TP: when the model axes divide Hq but not Hkv, expand KV to
+    # per-q-head layout so attention shards cleanly by q-head (MaxText's
+    # "kv head replication"); never shard across head_dim.
+    sizes = dict(opts.mesh_axis_sizes)
+    mprod = 1
+    for a in opts.act_model_axes:
+        mprod *= sizes.get(a, 1)
+    if mprod > 1 and Hkv % mprod != 0 and Hq % mprod == 0:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    q = constrain_heads(q, opts, seq_fallback=True)
+    k = constrain_heads(k, opts)
+    v = constrain_heads(v, opts)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if opts.use_flash and causal and cfg.attn_softcap == 0.0:
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(q, k, v, causal=True, window=window)
+    else:
+        out = attn_lib.attend(q, k, v, q_positions=positions,
+                              kv_positions=positions, causal=causal,
+                              window=window, attn_softcap=cfg.attn_softcap,
+                              chunk=opts.attn_chunk)
+    out = out.reshape(B, S, Hq * hd) @ ap["wo"]
+    if "bo" in ap:
+        out = out + ap["bo"]
+    return out
+
+
+def _cross_attention(ap, h, enc_out, cfg: ModelConfig, opts: ApplyOptions):
+    """Cross attention: queries from decoder h, keys/values from enc_out."""
+    B, S, d = h.shape
+    Se = enc_out.shape[1]
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (h @ ap["wq"]).reshape(B, S, Hq, hd)
+    k = (enc_out @ ap["wk"]).reshape(B, Se, Hkv, hd)
+    v = (enc_out @ ap["wv"]).reshape(B, Se, Hkv, hd)
+    if "bq" in ap:
+        q = q + ap["bq"].reshape(Hq, hd)
+        k = k + ap["bk"].reshape(Hkv, hd)
+        v = v + ap["bv"].reshape(Hkv, hd)
+    qp = jnp.arange(S, dtype=jnp.int32)
+    kp = jnp.arange(Se, dtype=jnp.int32)
+    out = attn_lib.attend(q, k, v, q_positions=qp, kv_positions=kp,
+                          causal=False, window=0, chunk=opts.attn_chunk)
+    out = out.reshape(B, S, Hq * hd) @ ap["wo"]
+    if "bo" in ap:
+        out = out + ap["bo"]
+    return out
+
+
+def _cast_layer(lp, dtype):
+    """Cast a layer's floating-point params to the activation dtype
+    (MaxText-style cast-at-use; master copies stay fp32 for Adam)."""
+    def cast(a):
+        if jnp.issubdtype(a.dtype, jnp.floating) and a.dtype != dtype:
+            return a.astype(dtype)
+        return a
+    return jax.tree.map(cast, lp)
+
+
+def apply_layer_full(lp: Params, x, kind: int, cfg: ModelConfig,
+                     positions, opts: ApplyOptions, *,
+                     enc_out=None, causal: bool = True):
+    """One layer over a full sequence.  Returns (x, aux_loss)."""
+    lp = _cast_layer(lp, x.dtype)
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        if "mla" in lp:
+            attn_out = mla_lib.apply_mla(lp["mla"], h, cfg.mla, cfg.num_heads,
+                                         positions, rope_theta=cfg.rope_theta,
+                                         chunk=opts.attn_chunk, window=window)
+        else:
+            attn_out = _self_attention(lp["attn"], h, positions, cfg,
+                                       window=window, opts=opts, causal=causal)
+        if cfg.parallel_block:
+            ffn_out = apply_ffn(lp["ffn"], h, activation=cfg.activation,
+                                glu=cfg.glu)
+            return x + attn_out + ffn_out, aux
+        x = x + attn_out
+        if "cross" in lp:
+            hc = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+            x = x + _cross_attention(lp["cross"], hc, enc_out, cfg, opts)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            if opts.moe_ep and opts.ep_mesh is not None:
+                from repro.launch.expert_parallel import apply_moe_ep
+                moe_out, aux = apply_moe_ep(
+                    lp["moe"], h2, cfg.moe, mesh=opts.ep_mesh,
+                    ep_axes=opts.ep_axes, token_axes=opts.ep_token_axes,
+                    activation=cfg.activation)
+            else:
+                moe_out, aux = moe_lib.apply_moe(lp["moe"], h2, cfg.moe,
+                                                 activation=cfg.activation)
+            x = x + moe_out
+        else:
+            x = x + apply_ffn(lp["ffn"], h2, activation=cfg.activation,
+                              glu=cfg.glu)
+        return x, aux
+
+    if kind == RECURRENT:
+        x = x + rglru_lib.apply_rglru(lp["rec"], h, conv_width=cfg.conv1d_width)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + apply_ffn(lp["ffn"], h2, activation=cfg.activation, glu=cfg.glu)
+        return x, aux
+
+    if kind == RWKV:
+        tm_out, _ = rwkv_lib.apply_tmix(lp["tmix"], h, cfg.num_heads,
+                                        cfg.head_dim,
+                                        wkv_chunk=opts.wkv_chunk)
+        x = x + tm_out
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        cm_out, _ = rwkv_lib.apply_cmix(lp["cmix"], h2)
+        return x + cm_out, aux
+
+    raise ValueError(f"unknown kind {kind}")
+
+
+# ===========================================================================
+# Encoder (whisper) — bidirectional stacked blocks over frame embeddings
+# ===========================================================================
+def apply_encoder(params: Params, frames, cfg: ModelConfig, opts: ApplyOptions):
+    enc = params["encoder"]
+    B, Se, d = frames.shape
+    positions = jnp.arange(Se, dtype=jnp.int32)   # shared across batch
+    x = constrain_activation(frames, opts)
+
+    def body(carry, lp):
+        x = carry
+        x, _ = apply_layer_full(lp, x, ATTN_GLOBAL, cfg, positions, opts,
+                                causal=False)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if opts.remat else body
+    x, _ = jax.lax.scan(body_fn, x, enc["blocks"])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+# ===========================================================================
+# Forward (train / prefill)
+# ===========================================================================
+def embed_tokens(params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens].astype(dtype_of(cfg.dtype))
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            opts: ApplyOptions = DEFAULT_OPTS):
+    """Full-sequence forward.  Returns (hidden (B,S,d), aux_loss).
+
+    batch keys: "tokens" (B, S_text); VLM adds "image_embeds"
+    (B, Nimg, d); encdec adds "frames" (B, Se, d).
+    """
+    plan = stack_plan(cfg)
+    tokens = batch["tokens"]
+    x = embed_tokens(params, cfg, tokens)
+    enc_out = None
+    if cfg.arch_type == "vlm":
+        img = batch["image_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    elif cfg.arch_type == "encdec":
+        enc_out = apply_encoder(params, batch["frames"].astype(x.dtype), cfg, opts)
+
+    x = constrain_activation(x, opts)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)    # shared across batch
+    aux = jnp.zeros((), jnp.float32)
+
+    for lp, kind in zip(params["head"], cfg.layer_kinds()[: plan.n_head]):
+        x, a = apply_layer_full(lp, x, cfg.layer_pattern[0], cfg, positions,
+                                opts, enc_out=enc_out)
+        aux = aux + a
+
+    if plan.n_cycles > 0:
+        def cycle_body(carry, cyc_params):
+            x, aux = carry
+            x = constrain_activation(x, opts)
+            for pos, kind in enumerate(plan.pattern):
+                x, a = apply_layer_full(cyc_params[pos], x, kind, cfg,
+                                        positions, opts, enc_out=enc_out)
+                x = constrain_activation(x, opts)
+                aux = aux + a
+            return (x, aux), None
+
+        body_fn = jax.checkpoint(cycle_body) if opts.remat else cycle_body
+        (x, aux), _ = jax.lax.scan(body_fn, (x, aux), tuple(params["cycles"]))
+
+    for lp, kind in zip(params["tail"], plan.tail_kinds):
+        x, a = apply_layer_full(lp, x, kind, cfg, positions, opts,
+                                enc_out=enc_out)
+        aux = aux + a
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def lm_head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def logits_from_hidden(params, cfg: ModelConfig, hidden):
+    logits = hidden @ lm_head_weight(params, cfg).astype(hidden.dtype)
+    return softcap(logits, cfg.logit_softcap)
+
+
+def chunked_xent(params, cfg: ModelConfig, hidden, labels, *,
+                 chunk: int = 512, opts: ApplyOptions = DEFAULT_OPTS):
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    hidden: (B, S, d); labels: (B, S) int32, -1 = ignore.
+    Returns mean loss over non-ignored positions.
+    """
+    B, S, d = hidden.shape
+    w = lm_head_weight(params, cfg)
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    n = S // chunk
+    hb = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    lb = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h, y = xs
+        # logits stay in the activation dtype (bf16) so the cotangent
+        # into the backbone stays bf16; only the reductions are fp32.
+        logits = softcap(h @ w.astype(h.dtype), cfg.logit_softcap)
+        lmax = jax.lax.stop_gradient(
+            jnp.max(logits.astype(jnp.float32), axis=-1, keepdims=True))
+        shifted = logits - lmax.astype(logits.dtype)
+        lse = jnp.log(jnp.sum(jnp.exp(shifted).astype(jnp.float32),
+                              axis=-1)) + lmax[..., 0]
+        yc = jnp.clip(y, 0, cfg.vocab_size - 1)
+        correct = jnp.take_along_axis(
+            logits, yc[..., None], axis=-1)[..., 0].astype(jnp.float32)
+        mask = (y >= 0).astype(jnp.float32)
+        loss_sum, count = carry
+        return (loss_sum + jnp.sum((lse - correct) * mask),
+                count + jnp.sum(mask)), None
+
+    body_fn = jax.checkpoint(body) if opts.remat else body
+    (loss_sum, count), _ = jax.lax.scan(
+        body_fn, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hb, lb))
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+# ===========================================================================
+# Decode: caches + single-token step
+# ===========================================================================
+def _attn_cache(cfg: ModelConfig, kind: int, batch: int, seq_len: int, dtype):
+    if cfg.mla is not None:
+        return {
+            "c": jnp.zeros((batch, seq_len, cfg.mla.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, seq_len, cfg.mla.qk_rope_head_dim), dtype),
+        }
+    size = seq_len if kind == ATTN_GLOBAL else min(cfg.sliding_window, seq_len)
+    return {
+        "k": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, size, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "kv_pos": jnp.full((batch, size), -1, jnp.int32),
+    }
+
+
+def _layer_state(cfg: ModelConfig, kind: int, batch: int, seq_len: int, dtype):
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        return _attn_cache(cfg, kind, batch, seq_len, dtype)
+    if kind == RECURRENT:
+        return rglru_lib.init_rglru_state(batch, cfg.lru_width,
+                                          cfg.conv1d_width, dtype)
+    if kind == RWKV:
+        return rwkv_lib.init_rwkv_state(batch, cfg.d_model, cfg.num_heads,
+                                        cfg.head_dim, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(params: Params, cfg: ModelConfig, batch: int, seq_len: int,
+               *, enc_out=None, opts: ApplyOptions = DEFAULT_OPTS) -> Params:
+    """Decode cache pytree matching the stack plan."""
+    plan = stack_plan(cfg)
+    dtype = dtype_of(cfg.dtype)
+    cache: Params = {"pos": jnp.zeros((batch,), jnp.int32)}
+    cache["head"] = [
+        _layer_state(cfg, cfg.layer_pattern[0], batch, seq_len, dtype)
+        for _ in range(plan.n_head)
+    ]
+    cyc = []
+    for pos, kind in enumerate(plan.pattern):
+        if plan.n_cycles == 0:
+            cyc.append(None)
+            continue
+        one = _layer_state(cfg, kind, batch, seq_len, dtype)
+        cyc.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (plan.n_cycles,) + a.shape), one))
+    cache["cycles"] = cyc
+    cache["tail"] = [
+        _layer_state(cfg, kind, batch, seq_len, dtype)
+        for kind in plan.tail_kinds
+    ]
+    if cfg.arch_type == "encdec":
+        if enc_out is None:
+            raise ValueError("encdec decode cache needs enc_out")
+        cache["enc_out"] = enc_out
+    return cache
+
+
+def _decode_self_attention(ap, cache, h, pos, cfg: ModelConfig, kind: int):
+    """h: (B,1,d). Updates ring/full KV cache, returns (out, new_cache)."""
+    B = h.shape[0]
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = h @ ap["wq"]
+    k = h @ ap["wk"]
+    v = h @ ap["wv"]
+    if "bq" in ap:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q = q.reshape(B, 1, Hq, hd)
+    k = k.reshape(B, 1, Hkv, hd)
+    v = v.reshape(B, 1, Hkv, hd)
+    positions = pos[:, None]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = pos % size                                  # ring for windowed
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    kv_pos = cache["kv_pos"].at[bidx, slot].set(pos)
+
+    window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+    # valid entries have kv_pos >= 0; attend() masks via positions
+    big = jnp.where(kv_pos >= 0, kv_pos, jnp.iinfo(jnp.int32).max)
+    out = attn_lib.attend(q, k_cache, v_cache, q_positions=positions,
+                          kv_positions=big, causal=True, window=window,
+                          attn_softcap=cfg.attn_softcap, chunk=0)
+    out = out.reshape(B, 1, Hq * hd) @ ap["wo"]
+    if "bo" in ap:
+        out = out + ap["bo"]
+    return out, {"k": k_cache, "v": v_cache, "kv_pos": kv_pos}
+
+
+def _decode_cross_attention(ap, h, enc_out, cfg: ModelConfig):
+    B = h.shape[0]
+    Se = enc_out.shape[1]
+    Hq, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (h @ ap["wq"]).reshape(B, 1, Hq, hd)
+    k = (enc_out @ ap["wk"]).reshape(B, Se, Hkv, hd)
+    v = (enc_out @ ap["wv"]).reshape(B, Se, Hkv, hd)
+    qp = jnp.zeros((1,), jnp.int32)
+    kp = jnp.arange(Se, dtype=jnp.int32)
+    out = attn_lib.attend(q, k, v, q_positions=qp, kv_positions=kp,
+                          causal=False, window=0, chunk=0)
+    out = out.reshape(B, 1, Hq * hd) @ ap["wo"]
+    if "bo" in ap:
+        out = out + ap["bo"]
+    return out
+
+
+def apply_layer_decode(lp: Params, state: Params, x, kind: int,
+                       cfg: ModelConfig, pos, *, enc_out=None):
+    """One layer, one token.  x: (B,1,d).  Returns (x, new_state)."""
+    lp = _cast_layer(lp, x.dtype)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    window = cfg.sliding_window if kind == ATTN_LOCAL else 0
+
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        if "mla" in lp:
+            out, c, kr = mla_lib.mla_decode(lp["mla"], h, state["c"],
+                                            state["kr"], pos, cfg.mla,
+                                            cfg.num_heads,
+                                            rope_theta=cfg.rope_theta,
+                                            window=window)
+            new_state = {"c": c, "kr": kr}
+            attn_out = out
+        else:
+            attn_out, new_state = _decode_self_attention(lp["attn"], state, h,
+                                                         pos, cfg, kind)
+        if cfg.parallel_block:
+            ffn_out = apply_ffn(lp["ffn"], h, activation=cfg.activation,
+                                glu=cfg.glu)
+            return x + attn_out + ffn_out, new_state
+        x = x + attn_out
+        if "cross" in lp:
+            hc = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+            x = x + _decode_cross_attention(lp["cross"], hc, enc_out, cfg)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            moe_out, _ = moe_lib.apply_moe(lp["moe"], h2, cfg.moe,
+                                           activation=cfg.activation)
+            x = x + moe_out
+        else:
+            x = x + apply_ffn(lp["ffn"], h2, activation=cfg.activation,
+                              glu=cfg.glu)
+        return x, new_state
+
+    if kind == RECURRENT:
+        out, new_state = rglru_lib.rglru_decode(lp["rec"], h, state,
+                                                conv_width=cfg.conv1d_width)
+        x = x + out
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + apply_ffn(lp["ffn"], h2, activation=cfg.activation, glu=cfg.glu)
+        return x, new_state
+
+    if kind == RWKV:
+        tstate = {"S": state["S"], "shift": state["shift_t"]}
+        tm_out, tnew = rwkv_lib.apply_tmix(lp["tmix"], h, cfg.num_heads,
+                                           cfg.head_dim, state=tstate)
+        x = x + tm_out
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        cstate = {"shift": state["shift_c"]}
+        cm_out, cnew = rwkv_lib.apply_cmix(lp["cmix"], h2, state=cstate)
+        x = x + cm_out
+        new_state = {"S": tnew["S"], "shift_t": tnew["shift"],
+                     "shift_c": cnew["shift"]}
+        return x, new_state
+
+    raise ValueError(kind)
+
+
+def decode_step(params: Params, cache: Params, cfg: ModelConfig,
+                tokens, opts: ApplyOptions = DEFAULT_OPTS):
+    """One decode step.  tokens: (B, 1) int32.  Returns (logits, new_cache)."""
+    plan = stack_plan(cfg)
+    pos = cache["pos"]
+    x = embed_tokens(params, cfg, tokens)
+    enc_out = cache.get("enc_out")
+
+    new_cache: Params = dict(cache)
+    new_head = []
+    for lp, st in zip(params["head"], cache["head"]):
+        x, st2 = apply_layer_decode(lp, st, x, cfg.layer_pattern[0], cfg, pos,
+                                    enc_out=enc_out)
+        new_head.append(st2)
+    new_cache["head"] = new_head
+
+    if plan.n_cycles > 0:
+        def cycle_body(x, xs):
+            cyc_params, cyc_state = xs
+            new_states = []
+            for p_idx, kind in enumerate(plan.pattern):
+                x, st2 = apply_layer_decode(cyc_params[p_idx],
+                                            cyc_state[p_idx], x, kind, cfg,
+                                            pos, enc_out=enc_out)
+                new_states.append(st2)
+            return x, tuple(new_states)
+
+        x, new_cyc = jax.lax.scan(
+            cycle_body, x, (tuple(params["cycles"]), tuple(cache["cycles"])))
+        new_cache["cycles"] = list(new_cyc)
+
+    new_tail = []
+    for lp, st, kind in zip(params["tail"], cache["tail"], plan.tail_kinds):
+        x, st2 = apply_layer_decode(lp, st, x, kind, cfg, pos, enc_out=enc_out)
+        new_tail.append(st2)
+    new_cache["tail"] = new_tail
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_hidden(params, cfg, x)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

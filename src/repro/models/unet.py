@@ -1,0 +1,214 @@
+"""DDPM U-Net (Ho et al. 2020) in pure JAX — the paper's model (§V-A).
+
+NHWC layout.  The dense CIFAR-10 config (base=128, mults (1,2,2,2),
+2 res-blocks, attention at 16x16) reproduces the paper's 35.7M-parameter
+U-Net.  Structured-pruning dependency groups: the *internal* channels of
+every ResBlock (conv1-out ∥ temb-proj-out ∥ norm2 ∥ conv2-in) and the
+per-head channels of every attention block — the DepGraph-consistent
+groups that do not touch the residual stream (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import group_norm, sinusoidal_embedding
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Conv helpers
+# ---------------------------------------------------------------------------
+def conv_init(key, kh, kw, cin, cout, scale=1.0):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * (scale / fan_in ** 0.5)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def conv(p, x, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def dense_p(key, cin, cout, scale=1.0):
+    w = jax.random.normal(key, (cin, cout)) * (scale / cin ** 0.5)
+    return {"w": w.astype(jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def norm_p(c):
+    return {"scale": jnp.ones((c,), jnp.float32),
+            "bias": jnp.zeros((c,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def init_resblock(key, cin, cout, temb_dim):
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": norm_p(cin),
+        "conv1": conv_init(ks[0], 3, 3, cin, cout),
+        "temb": dense_p(ks[1], temb_dim, cout),
+        "norm2": norm_p(cout),
+        "conv2": conv_init(ks[2], 3, 3, cout, cout, scale=1e-6),
+    }
+    if cin != cout:
+        p["skip"] = conv_init(ks[3], 1, 1, cin, cout)
+    return p
+
+
+def apply_resblock(p, x, temb, *, dropout_rng=None, dropout=0.0):
+    h = jax.nn.silu(group_norm(x, p["norm1"]["scale"], p["norm1"]["bias"]))
+    h = conv(p["conv1"], h)
+    h = h + dense(p["temb"], jax.nn.silu(temb))[:, None, None, :]
+    h = jax.nn.silu(group_norm(h, p["norm2"]["scale"], p["norm2"]["bias"]))
+    if dropout > 0.0 and dropout_rng is not None:
+        keep = jax.random.bernoulli(dropout_rng, 1.0 - dropout, h.shape)
+        h = h * keep / (1.0 - dropout)
+    h = conv(p["conv2"], h)
+    skip = conv(p["skip"], x) if "skip" in p else x
+    return skip + h
+
+
+def init_attnblock(key, c):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm": norm_p(c),
+        "qkv": conv_init(ks[0], 1, 1, c, 3 * c),
+        "proj": conv_init(ks[1], 1, 1, c, c, scale=1e-6),
+    }
+
+
+def apply_attnblock(p, x):
+    B, H, W, C = x.shape
+    h = group_norm(x, p["norm"]["scale"], p["norm"]["bias"])
+    qkv = conv(p["qkv"], h)
+    Ci = qkv.shape[-1] // 3          # may be < C after structured pruning
+    qkv = qkv.reshape(B, H * W, 3, Ci)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+    logits = jnp.einsum("bqc,bkc->bqk", q, k) * (Ci ** -0.5)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqk,bkc->bqc", probs, v).reshape(B, H, W, Ci)
+    return x + conv(p["proj"], out)
+
+
+# ---------------------------------------------------------------------------
+# U-Net
+# ---------------------------------------------------------------------------
+def init_unet(key, cfg: ModelConfig) -> Params:
+    ch = cfg.base_channels
+    temb_dim = ch * 4
+    keys = iter(jax.random.split(key, 512))
+    nk = lambda: next(keys)
+
+    params: Params = {
+        "temb1": dense_p(nk(), ch, temb_dim),
+        "temb2": dense_p(nk(), temb_dim, temb_dim),
+        "conv_in": conv_init(nk(), 3, 3, cfg.in_channels, ch),
+        "norm_out": norm_p(ch),
+        "conv_out": conv_init(nk(), 3, 3, ch, cfg.in_channels, scale=1e-6),
+    }
+
+    res = cfg.image_size
+    down: List[Params] = []
+    chans = [ch]
+    cur = ch
+    for lvl, mult in enumerate(cfg.channel_mults):
+        cout = ch * mult
+        blocks = []
+        for _ in range(cfg.num_res_blocks):
+            blk = {"res": init_resblock(nk(), cur, cout, temb_dim)}
+            cur = cout
+            if res in cfg.attn_resolutions:
+                blk["attn"] = init_attnblock(nk(), cur)
+            blocks.append(blk)
+            chans.append(cur)
+        lvl_p: Params = {"blocks": blocks}
+        if lvl != len(cfg.channel_mults) - 1:
+            lvl_p["down"] = conv_init(nk(), 3, 3, cur, cur)
+            chans.append(cur)
+            res //= 2
+        down.append(lvl_p)
+    params["down"] = down
+
+    params["mid"] = {
+        "res1": init_resblock(nk(), cur, cur, temb_dim),
+        "attn": init_attnblock(nk(), cur),
+        "res2": init_resblock(nk(), cur, cur, temb_dim),
+    }
+
+    up: List[Params] = []
+    for lvl, mult in reversed(list(enumerate(cfg.channel_mults))):
+        cout = ch * mult
+        blocks = []
+        for _ in range(cfg.num_res_blocks + 1):
+            skip_c = chans.pop()
+            blk = {"res": init_resblock(nk(), cur + skip_c, cout, temb_dim)}
+            cur = cout
+            if res in cfg.attn_resolutions:
+                blk["attn"] = init_attnblock(nk(), cur)
+            blocks.append(blk)
+        lvl_p = {"blocks": blocks}
+        if lvl != 0:
+            lvl_p["up"] = conv_init(nk(), 3, 3, cur, cur)
+            res *= 2
+        up.append(lvl_p)
+    params["up"] = up
+    return params
+
+
+def apply_unet(params: Params, cfg: ModelConfig, x, t, *,
+               dropout_rng=None, train: bool = False):
+    """Noise prediction eps_theta(x_t, t).  x: (B,H,W,C) NHWC; t: (B,)."""
+    drop = cfg.dropout if train else 0.0
+    rngs = iter(jax.random.split(dropout_rng, 256)) if dropout_rng is not None \
+        else iter([])
+    nrng = (lambda: next(rngs)) if dropout_rng is not None else (lambda: None)
+
+    temb = sinusoidal_embedding(t, cfg.base_channels)
+    temb = dense(params["temb2"], jax.nn.silu(dense(params["temb1"], temb)))
+
+    h = conv(params["conv_in"], x)
+    skips = [h]
+    for lvl, lvl_p in enumerate(params["down"]):
+        for blk in lvl_p["blocks"]:
+            h = apply_resblock(blk["res"], h, temb, dropout_rng=nrng(),
+                               dropout=drop)
+            if "attn" in blk:
+                h = apply_attnblock(blk["attn"], h)
+            skips.append(h)
+        if "down" in lvl_p:
+            h = conv(lvl_p["down"], h, stride=2)
+            skips.append(h)
+
+    h = apply_resblock(params["mid"]["res1"], h, temb, dropout_rng=nrng(),
+                       dropout=drop)
+    h = apply_attnblock(params["mid"]["attn"], h)
+    h = apply_resblock(params["mid"]["res2"], h, temb, dropout_rng=nrng(),
+                       dropout=drop)
+
+    for lvl_p in params["up"]:
+        for blk in lvl_p["blocks"]:
+            h = jnp.concatenate([h, skips.pop()], axis=-1)
+            h = apply_resblock(blk["res"], h, temb, dropout_rng=nrng(),
+                               dropout=drop)
+            if "attn" in blk:
+                h = apply_attnblock(blk["attn"], h)
+        if "up" in lvl_p:
+            B, H, W, C = h.shape
+            h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
+            h = conv(lvl_p["up"], h)
+
+    h = jax.nn.silu(group_norm(h, params["norm_out"]["scale"],
+                               params["norm_out"]["bias"]))
+    return conv(params["conv_out"], h)

@@ -1,0 +1,7 @@
+from repro.optim.adam import AdamState, adam_init, adam_update
+from repro.optim.sgd import SGDState, sgd_init, sgd_update
+from repro.optim.ema import ema_init, ema_update
+from repro.optim.schedules import constant, cosine_decay
+
+__all__ = ["AdamState", "adam_init", "adam_update", "SGDState", "sgd_init",
+           "sgd_update", "ema_init", "ema_update", "constant", "cosine_decay"]

@@ -1,0 +1,68 @@
+"""Adam / AdamW — minimal optax-style (init/update) pure-pytree optimizer."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+    master: Any = None   # fp32 master copy when params are bf16 (ZeRO-1)
+
+
+def adam_init(params, *, use_master: bool = False) -> AdamState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params) \
+        if use_master else None
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     mu=jax.tree.map(zeros, params),
+                     nu=jax.tree.map(zeros, params),
+                     master=master)
+
+
+def adam_update(grads, state: AdamState, params, *, lr, b1: float = 0.9,
+                b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0, grad_clip: float = 0.0):
+    """One Adam(W) step.  Returns (new_params, new_state).
+
+    With a master copy (bf16 params), the update runs on the fp32 master
+    and the returned params are the bf16 cast — the ZeRO-1 pattern: XLA
+    reduce-scatters grads onto the sharded master/moments and all-gathers
+    the fresh bf16 params.
+    """
+    if grad_clip > 0.0:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay > 0.0:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return p.astype(jnp.float32) - lr * delta
+
+    if state.master is not None:
+        new_master = jax.tree.map(upd, state.master, mu, nu)
+        new_params = jax.tree.map(
+            lambda nm, p: nm.astype(p.dtype), new_master, params)
+        return new_params, AdamState(step=step, mu=mu, nu=nu,
+                                     master=new_master)
+    new_params = jax.tree.map(
+        lambda p, m, v: upd(p, m, v).astype(p.dtype), params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu, master=None)

@@ -1,0 +1,20 @@
+"""Exponential moving average of parameters (Ho et al. 2020).
+
+The paper uses EMA only in centralized training (frequent cross-node
+sync is too expensive in FL — §Appendix C); ``ema_in_fl`` exposes their
+"future agenda" knob.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ema_init(params):
+    return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+
+def ema_update(ema, params, decay: float = 0.9999):
+    return jax.tree.map(
+        lambda e, p: decay * e + (1.0 - decay) * p.astype(jnp.float32),
+        ema, params)

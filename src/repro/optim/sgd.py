@@ -1,0 +1,34 @@
+"""SGD (+momentum) — Alg. 2 uses plain SGD updates."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: Any
+
+
+def sgd_init(params, momentum: float = 0.0) -> SGDState:
+    if momentum == 0.0:
+        return SGDState(momentum=None)
+    return SGDState(momentum=jax.tree.map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+
+def sgd_update(grads, state: SGDState, params, *, lr, momentum: float = 0.0):
+    if momentum == 0.0 or state.momentum is None:
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, state
+    new_m = jax.tree.map(
+        lambda m, g: momentum * m + g.astype(jnp.float32),
+        state.momentum, grads)
+    new_params = jax.tree.map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, new_m)
+    return new_params, SGDState(momentum=new_m)

@@ -1,0 +1,4 @@
+from repro.roofline import hw
+from repro.roofline.analysis import RooflineTerms, analyze_hlo, parse_hlo
+
+__all__ = ["hw", "RooflineTerms", "analyze_hlo", "parse_hlo"]

@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests: reduced variant of each assigned family,
+one forward/train step + one decode step on CPU; output shapes + no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import list_archs, smoke_variant
+from repro.configs.base import InputShape
+from repro.models import model
+
+TRAIN = InputShape("smoke_train", 64, 2, "train")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step(arch, rng):
+    cfg = smoke_variant(arch)
+    params = model.init(rng, cfg)
+    batch = model.make_inputs(rng, cfg, TRAIN)
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss_fn(p, cfg, batch, rng))(params)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), f"{arch}: NaN loss"
+    gleaves = jax.tree.leaves(grads)
+    assert gleaves, f"{arch}: empty grads"
+    assert all(not bool(jnp.any(jnp.isnan(g))) for g in gleaves), \
+        f"{arch}: NaN grads"
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_step(arch, rng):
+    cfg = smoke_variant(arch)
+    params = model.init(rng, cfg)
+    cache = model.init_cache(params, cfg, 2, 64)
+    toks = jnp.ones((2, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = model.decode(params, cache, cfg, toks)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits))), f"{arch}: NaN decode logits"
+    assert int(cache["pos"][0]) == 3
+
+
+@pytest.mark.parametrize("arch", ["internlm2-20b", "rwkv6-7b",
+                                  "recurrentgemma-9b"])
+def test_prefill_matches_decode(arch, rng):
+    """Prefill logits at position t == decode logits after feeding t tokens."""
+    cfg = smoke_variant(arch)
+    params = model.init(rng, cfg)
+    T = 8
+    toks = jax.random.randint(rng, (1, T), 0, cfg.vocab_size, jnp.int32)
+    hidden, _ = __import__("repro.models.transformer",
+                           fromlist=["forward"]).forward(
+        params, cfg, {"tokens": toks})
+    from repro.models.transformer import logits_from_hidden
+    full_logits = logits_from_hidden(params, cfg, hidden)
+
+    cache = model.init_cache(params, cfg, 1, 64)
+    for t in range(T):
+        step_logits, cache = model.decode(params, cache, cfg, toks[:, t:t+1])
+    import numpy as np
+    np.testing.assert_allclose(np.asarray(step_logits[0, 0]),
+                               np.asarray(full_logits[0, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ring_buffer_window_decode_matches_full(rng):
+    """A sliding-window layer's ring-buffer cache must give the same
+    logits as a full-size cache once enough tokens have been fed: the
+    window masks out everything the ring has evicted."""
+    cfg = smoke_variant("gemma2-2b")           # local/global alternating
+    params = model.init(rng, cfg)
+    T = 24                                     # > sliding_window (16 min? smoke window=64 -> use shorter)
+    win = 8
+    cfg = cfg.replace(sliding_window=win)
+    toks = jax.random.randint(rng, (1, T), 0, cfg.vocab_size, jnp.int32)
+
+    # full-size cache: ring size = min(window, seq) = window either way;
+    # compare against a cache big enough to never wrap
+    cache_small = model.init_cache(params, cfg, 1, win)    # local layers wrap
+    cache_big = model.init_cache(params, cfg, 1, 4 * T)
+    for t in range(T):
+        l_small, cache_small = model.decode(params, cache_small, cfg,
+                                            toks[:, t:t + 1])
+        l_big, cache_big = model.decode(params, cache_big, cfg,
+                                        toks[:, t:t + 1])
+    import numpy as np
+    # NOTE: global layers in cache_small only hold the last `win` tokens,
+    # so compare a pure-local variant for exactness
+    cfg_local = cfg.replace(layer_pattern=(1,))  # ATTN_LOCAL only
+    params_l = model.init(rng, cfg_local)
+    cs = model.init_cache(params_l, cfg_local, 1, win)
+    cb = model.init_cache(params_l, cfg_local, 1, 4 * T)
+    for t in range(T):
+        ls, cs = model.decode(params_l, cs, cfg_local, toks[:, t:t + 1])
+        lb, cb = model.decode(params_l, cb, cfg_local, toks[:, t:t + 1])
+    np.testing.assert_allclose(np.asarray(ls), np.asarray(lb),
+                               rtol=2e-3, atol=2e-3)

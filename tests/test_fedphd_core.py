@@ -1,0 +1,103 @@
+"""Unit tests for the paper's core: SH score (Eqs. 18-20), aggregation
+weights (Eqs. 21-24), edge selection (Eq. 25)."""
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (aggregate_sh, fedavg_weights, sh_weights,
+                                    weighted_average)
+from repro.core.selection import (ranked_alternatives,
+                                  selection_probabilities)
+from repro.core.sh_score import (AccumulatedDistribution, label_distribution,
+                                 sh_score, uniform_target)
+
+
+def test_sh_score_uniform_is_max():
+    q_u = uniform_target(10)
+    assert sh_score(q_u) == pytest.approx(2.0)
+
+
+def test_sh_score_onehot_is_min():
+    q = np.zeros(10)
+    q[0] = 1.0
+    expected = 2.0 - np.sqrt((1 - 0.1) ** 2 + 9 * 0.01)
+    assert sh_score(q) == pytest.approx(expected)
+    # one-hot is the least homogeneous distribution
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        p = rng.dirichlet(np.ones(10))
+        assert sh_score(p) >= sh_score(q) - 1e-12
+
+
+def test_label_distribution():
+    labels = np.array([0, 0, 1, 2])
+    q = label_distribution(labels, 4)
+    np.testing.assert_allclose(q, [0.5, 0.25, 0.25, 0.0])
+
+
+def test_accumulated_distribution_eq19():
+    acc = AccumulatedDistribution(2)
+    acc.update(np.array([1.0, 0.0]), 100)     # client A: all class 0
+    acc.update(np.array([0.0, 1.0]), 100)     # client B: all class 1
+    np.testing.assert_allclose(acc.q, [0.5, 0.5])
+    assert acc.sh() == pytest.approx(2.0)
+    n2, mu2 = acc.peek_with(np.array([1.0, 0.0]), 200)
+    assert n2 == 400
+    assert mu2 < 2.0                          # adding skew lowers SH
+    acc.refresh()
+    assert acc.n == 0
+
+
+def test_sh_weights_favor_homogeneous():
+    w = sh_weights([100, 100], [2.0, 1.0], a=1000.0, b=0.0)
+    assert w[0] > w[1]
+    assert w.sum() == pytest.approx(1.0)
+
+
+def test_sh_weights_relu_degenerate_falls_back():
+    w = sh_weights([10, 10], [1.0, 1.0], a=-1e9, b=0.0)
+    np.testing.assert_allclose(w, fedavg_weights([10, 10]))
+
+
+def test_weighted_average_pytree():
+    t1 = {"a": np.ones((2, 2)), "b": [np.zeros(3)]}
+    t2 = {"a": np.zeros((2, 2)), "b": [np.ones(3)]}
+    out = weighted_average([t1, t2], [3, 1])
+    np.testing.assert_allclose(np.asarray(out["a"]), 0.75)
+    np.testing.assert_allclose(np.asarray(out["b"][0]), 0.25)
+
+
+def test_selection_prefers_balancing_edge():
+    """Paper Fig. 5: a client whose data fills an edge's missing class
+    should prefer that edge."""
+    e0 = AccumulatedDistribution(2)
+    e0.update(np.array([1.0, 0.0]), 1000)     # edge 0 heavy on class 0
+    e1 = AccumulatedDistribution(2)
+    e1.update(np.array([0.3, 0.7]), 1000)     # edge 1 mildly skewed to 1
+    q_n = np.array([0.0, 1.0])                # client holds class 1
+    p = selection_probabilities([e0, e1], q_n, 500, a=15000.0, b=0.0)
+    # adding the client makes edge 0 MORE homogeneous (mu 1.764) but
+    # pushes edge 1 further from uniform (mu 1.576)
+    assert p[0] > p[1]
+    assert p.sum() == pytest.approx(1.0)
+
+
+def test_selection_load_balance():
+    """With equal SH effect, the less-loaded edge wins (the -n_e term)."""
+    e0 = AccumulatedDistribution(2)
+    e0.update(np.array([0.5, 0.5]), 5000)
+    e1 = AccumulatedDistribution(2)
+    e1.update(np.array([0.5, 0.5]), 500)
+    q_n = np.array([0.5, 0.5])
+    p = selection_probabilities([e0, e1], q_n, 100, a=15000.0, b=0.0)
+    assert p[1] > p[0]
+
+
+def test_ranked_alternatives():
+    edges = []
+    for frac in (0.9, 0.5, 0.1):
+        e = AccumulatedDistribution(2)
+        e.update(np.array([frac, 1 - frac]), 1000)
+        edges.append(e)
+    order = ranked_alternatives(edges, np.array([0.0, 1.0]), 500,
+                                a=15000.0, b=0.0)
+    assert order[0] == 0   # most skewed-to-0 edge benefits most

@@ -1,0 +1,77 @@
+"""FL integration tests: FedPhD HFL loop (Alg. 1) + flat baselines,
+at smoke scale on CPU."""
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_UNET
+from repro.configs.base import FLConfig
+from repro.core.hfl import FedPhD
+from repro.data import SMOKE_DATA, ClientData, make_dataset, shards_per_client
+from repro.fl.baselines import run_flat_fl, run_centralized
+from repro.fl.client import Client
+
+
+@pytest.fixture(scope="module")
+def clients():
+    images, labels = make_dataset(SMOKE_DATA, seed=0)
+    parts = shards_per_client(labels, num_clients=6, classes_per_client=1,
+                              seed=0)
+    return [Client(i, ClientData(images[p], labels[p], batch_size=32, seed=i),
+                   SMOKE_DATA.num_classes) for i, p in enumerate(parts)]
+
+
+@pytest.fixture(scope="module")
+def fl_cfg():
+    return FLConfig(num_clients=6, num_edges=2, local_epochs=1,
+                    edge_agg_every=1, cloud_agg_every=2, rounds=4,
+                    sparse_rounds=2, prune_ratio=0.44, sh_a=1000.0)
+
+
+def test_fedphd_full_loop(clients, fl_cfg):
+    trainer = FedPhD(SMOKE_UNET, fl_cfg, clients, rng_seed=0)
+    hist, _ = trainer.run(4)
+    assert len(hist) == 4
+    assert all(np.isfinite(h.loss) for h in hist)
+    # pruning fired at the first cloud round >= R_s
+    assert any(h.pruned for h in hist)
+    pr = next(i for i, h in enumerate(hist) if h.pruned)
+    assert hist[pr].params_m < hist[0].params_m * 0.7
+    # comm cost per round drops after pruning (smaller model)
+    assert trainer.pruned
+
+
+def test_fedphd_oneshot(clients, fl_cfg):
+    import dataclasses
+    cfg = dataclasses.replace(fl_cfg, prune_mode="oneshot_random", rounds=2)
+    trainer = FedPhD(SMOKE_UNET, cfg, clients, rng_seed=0)
+    assert trainer.pruned                      # pruned at init
+    hist, _ = trainer.run(2)
+    assert all(np.isfinite(h.loss) for h in hist)
+
+
+def test_fedphd_sh_tracking(clients, fl_cfg):
+    trainer = FedPhD(SMOKE_UNET, fl_cfg, clients, rng_seed=0, prune=False)
+    hist, _ = trainer.run(2)
+    for h in hist:
+        for mu in h.edge_sh:
+            assert 2 - np.sqrt(2) - 1e-9 <= mu <= 2 + 1e-9
+
+
+@pytest.mark.parametrize("method", ["fedavg", "fedprox", "feddiffuse",
+                                    "scaffold"])
+def test_flat_baselines(method, clients, fl_cfg):
+    res = run_flat_fl(method, SMOKE_UNET, fl_cfg, clients, rounds=2)
+    assert len(res.history) == 2
+    assert all(np.isfinite(h["loss"]) for h in res.history)
+
+
+def test_feddiffuse_cheaper_than_fedavg(clients, fl_cfg):
+    r1 = run_flat_fl("fedavg", SMOKE_UNET, fl_cfg, clients, rounds=1)
+    r2 = run_flat_fl("feddiffuse", SMOKE_UNET, fl_cfg, clients, rounds=1)
+    assert r2.history[0]["comm_gb"] < r1.history[0]["comm_gb"]
+
+
+def test_centralized_loss_decreases():
+    images, _ = make_dataset(SMOKE_DATA, seed=1)
+    _, losses = run_centralized(SMOKE_UNET, images, steps=12, batch_size=32)
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])

@@ -1,0 +1,81 @@
+"""Per-kernel shape/dtype sweeps: pallas_call(interpret=True) vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.block_masked_matmul.block_masked_matmul import (
+    block_masked_matmul)
+from repro.kernels.block_masked_matmul.ref import block_masked_matmul_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rglru_scan.rglru_scan import rglru_scan
+from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.kernels.group_l2_norms.group_l2_norms import group_l2_norms
+from repro.kernels.group_l2_norms.ref import group_l2_norms_ref
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 384, 128),
+                                   (128, 256, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("ratio", [0.0, 0.44, 0.9])
+def test_block_masked_matmul(M, K, N, dtype, ratio, rng):
+    ks = jax.random.split(rng, 4)
+    x = jax.random.normal(ks[0], (M, K)).astype(dtype)
+    w = jax.random.normal(ks[1], (K, N)).astype(dtype)
+    cm = (jax.random.uniform(ks[2], (N,)) >= ratio).astype(jnp.float32)
+    rm = (jax.random.uniform(ks[3], (K,)) >= ratio / 2).astype(jnp.float32)
+    got = block_masked_matmul(x, w, cm, rm, interpret=True)
+    want = block_masked_matmul_ref(x, w, cm, rm)
+    atol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_block_masked_matmul_skips_whole_blocks(rng):
+    """A fully-masked N-block must produce exactly zero output columns."""
+    x = jax.random.normal(rng, (128, 128))
+    w = jax.random.normal(jax.random.fold_in(rng, 1), (128, 256))
+    cm = jnp.concatenate([jnp.zeros(128), jnp.ones(128)])
+    rm = jnp.ones(128)
+    got = block_masked_matmul(x, w, cm, rm, interpret=True)
+    assert float(jnp.max(jnp.abs(got[:, :128]))) == 0.0
+    assert float(jnp.max(jnp.abs(got[:, 128:]))) > 0.0
+
+
+@pytest.mark.parametrize("Sq,Skv", [(128, 128), (256, 256), (128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 128])
+def test_flash_attention(Sq, Skv, dtype, window, rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (4, Sq, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (4, Skv, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (4, Skv, 64)).astype(dtype)
+    got = flash_attention_bhsd(q, k, v, causal=True, window=window,
+                               interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True, window=window)
+    atol = 2e-3 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("S,W", [(256, 128), (512, 256), (1024, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru_scan(S, W, dtype, rng):
+    ks = jax.random.split(rng, 2)
+    a = jax.random.uniform(ks[0], (2, S, W), minval=0.4,
+                           maxval=0.999).astype(dtype)
+    b = jax.random.normal(ks[1], (2, S, W)).astype(dtype)
+    got = rglru_scan(a, b, bs=128, interpret=True)
+    want = rglru_scan_ref(a, b)
+    atol = 1e-4 if dtype == jnp.float32 else 0.25
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+@pytest.mark.parametrize("K,G,C", [(128, 8, 64), (256, 16, 32), (64, 4, 128)])
+def test_group_l2_norms(K, G, C, rng):
+    w = jax.random.normal(rng, (K, G * C))
+    got = group_l2_norms(w, G, interpret=True)
+    want = group_l2_norms_ref(w, G)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)

@@ -1,0 +1,101 @@
+"""Launch-layer tests: mesh construction, sharding rules, step builders,
+roofline HLO parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant, sharding_rules
+from repro.configs.base import InputShape
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import _param_spec, _fit
+from repro.launch.steps import (build_opt_init, build_serve_step,
+                                build_train_step)
+from repro.models import model
+from repro.roofline.analysis import analyze_hlo, parse_hlo
+
+
+def test_host_mesh():
+    mesh = make_host_mesh()
+    assert set(mesh.axis_names) == {"data", "model"}
+
+
+def test_param_spec_megatron_rules():
+    mesh = make_host_mesh()  # 1 device: every _fit -> None (divisibility)
+    rules = sharding_rules(get_config("internlm2-20b"))
+    spec = _param_spec("cycles/0/attn/wq", (48, 6144, 6144), mesh, rules)
+    assert len(spec) == 3
+
+
+def test_train_step_runs_and_learns(rng):
+    cfg = smoke_variant("gemma2-2b")
+    step = jax.jit(build_train_step(cfg, lr=1e-3))
+    opt_init = build_opt_init(cfg)
+    params = model.init(rng, cfg)
+    opt = opt_init(params)
+    batch = model.make_inputs(rng, cfg, InputShape("t", 64, 2, "train"))
+    losses = []
+    for i in range(5):
+        params, opt, loss = step(params, opt, batch, i)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]          # memorizes a fixed batch
+
+
+def test_serve_step_greedy(rng):
+    cfg = smoke_variant("moonshot-v1-16b-a3b")
+    serve = jax.jit(build_serve_step(cfg))
+    params = model.init(rng, cfg)
+    cache = model.init_cache(params, cfg, 2, 32)
+    toks = jnp.ones((2, 1), jnp.int32)
+    for _ in range(4):
+        toks, cache = serve(params, cache, toks)
+    assert toks.shape == (2, 1)
+    assert int(cache["pos"][0]) == 4
+
+
+def test_master_weights_for_bf16(rng):
+    cfg = smoke_variant("internlm2-20b").replace(param_dtype="bfloat16")
+    params = model.init(rng, cfg)
+    opt = build_opt_init(cfg)(params)
+    assert opt.master is not None
+    m_leaves = jax.tree.leaves(opt.master)
+    assert all(l.dtype == jnp.float32 for l in m_leaves)
+
+
+_HLO = """
+HloModule test
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %d)
+}
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[8,8]) tuple(%zero, %a)
+  %w = (s32[], f32[8,8]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_roofline_parser_trip_counts():
+    terms = analyze_hlo(_HLO)
+    # 7 iterations x 2*8*8*8 flops
+    assert terms.flops == pytest.approx(7 * 2 * 8 * 8 * 8)
+
+
+def test_roofline_parser_computations():
+    comps = parse_hlo(_HLO)
+    assert {"cond", "body", "main"} <= set(comps)
+    assert comps["main"].is_entry

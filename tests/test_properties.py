@@ -1,0 +1,113 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import fedavg_weights, sh_weights, weighted_average
+from repro.core.selection import selection_probabilities
+from repro.core.sh_score import (AccumulatedDistribution, label_distribution,
+                                 sh_score, uniform_target)
+from repro.core.pruning.masks import kept_count
+from repro.core.pruning.groups import PruneGroup
+from repro.fl.comm import CommModel
+
+
+dists = st.lists(st.floats(0.001, 1.0), min_size=2, max_size=12).map(
+    lambda xs: np.asarray(xs) / np.sum(xs))
+
+
+@given(dists)
+@settings(max_examples=100, deadline=None)
+def test_sh_score_bounds(q):
+    """mu in [2 - sqrt(2), 2] for any probability vector."""
+    mu = sh_score(q)
+    assert 2 - np.sqrt(2) - 1e-9 <= mu <= 2 + 1e-9
+
+
+@given(dists)
+@settings(max_examples=50, deadline=None)
+def test_sh_uniform_dominates(q):
+    assert sh_score(uniform_target(len(q))) >= sh_score(q) - 1e-12
+
+
+@given(st.lists(st.integers(1, 10_000), min_size=2, max_size=8),
+       st.lists(st.floats(0.6, 2.0), min_size=2, max_size=8),
+       st.floats(0.0, 1e5), st.floats(0.0, 1e3))
+@settings(max_examples=100, deadline=None)
+def test_sh_weights_simplex(counts, mus, a, b):
+    n = min(len(counts), len(mus))
+    w = sh_weights(counts[:n], mus[:n], a=a, b=b)
+    assert np.all(w >= -1e-12)
+    assert np.isclose(w.sum(), 1.0)
+
+
+@given(st.integers(0, 9), st.integers(1, 500))
+@settings(max_examples=50, deadline=None)
+def test_label_distribution_is_distribution(cls, n):
+    labels = np.full(n, cls)
+    q = label_distribution(labels, 10)
+    assert np.isclose(q.sum(), 1.0)
+    assert q[cls] == 1.0
+
+
+@given(st.lists(st.tuples(dists, st.integers(1, 1000)), min_size=1,
+                max_size=10))
+@settings(max_examples=50, deadline=None)
+def test_accumulated_distribution_matches_pooled(updates):
+    """Eq. 19 accumulation == pooling all samples directly."""
+    k = len(updates[0][0])
+    updates = [(q, n) for q, n in updates if len(q) == k]
+    acc = AccumulatedDistribution(k)
+    total = np.zeros(k)
+    n_tot = 0
+    for q, n in updates:
+        acc.update(q, n)
+        total += q * n
+        n_tot += n
+    np.testing.assert_allclose(acc.q, total / n_tot, rtol=1e-9)
+
+
+@given(st.integers(2, 6), st.floats(1.0, 1e5))
+@settings(max_examples=50, deadline=None)
+def test_selection_probabilities_simplex(n_edges, a):
+    edges = []
+    rng = np.random.default_rng(0)
+    for _ in range(n_edges):
+        e = AccumulatedDistribution(4)
+        e.update(rng.dirichlet(np.ones(4)), int(rng.integers(1, 1000)))
+        edges.append(e)
+    p = selection_probabilities(edges, rng.dirichlet(np.ones(4)), 100,
+                                a=a, b=0.0)
+    assert np.isclose(p.sum(), 1.0)
+    assert np.all(p >= 0)
+
+
+@given(st.integers(8, 4096), st.floats(0.0, 0.95))
+@settings(max_examples=100, deadline=None)
+def test_kept_count_valid(size, ratio):
+    g = PruneGroup(name="g", size=size, members=(), unit="channel")
+    k = kept_count(g, ratio)
+    assert 1 <= k <= size
+
+
+@given(st.floats(1e3, 1e9), st.integers(1, 100))
+@settings(max_examples=50, deadline=None)
+def test_comm_cost_monotone(volume, clients):
+    cm = CommModel()
+    assert cm.flat_fl_round(volume, clients) > 0
+    assert cm.hfl_round(volume, clients, 2, cloud_round=False) \
+        < cm.hfl_round(volume, clients, 2, cloud_round=True)
+    # HFL round without cloud sync is cheaper than flat FL (the paper's
+    # core efficiency claim: d_e << d_c)
+    assert cm.hfl_round(volume, clients, 2, cloud_round=False) \
+        < cm.flat_fl_round(volume, clients)
+
+
+@given(st.lists(st.floats(0.1, 10.0), min_size=2, max_size=5))
+@settings(max_examples=50, deadline=None)
+def test_weighted_average_convexity(weights):
+    """Aggregated scalar lies in the convex hull of the inputs."""
+    vals = np.linspace(-1.0, 1.0, len(weights))
+    trees = [{"x": np.full((3,), v, np.float32)} for v in vals]
+    out = weighted_average(trees, weights)
+    x = np.asarray(out["x"])
+    assert np.all(x >= vals.min() - 1e-6) and np.all(x <= vals.max() + 1e-6)

@@ -1,0 +1,96 @@
+"""Structured-pruning tests: mask ≡ compaction equivalence, depth-aware
+lambdas, regularizer monotonicity, kept-count alignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_UNET, smoke_variant
+from repro.configs.base import InputShape
+from repro.core import pruning as P
+from repro.models import model
+
+TRAIN = InputShape("t", 64, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ["internlm2-20b", "recurrentgemma-9b",
+                                  "rwkv6-7b", "whisper-base"])
+def test_mask_equals_compaction(arch, rng):
+    """Zeroing pruned channels and physically slicing them must give the
+    same loss (the central invariant of the two-phase TPU adaptation)."""
+    cfg = smoke_variant(arch)
+    params = model.init(rng, cfg)
+    groups = P.build_groups(cfg, params)
+    masks = P.make_masks(P.l2_scores(params, groups), groups, 0.44)
+    batch = model.make_inputs(rng, cfg, TRAIN)
+    l_masked = model.loss_fn(P.apply_masks(params, groups, masks), cfg,
+                             batch, rng)
+    np2, cfg2, _ = P.compact(params, cfg, groups, masks)
+    l_compact = model.loss_fn(np2, cfg2, batch, rng)
+    np.testing.assert_allclose(float(l_masked), float(l_compact), rtol=1e-5)
+
+
+def test_unet_mask_equals_compaction(rng):
+    cfg = SMOKE_UNET
+    params = model.init(rng, cfg)
+    groups = P.build_groups(cfg, params)
+    masks = P.make_masks(P.l2_scores(params, groups), groups, 0.44)
+    batch = model.make_inputs(rng, cfg, InputShape("t", 0, 4, "train"))
+    l_masked = model.loss_fn(P.apply_masks(params, groups, masks), cfg,
+                             batch, rng)
+    np2, cfg2, _ = P.compact(params, cfg, groups, masks)
+    l_compact = model.loss_fn(np2, cfg2, batch, rng)
+    np.testing.assert_allclose(float(l_masked), float(l_compact), rtol=1e-5)
+
+
+def test_compaction_reduces_params(rng):
+    cfg = SMOKE_UNET
+    params = model.init(rng, cfg)
+    groups = P.build_groups(cfg, params)
+    masks = P.make_masks(P.l2_scores(params, groups), groups, 0.44)
+    np2, _, report = P.compact(params, cfg, groups, masks)
+    n0 = sum(x.size for x in jax.tree.leaves(params))
+    n1 = sum(x.size for x in jax.tree.leaves(np2))
+    assert n1 < 0.7 * n0
+    for name, (kept, size) in report.items():
+        assert 0 < kept <= size
+
+
+def test_depth_aware_lambda_middle_largest(rng):
+    """Eq. 17: lambda_g = lambda0 / Q — middle layers get the largest
+    regularization pressure."""
+    cfg = SMOKE_UNET
+    params = model.init(rng, cfg)
+    groups = P.build_groups(cfg, params)
+    lam = P.depth_lambdas(groups, 1e-3)
+    max_layer = max(max(g.layer_indices) for g in groups)
+    mid = max_layer / 2
+    by_dist = sorted(
+        ((abs(g.layer_indices[0] - mid), float(lam[g.name][0]))
+         for g in groups), key=lambda t: t[0])
+    assert by_dist[0][1] >= by_dist[-1][1]
+
+
+def test_omega_decreases_when_weights_shrink(rng):
+    cfg = smoke_variant("internlm2-20b")
+    params = model.init(rng, cfg)
+    groups = P.build_groups(cfg, params)
+    lam = P.depth_lambdas(groups, 1e-4)
+    om1 = float(P.omega(params, groups, lam))
+    smaller = jax.tree.map(lambda x: x * 0.5, params)
+    om2 = float(P.omega(smaller, groups, lam))
+    assert om2 == pytest.approx(om1 * 0.25, rel=1e-3)
+    assert om1 > 0
+
+
+def test_oneshot_random_prunes(rng):
+    cfg = smoke_variant("qwen3-moe-235b-a22b")
+    params = model.init(rng, cfg)
+    groups = P.build_groups(cfg, params)
+    scores = P.random_scores(rng, groups)
+    masks = P.make_masks(scores, groups, 0.5)
+    np2, cfg2, _ = P.compact(params, cfg, groups, masks)
+    assert cfg2.moe.num_experts < cfg.moe.num_experts
+    batch = model.make_inputs(rng, cfg2, TRAIN)
+    loss = model.loss_fn(np2, cfg2, batch, rng)
+    assert not bool(jnp.isnan(loss))
