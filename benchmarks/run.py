@@ -21,7 +21,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig1_divergence, fig5_selection, kernels_bench,
-                            roofline_report, table1_quality, table3_pruning,
+                            roofline_report, round_engine_bench,
+                            table1_quality, table3_pruning,
                             table4_efficiency, table5_scalability)
 
     modules = {
@@ -29,6 +30,7 @@ def main() -> None:
         "table3": table3_pruning,
         "fig5": fig5_selection,
         "kernels": kernels_bench,
+        "round_engine": round_engine_bench,
         "roofline": roofline_report,
         "fig1": fig1_divergence,        # FL training (slow) last
         "table1": table1_quality,

@@ -26,6 +26,10 @@ def main():
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--paper-scale", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "vectorized", "sequential"),
+                    help="round engine: one jitted vmap/scan program per "
+                         "round (vectorized) vs per-client loop")
     args = ap.parse_args()
 
     if args.paper_scale:
@@ -62,7 +66,8 @@ def main():
 
     print(f"== FedPhD ({fl.num_clients} clients, {fl.num_edges} edges, "
           f"r_e={fl.edge_agg_every}, r_g={fl.cloud_agg_every}) ==")
-    trainer = FedPhD(cfg, fl, clients, rng_seed=args.seed)
+    trainer = FedPhD(cfg, fl, clients, rng_seed=args.seed,
+                     engine=args.engine)
     hist, _ = trainer.run()
     total_comm = sum(h.comm_gb for h in hist)
     print(f"final loss {hist[-1].loss:.4f}; params "

@@ -9,7 +9,9 @@
 """
 from repro.core.sh_score import (sh_score, label_distribution, uniform_target,
                                  AccumulatedDistribution)
-from repro.core.aggregation import (weighted_average, fedavg_weights,
+from repro.core.aggregation import (weighted_average,
+                                    weighted_average_stacked,
+                                    normalize_weights, fedavg_weights,
                                     sh_weights, aggregate_fedavg, aggregate_sh)
 from repro.core.selection import (selection_probabilities, select_edge,
                                   ranked_alternatives, random_selection)
@@ -24,7 +26,8 @@ def __getattr__(name):
     raise AttributeError(name)
 
 __all__ = ["sh_score", "label_distribution", "uniform_target",
-           "AccumulatedDistribution", "weighted_average", "fedavg_weights",
+           "AccumulatedDistribution", "weighted_average",
+           "weighted_average_stacked", "normalize_weights", "fedavg_weights",
            "sh_weights", "aggregate_fedavg", "aggregate_sh",
            "selection_probabilities", "select_edge", "ranked_alternatives",
            "random_selection", "FedPhD", "RoundRecord"]

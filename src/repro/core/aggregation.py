@@ -14,20 +14,52 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def weighted_average(param_trees: Sequence, weights: Sequence[float]):
-    """sum_i w_i * theta_i with weights normalized to 1."""
+def normalize_weights(weights: Sequence[float]) -> np.ndarray:
+    """Normalize to a convex combination; uniform fallback if degenerate."""
     w = np.asarray(weights, np.float64)
     total = w.sum()
     if total <= 0:
-        w = np.full_like(w, 1.0 / len(w))
-    else:
-        w = w / total
-    def combine(*leaves):
-        acc = leaves[0].astype(jnp.float32) * w[0]
-        for wi, leaf in zip(w[1:], leaves[1:]):
-            acc = acc + leaf.astype(jnp.float32) * wi
-        return acc.astype(leaves[0].dtype)
-    return jax.tree.map(combine, *param_trees)
+        return np.full_like(w, 1.0 / len(w))
+    return w / total
+
+
+def combine_leaf(stacked: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """einsum-contract the leading member axis of one stacked leaf.
+
+    ``stacked``: (N, ...) member-stacked leaf; ``w``: (N,) or (G, N)
+    weights.  Accumulates once in fp32 and casts back, rounding integer
+    leaves (e.g. the Adam step counter) instead of truncating.
+    """
+    dtype = stacked.dtype
+    acc = jnp.einsum("gn,n...->g..." if w.ndim == 2 else "n,n...->...",
+                     w.astype(jnp.float32), stacked.astype(jnp.float32))
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.round(acc).astype(dtype)
+    return acc.astype(dtype)
+
+
+def weighted_average_stacked(stacked_tree, weights):
+    """sum_n w_n * theta_n over the leading member axis of every leaf.
+
+    ``weights`` may be (N,) — one averaged tree — or a (G, N) matrix of
+    per-group weight rows (fused multi-edge aggregation), in which case
+    every output leaf keeps a leading group axis.  Rows are used as
+    given (callers normalize; see ``normalize_weights``).
+    """
+    w = jnp.asarray(np.asarray(weights, np.float32))
+    return jax.tree.map(lambda leaf: combine_leaf(leaf, w), stacked_tree)
+
+
+def weighted_average(param_trees: Sequence, weights: Sequence[float]):
+    """sum_i w_i * theta_i with weights normalized to 1.
+
+    One stacked fp32 einsum per leaf (not a per-member Python
+    accumulation): device-friendly, single up/downcast, and integer
+    leaves (Adam ``t``) survive the round trip via round-to-nearest.
+    """
+    w = normalize_weights(weights)
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *param_trees)
+    return weighted_average_stacked(stacked, w)
 
 
 def fedavg_weights(sample_counts: Sequence[int]) -> np.ndarray:

@@ -21,14 +21,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig, ModelConfig
-from repro.core.aggregation import aggregate_fedavg, aggregate_sh
+from repro.core.aggregation import (aggregate_fedavg, aggregate_sh,
+                                    fedavg_weights, normalize_weights,
+                                    sh_weights)
 from repro.core.pruning import (build_groups, compact, l2_scores, make_masks,
                                 random_scores)
 from repro.core.selection import random_selection, select_edge
 from repro.core.sh_score import AccumulatedDistribution, sh_score, uniform_target
 from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
+from repro.fl.engine import (make_round_engine, stack_clients,
+                             uniform_batch_shape)
 from repro.models import model
+from repro.optim import adam_init
 
 
 @dataclasses.dataclass
@@ -47,13 +52,25 @@ class FedPhD:
     method: "fedphd" (SH aggregation + SH selection),
             "fedphd-os" (one-shot pruning at init),
             ablations: selection="random", aggregation="fedavg".
+
+    engine: "vectorized" — one jitted vmap(client)/scan(batch) program
+            per round with fused on-device edge aggregation and a single
+            loss sync (repro/fl/engine.py);
+            "sequential" — the per-client Python reference loop;
+            "auto" (default) — vectorized whenever the selected clients
+            share a batch shape, sequential otherwise.
+    mesh:   optional jax mesh; the stacked client axis of the vectorized
+            engine is laid over ``client_axis`` (launch/federated.py).
     """
 
     def __init__(self, cfg: ModelConfig, fl: FLConfig, clients: List[Client],
                  *, rng_seed: int = 0, selection: str = "sh",
                  aggregation: str = "sh", prune: bool = True,
-                 lr: float = 2e-4,
+                 lr: float = 2e-4, engine: str = "auto",
+                 mesh=None, client_axis: str = "data",
                  eval_fn: Optional[Callable] = None):
+        if engine not in ("auto", "vectorized", "sequential"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.cfg = cfg
         self.fl = fl
         self.clients = clients
@@ -61,6 +78,9 @@ class FedPhD:
         self.aggregation = aggregation
         self.prune = prune
         self.lr = lr
+        self.engine = engine
+        self.mesh = mesh
+        self.client_axis = client_axis
         self.eval_fn = eval_fn
         self.np_rng = np.random.default_rng(rng_seed)
         self.rng = jax.random.PRNGKey(rng_seed)
@@ -104,6 +124,15 @@ class FedPhD:
             if sparse else None
         self.step_plain = make_local_step(self.cfg, self.fl, sparse=False,
                                           lr=self.lr)
+        self._engine_sparse = make_round_engine(
+            self.cfg, self.fl, sparse=True, groups=self.groups,
+            lr=self.lr) if sparse else None
+        self._engine_plain = make_round_engine(self.cfg, self.fl,
+                                               sparse=False, lr=self.lr)
+        # one Adam zero-tree per model shape, shared by every client in
+        # every sequential round (the vectorized engine builds its own
+        # in-program constant)
+        self._opt_zero = adam_init(self.params)
 
     # -- bookkeeping ----------------------------------------------------------
     def _param_count_m(self) -> float:
@@ -112,6 +141,121 @@ class FedPhD:
     def _model_bytes(self) -> int:
         return sum(x.size * x.dtype.itemsize
                    for x in jax.tree.leaves(self.params))
+
+    # -- local training + edge aggregation (Alg. 1 lines 7-21) ---------------
+    def _use_vectorized(self, round_clients) -> bool:
+        if self.engine == "sequential":
+            return False
+        uniform = uniform_batch_shape(round_clients) is not None
+        if self.engine == "vectorized" and not uniform:
+            raise ValueError("vectorized engine needs a uniform client "
+                             "batch shape; use engine='auto' or "
+                             "'sequential' for ragged clients")
+        return uniform
+
+    def _local_and_edge_sequential(self, r, assignment, sparse_round, mbytes):
+        """Reference path: one jitted step per batch, Python aggregation."""
+        fl = self.fl
+        step_fn = self.step_sparse if sparse_round else self.step_plain
+        round_losses: List[float] = []
+        comm_bytes = 0.0
+        for e, cids in assignment.items():
+            if not cids:
+                continue
+            edge_model = getattr(self, "_edge_models", {}).get(e, self.params)
+            client_models, counts, mus = [], [], []
+            for cid in cids:
+                cl = self.clients[cid]
+                self.rng, sub = jax.random.split(self.rng)
+                p, _, loss = run_local(step_fn, edge_model, cl,
+                                       epochs=fl.local_epochs, rng=sub,
+                                       opt_state=self._opt_zero)
+                client_models.append(p)
+                counts.append(cl.n_samples)
+                mus.append(sh_score(cl.q_n, self.q_u))
+                round_losses.append(loss)
+                self.edges[e].update(cl.q_n, cl.n_samples)     # Eq. 19
+                comm_bytes += self.comm.client_edge(mbytes)     # upload
+            if r % fl.edge_agg_every == 0:
+                if self.aggregation == "sh":
+                    agg = aggregate_sh(client_models, counts, mus,
+                                       fl.sh_a, fl.sh_b)        # Eq. 23/24
+                else:
+                    agg = aggregate_fedavg(client_models, counts)
+                if not hasattr(self, "_edge_models"):
+                    self._edge_models = {}
+                self._edge_models[e] = agg
+                comm_bytes += self.comm.client_edge(mbytes) * len(cids)  # down
+        return round_losses, comm_bytes
+
+    def _local_and_edge_vectorized(self, r, assignment, sparse_round, mbytes):
+        """Device-resident path: one program for all clients + edge agg."""
+        fl = self.fl
+        order = [(e, cid) for e, cids in assignment.items() for cid in cids]
+        # identical RNG folding to the sequential loop: one split per
+        # client in edge-iteration order
+        subs = []
+        for _ in order:
+            self.rng, sub = jax.random.split(self.rng)
+            subs.append(sub)
+        clients = [self.clients[cid] for _, cid in order]
+        steps = max(cl.data.steps_per_epoch for cl in clients) \
+            * fl.local_epochs
+        per = [cl.data.stacked_epochs(fl.local_epochs, steps)
+               for cl in clients]
+        # masking is identity when no client needed padding — elide the
+        # per-step select ops at trace time in that (common) case
+        masked = not all(v.all() for _, v in per)
+        batches, valid = stack_clients([b for b, _ in per],
+                                       [v for _, v in per])
+        rngs = jnp.stack(subs)
+        edge_models = getattr(self, "_edge_models", {})
+        edge_stack = jax.tree.map(
+            lambda *leaves: jnp.stack(leaves),
+            *[edge_models.get(e, self.params) for e in range(fl.num_edges)])
+        edge_idx = jnp.asarray(np.asarray([e for e, _ in order], np.int32))
+
+        # fused aggregation rows: W[e] = normalized Eq. 22/24 weights of
+        # edge e's clients, zero elsewhere
+        w_mat = np.zeros((fl.num_edges, len(order)), np.float32)
+        for e, cids in assignment.items():
+            if not cids:
+                continue
+            counts = [self.clients[cid].n_samples for cid in cids]
+            mus = [sh_score(self.clients[cid].q_n, self.q_u) for cid in cids]
+            w = sh_weights(counts, mus, fl.sh_a, fl.sh_b) \
+                if self.aggregation == "sh" else fedavg_weights(counts)
+            idxs = [i for i, (ee, _) in enumerate(order) if ee == e]
+            w_mat[e, idxs] = normalize_weights(w)
+
+        if self.mesh is not None:
+            from repro.launch.federated import shard_clients
+            batches, valid, rngs = (
+                shard_clients(t, self.mesh, self.client_axis)
+                for t in (batches, valid, rngs))
+
+        engine = self._engine_sparse if sparse_round else self._engine_plain
+        agg_stack, losses = engine(edge_stack, edge_idx, batches, valid,
+                                   rngs, jnp.asarray(w_mat), masked=masked)
+        losses = np.asarray(losses)          # the round's ONE host sync
+
+        round_losses: List[float] = []
+        comm_bytes = 0.0
+        for i, (e, cid) in enumerate(order):
+            cl = self.clients[cid]
+            round_losses.append(float(losses[i]))
+            self.edges[e].update(cl.q_n, cl.n_samples)          # Eq. 19
+            comm_bytes += self.comm.client_edge(mbytes)          # upload
+        if r % fl.edge_agg_every == 0:
+            if not hasattr(self, "_edge_models"):
+                self._edge_models = {}
+            for e, cids in assignment.items():
+                if not cids:
+                    continue
+                self._edge_models[e] = jax.tree.map(
+                    lambda leaf, _e=e: leaf[_e], agg_stack)
+                comm_bytes += self.comm.client_edge(mbytes) * len(cids)
+        return round_losses, comm_bytes
 
     # -- one communication round (Alg. 1 lines 3-32) -------------------------
     def run_round(self, r: int) -> RoundRecord:
@@ -132,39 +276,15 @@ class FedPhD:
 
         sparse_round = (self.prune and not self.pruned
                         and fl.prune_mode == "group_norm" and r < fl.sparse_rounds)
-        step_fn = self.step_sparse if sparse_round else self.step_plain
 
-        round_losses = []
-        comm_bytes = 0.0
         mbytes = self._model_bytes()
-
         # lines 7-21: per-edge local training + edge aggregation
-        for e, cids in assignment.items():
-            if not cids:
-                continue
-            edge_model = getattr(self, "_edge_models", {}).get(e, self.params)
-            client_models, counts, mus = [], [], []
-            for cid in cids:
-                cl = self.clients[cid]
-                self.rng, sub = jax.random.split(self.rng)
-                p, _, loss = run_local(step_fn, edge_model, cl,
-                                       epochs=fl.local_epochs, rng=sub)
-                client_models.append(p)
-                counts.append(cl.n_samples)
-                mus.append(sh_score(cl.q_n, self.q_u))
-                round_losses.append(loss)
-                self.edges[e].update(cl.q_n, cl.n_samples)     # Eq. 19
-                comm_bytes += self.comm.client_edge(mbytes)     # upload
-            if r % fl.edge_agg_every == 0:
-                if self.aggregation == "sh":
-                    agg = aggregate_sh(client_models, counts, mus,
-                                       fl.sh_a, fl.sh_b)        # Eq. 23/24
-                else:
-                    agg = aggregate_fedavg(client_models, counts)
-                if not hasattr(self, "_edge_models"):
-                    self._edge_models = {}
-                self._edge_models[e] = agg
-                comm_bytes += self.comm.client_edge(mbytes) * len(cids)  # down
+        if self._use_vectorized([self.clients[c] for c in sel_ids]):
+            round_losses, comm_bytes = self._local_and_edge_vectorized(
+                r, assignment, sparse_round, mbytes)
+        else:
+            round_losses, comm_bytes = self._local_and_edge_sequential(
+                r, assignment, sparse_round, mbytes)
 
         pruned_this_round = False
         # lines 23-31: cloud aggregation every r_g rounds

@@ -1,7 +1,7 @@
 """Minimal batching pipeline for client-local training."""
 from __future__ import annotations
 
-from typing import Dict, Iterator
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 
@@ -25,6 +25,35 @@ class ClientData:
         for b in range(nb):
             sel = idx[b * self.batch_size:(b + 1) * self.batch_size]
             yield {"images": self.images[sel], "labels": self.labels[sel]}
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return max(len(self.images) // self.batch_size, 1)
+
+    def stacked_epochs(self, num_epochs: int, steps: int | None = None
+                       ) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Pre-shuffled batches for a whole local round, stacked for scan.
+
+        Returns ``(batches, valid)`` where every leaf of ``batches`` has
+        a leading step axis of length ``steps`` and ``valid`` is a
+        (steps,) bool mask.  The first ``num_epochs * steps_per_epoch``
+        entries are exactly the batches ``epoch()`` would have yielded
+        (same RNG consumption, so a sequential and a stacked consumer
+        stay in lockstep); the tail repeats the last real batch with
+        ``valid=False`` so ragged clients pad to a shape-static scan
+        length without affecting training.
+        """
+        stack: list = []
+        for _ in range(num_epochs):
+            stack.extend(self.epoch())
+        n_real = len(stack)
+        steps = n_real if steps is None else steps
+        if steps < n_real:
+            raise ValueError(f"steps={steps} < {n_real} real batches")
+        stack.extend([stack[-1]] * (steps - n_real))
+        batches = {k: np.stack([b[k] for b in stack]) for k in stack[0]}
+        valid = np.arange(steps) < n_real
+        return batches, valid
 
     def batches(self, num: int) -> Iterator[Dict[str, np.ndarray]]:
         """num batches, reshuffling between epochs."""

@@ -1,6 +1,9 @@
 from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
 from repro.fl.baselines import run_flat_fl, run_centralized, FlatFLResult
+from repro.fl.engine import (make_round_engine, stack_clients,
+                             uniform_batch_shape)
 
 __all__ = ["Client", "make_local_step", "run_local", "CommModel",
-           "run_flat_fl", "run_centralized", "FlatFLResult"]
+           "run_flat_fl", "run_centralized", "FlatFLResult",
+           "make_round_engine", "stack_clients", "uniform_batch_shape"]

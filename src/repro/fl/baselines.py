@@ -76,6 +76,7 @@ def run_flat_fl(method: str, cfg: ModelConfig, fl: FLConfig,
     mbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
 
     step_fn = make_local_step(cfg, fl, method=method, lr=lr)
+    opt_zero = adam_init(params)   # one zero-tree, reused by every client
 
     # method-specific state
     zeros_like = lambda t: jax.tree.map(
@@ -109,7 +110,7 @@ def run_flat_fl(method: str, cfg: ModelConfig, fl: FLConfig,
             rng, sub = jax.random.split(rng)
             new_p, _, loss = run_local(step_fn, start, cl,
                                        epochs=fl.local_epochs, rng=sub,
-                                       ctx=ctx)
+                                       ctx=ctx, opt_state=opt_zero)
             losses.append(loss)
             counts.append(cl.n_samples)
             if method == "moon":

@@ -1,0 +1,125 @@
+"""Device-resident vectorized round engine.
+
+The sequential reference path (fl/client.py:run_local) dispatches one
+jitted step per batch with a host sync per loss and aggregates pytrees
+leaf-by-leaf in Python.  This module compiles ONE program per round
+shape that does all of it on device:
+
+    clients  -> jax.vmap  over a stacked leading client axis
+    batches  -> jax.lax.scan over a shape-static step axis
+                (ClientData.stacked_epochs pads ragged clients; padded
+                steps are masked no-ops)
+    edge agg -> fused (E, C) weight-matrix einsum per leaf
+
+Per-round losses come back as a single (C,) device array — one host
+sync per round instead of one per batch.  Numerical equivalence with
+the sequential path is preserved by folding the per-client RNG exactly
+as run_local does (split once per step, carry the first key) and by
+masking padded steps out of both the params update and the loss mean;
+tests/test_round_engine.py asserts it.
+
+The stacked client axis is also the parallelism axis: lay it over the
+device mesh with repro.launch.federated.shard_clients and jit's
+partitioner splits the vmapped program across devices.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig, ModelConfig
+from repro.core.aggregation import combine_leaf
+from repro.core.pruning import depth_lambdas, omega
+from repro.models import model
+from repro.optim import adam_init, adam_update
+
+
+def make_round_engine(cfg: ModelConfig, fl: FLConfig, *, sparse: bool = False,
+                      groups=None, lr: float = 2e-4, unroll: int = 8):
+    """Build the jitted vectorized round program.
+
+    Returns ``engine(edge_params, edge_idx, batches, valid, rngs, w_mat)
+    -> (agg_stack, losses)`` where
+
+      edge_params: pytree, leaves (E, ...) — one model per edge server
+      edge_idx:    (C,) int32 — which edge each client starts from
+      batches:     pytree, leaves (C, S, B, ...) — stacked_epochs output
+      valid:       (C, S) bool — padded-step mask
+      rngs:        (C, 2) uint32 — per-client fold of the round RNG
+      w_mat:       (E, C) fp32 — normalized per-edge aggregation rows
+
+    and ``agg_stack`` is the pytree of edge-aggregated models with a
+    leading (E,) axis, ``losses`` the (C,) per-client mean local loss.
+    """
+    lambdas = depth_lambdas(groups, fl.lambda0) if (sparse and groups) else None
+
+    def loss_fn(params, batch, rng):
+        loss = model.loss_fn(params, cfg, batch, rng)
+        if sparse and groups:
+            loss = loss + omega(params, groups, lambdas)
+        return loss
+
+    def train_one(params, opt_state, batches, valid, rng, masked):
+        def body(carry, xs):
+            p, o, r = carry
+            batch, v = xs
+            r, sub = jax.random.split(r)
+            loss, grads = jax.value_and_grad(loss_fn)(p, batch, sub)
+            new_p, new_o = adam_update(grads, o, p, lr=lr, grad_clip=1.0)
+            if masked:
+                # ragged clients: padded steps must be no-ops
+                keep = lambda new, old: jnp.where(v, new, old)
+                new_p = jax.tree.map(keep, new_p, p)
+                new_o = jax.tree.map(keep, new_o, o)
+                loss = jnp.where(v, loss, 0.0)
+            return (new_p, new_o, r), loss
+        # unroll: XLA:CPU runs conv/dot thunks inside a while-loop body
+        # without the runtime thread pool; block-unrolling a few steps
+        # amortizes that penalty at modest compile-time cost (full
+        # unroll explodes compile time for long rounds)
+        (params, _, _), losses = jax.lax.scan(
+            body, (params, opt_state, rng), (batches, valid),
+            unroll=min(unroll, valid.shape[0]))
+        n_valid = jnp.maximum(jnp.sum(valid), 1) if masked \
+            else valid.shape[0]
+        return params, jnp.sum(losses) / n_valid
+
+    @partial(jax.jit, static_argnames=("masked",))
+    def engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
+               masked: bool = True):
+        start = jax.tree.map(lambda leaf: leaf[edge_idx], edge_params)
+        # one zero-tree, shared across all vmapped clients (in_axes=None)
+        opt_zero = adam_init(jax.tree.map(lambda leaf: leaf[0], edge_params))
+        trained, losses = jax.vmap(
+            lambda p, o, b, v, r: train_one(p, o, b, v, r, masked),
+            in_axes=(0, None, 0, 0, 0))(
+                start, opt_zero, batches, valid, rngs)
+        agg = jax.tree.map(lambda leaf: combine_leaf(leaf, w_mat), trained)
+        return agg, losses
+
+    return engine
+
+
+def stack_clients(per_client_batches, per_client_valid):
+    """Host-side stack of stacked_epochs outputs onto a client axis."""
+    keys = per_client_batches[0].keys()
+    batches = {k: jnp.asarray(np.stack([b[k] for b in per_client_batches]))
+               for k in keys}
+    valid = jnp.asarray(np.stack(per_client_valid))
+    return batches, valid
+
+
+def uniform_batch_shape(clients) -> Optional[tuple]:
+    """Common (B, H, W, C) batch shape across clients, or None if ragged.
+
+    The vectorized engine needs a shape-static client axis; clients whose
+    batch size differs (len(data) < batch_size somewhere) fall back to
+    the sequential path.
+    """
+    shapes = {(c.data.batch_size,) + c.data.images.shape[1:]
+              for c in clients}
+    return shapes.pop() if len(shapes) == 1 else None

@@ -18,11 +18,41 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+if hasattr(jax, "shard_map"):           # public API, jax >= 0.6
+    _shard_map = jax.shard_map
+else:                                   # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def _sh_weight(n, mu, a: float, b: float):
     return jnp.maximum(n + a * mu + b, 0.0)
+
+
+def shard_clients(tree, mesh, axis: str = "data"):
+    """Lay the leading client axis of every leaf over one mesh axis.
+
+    This is the bridge between the vectorized round engine
+    (repro/fl/engine.py) and the TPU topology: the engine's stacked
+    client axis is placed over ``axis`` so jit's partitioner runs each
+    device's client slice locally — the vmapped local training becomes
+    data parallelism for free, and the fused (E, C) aggregation einsum
+    lowers to the ICI all-reduce of ``hierarchical_aggregate``.
+
+    Leaves whose leading dim does not divide the axis size (or a None
+    mesh) are returned unsharded, so the CPU/1-device path is a no-op.
+    """
+    if mesh is None or axis not in mesh.axis_names:
+        return tree
+    n_dev = mesh.shape[axis]
+
+    def put(leaf):
+        if leaf.ndim == 0 or leaf.shape[0] % n_dev != 0:
+            return leaf
+        spec = P(*((axis,) + (None,) * (leaf.ndim - 1)))
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+    return jax.tree.map(put, tree)
 
 
 def hierarchical_aggregate(params, n_samples, sh_score, *, mesh,
@@ -64,7 +94,7 @@ def hierarchical_aggregate(params, n_samples, sh_score, *, mesh,
         P(*((spec_axes,) + (None,) * (leaf.ndim - 1))) if leaf.ndim else P()
         for leaf in leaves)
     # client replicas are stacked on a leading axis sharded over the tiers
-    out = jax.shard_map(
+    out = _shard_map(
         local, mesh=mesh,
         in_specs=(leaf_specs, P(spec_axes), P(spec_axes)),
         out_specs=leaf_specs,

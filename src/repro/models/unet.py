@@ -29,10 +29,39 @@ def conv_init(key, kh, kw, cin, cout, scale=1.0):
     return {"w": w.astype(jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
 
 
+def _same_pads(size: int, k: int, stride: int):
+    out = -(-size // stride)
+    pad = max((out - 1) * stride + k - size, 0)
+    return out, (pad // 2, pad - pad // 2)
+
+
 def conv(p, x, stride=1, padding="SAME"):
-    y = jax.lax.conv_general_dilated(
-        x, p["w"], window_strides=(stride, stride), padding=padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    """SAME conv lowered as im2col + einsum (matches lax.conv numerics
+    to fp32 tolerance).
+
+    The einsum formulation matters for the vectorized round engine
+    (repro/fl/engine.py): under vmap the conv WEIGHTS carry a client
+    axis, which XLA:CPU executes as a pathologically slow batched-
+    filter convolution — and conv thunks inside lax.scan additionally
+    lose the runtime thread pool.  As an einsum it batches into plain
+    GEMMs, which stay fast both vmapped and inside scan.
+    """
+    if padding != "SAME":
+        raise ValueError(f"im2col conv supports SAME padding only, "
+                         f"got {padding!r}")
+    w = p["w"]
+    kh, kw, cin, cout = w.shape
+    if kh == kw == 1 and stride == 1:
+        return jnp.einsum("bhwc,cd->bhwd", x, w[0, 0]) + p["b"]
+    H, W = x.shape[1], x.shape[2]
+    oh, (ph0, ph1) = _same_pads(H, kh, stride)
+    ow, (pw0, pw1) = _same_pads(W, kw, stride)
+    xp = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+    cols = [xp[:, di:di + stride * (oh - 1) + 1:stride,
+               dj:dj + stride * (ow - 1) + 1:stride, :]
+            for di in range(kh) for dj in range(kw)]
+    patches = jnp.stack(cols, axis=3)            # (B, oh, ow, kh*kw, cin)
+    y = jnp.einsum("bhwkc,kcd->bhwd", patches, w.reshape(kh * kw, cin, cout))
     return y + p["b"]
 
 

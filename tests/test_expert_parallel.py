@@ -8,6 +8,19 @@ import sys
 
 import pytest
 
+# JAX_PLATFORMS=cpu is load-bearing: on images that bundle libtpu,
+# dropping it makes backend discovery poll the GCP metadata server with
+# 30-retry backoff — the subprocess hangs for minutes before any test
+# code runs.
+_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+        "JAX_PLATFORMS": "cpu"}
+
+
+def _run(script: str) -> subprocess.CompletedProcess:
+    return subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=600,
+                          env=_ENV)
+
 _SCRIPT = r"""
 import os
 os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
@@ -49,10 +62,7 @@ print('EP_OK', diff, diff1)
 
 
 def test_expert_parallel_matches_baseline():
-    res = subprocess.run([sys.executable, "-c", _SCRIPT],
-                         capture_output=True, text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+    res = _run(_SCRIPT)
     assert "EP_OK" in res.stdout, res.stdout + res.stderr
 
 
@@ -79,8 +89,5 @@ print('FED_OK')
 
 
 def test_hierarchical_aggregate_tpu_mapping():
-    res = subprocess.run([sys.executable, "-c", _FED_SCRIPT],
-                         capture_output=True, text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+    res = _run(_FED_SCRIPT)
     assert "FED_OK" in res.stdout, res.stdout + res.stderr

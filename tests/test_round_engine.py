@@ -1,0 +1,109 @@
+"""Vectorized round engine: equivalence with the sequential reference,
+stacked-epoch pipeline, and mixed-dtype aggregation regression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SMOKE_UNET
+from repro.configs.base import FLConfig
+from repro.core.aggregation import weighted_average
+from repro.core.hfl import FedPhD
+from repro.data import SMOKE_DATA, ClientData, make_dataset, shards_per_client
+from repro.fl.client import Client
+from repro.fl.engine import uniform_batch_shape
+
+
+def make_clients(n=4, batch_size=16):
+    """Fresh clients each call: ClientData holds a stateful shuffle RNG,
+    so both engines must consume it from the same starting state."""
+    images, labels = make_dataset(SMOKE_DATA, seed=0)
+    parts = shards_per_client(labels, num_clients=n, classes_per_client=1,
+                              seed=0)
+    return [Client(i, ClientData(images[p], labels[p],
+                                 batch_size=batch_size, seed=i),
+                   SMOKE_DATA.num_classes) for i, p in enumerate(parts)]
+
+
+FL = FLConfig(num_clients=4, num_edges=2, local_epochs=1, edge_agg_every=1,
+              cloud_agg_every=2, rounds=4, sparse_rounds=2, prune_ratio=0.44,
+              sh_a=1000.0)
+
+
+def test_engine_equivalence_through_prune():
+    """2-edge/4-client: identical params (atol 1e-5) and identical
+    comm_gb across the sparse -> prune -> plain transition at r = R_s."""
+    seq = FedPhD(SMOKE_UNET, FL, make_clients(), rng_seed=0,
+                 engine="sequential")
+    h_seq, _ = seq.run(4)
+    vec = FedPhD(SMOKE_UNET, FL, make_clients(), rng_seed=0,
+                 engine="vectorized")
+    h_vec, _ = vec.run(4)
+
+    assert any(h.pruned for h in h_seq), "prune transition must be covered"
+    for a, b in zip(h_seq, h_vec):
+        assert a.comm_gb == b.comm_gb
+        assert a.pruned == b.pruned
+        assert np.isclose(a.loss, b.loss, atol=1e-4)
+    for x, y in zip(jax.tree.leaves(seq.params), jax.tree.leaves(vec.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_stacked_epochs_lockstep_with_epoch():
+    images, labels = make_dataset(SMOKE_DATA, seed=3)
+    a = ClientData(images[:40], labels[:40], batch_size=8, seed=7)
+    b = ClientData(images[:40], labels[:40], batch_size=8, seed=7)
+    ref = [bt for _ in range(2) for bt in a.epoch()]
+    stacked, valid = b.stacked_epochs(2, steps=len(ref) + 3)
+    assert valid.sum() == len(ref) and not valid[len(ref):].any()
+    for i, bt in enumerate(ref):
+        np.testing.assert_array_equal(stacked["images"][i], bt["images"])
+        np.testing.assert_array_equal(stacked["labels"][i], bt["labels"])
+    # padding repeats the last real batch (masked out by the engine)
+    np.testing.assert_array_equal(stacked["images"][-1], ref[-1]["images"])
+    with pytest.raises(ValueError):
+        b.stacked_epochs(1, steps=1)
+
+
+def test_uniform_batch_shape_detects_ragged():
+    cls = make_clients(4, batch_size=16)
+    assert uniform_batch_shape(cls) is not None
+    ragged = make_clients(4, batch_size=16)
+    ragged[0].data.batch_size = 8
+    assert uniform_batch_shape(ragged) is None
+
+
+def test_engine_vectorized_raises_on_ragged():
+    cls = make_clients(4, batch_size=16)
+    cls[0].data.batch_size = 8
+    trainer = FedPhD(SMOKE_UNET, FL, cls, rng_seed=0, engine="vectorized")
+    with pytest.raises(ValueError):
+        trainer.run_round(1)
+
+
+def test_engine_auto_falls_back_on_ragged():
+    cls = make_clients(4, batch_size=16)
+    cls[0].data.batch_size = 8
+    trainer = FedPhD(SMOKE_UNET, FL, cls, rng_seed=0, engine="auto")
+    rec = trainer.run_round(1)
+    assert np.isfinite(rec.loss)
+
+
+def test_weighted_average_mixed_dtypes():
+    """fp32 accumulation for low-precision leaves; integer leaves (Adam
+    t) round-trip instead of truncating to zero."""
+    t1 = {"w": jnp.asarray([1.0, 2.0], jnp.bfloat16),
+          "t": jnp.asarray(7, jnp.int32),
+          "f": np.asarray([0.5, 0.5], np.float32)}
+    t2 = {"w": jnp.asarray([3.0, 6.0], jnp.bfloat16),
+          "t": jnp.asarray(7, jnp.int32),
+          "f": np.asarray([1.5, 2.5], np.float32)}
+    out = weighted_average([t1, t2], [1.0, 1.0])
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out["w"], np.float32), [2.0, 4.0])
+    # identical step counters survive averaging exactly
+    assert out["t"].dtype == jnp.int32 and int(out["t"]) == 7
+    np.testing.assert_allclose(np.asarray(out["f"]), [1.0, 1.5])
+    # skewed integer weights round to nearest, not truncate
+    out2 = weighted_average([t1, t2], [1.0, 3.0])
+    assert int(out2["t"]) == 7
