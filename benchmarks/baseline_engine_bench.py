@@ -1,0 +1,92 @@
+"""Flat-baseline round latency: sequential reference vs vectorized
+engine (repro/fl/baselines.py FlatTrainer) for the two ctx-heavy
+methods — FedProx (anchor-params prox term) and SCAFFOLD (control
+variates + device-side c_i+ update) — on the acceptance config:
+8 clients, CPU, dispatch-bound micro U-Net.
+
+Same protocol as round_engine_bench: per-method trainers are stepped
+round-by-round with the two engines interleaved, and medians compared,
+so the ratio is robust to background CPU-throughput drift.  The flat
+vectorized path runs the whole round (vmap clients x scan steps, fused
+FedAvg einsum, SCAFFOLD delta mean on device) as ONE jitted program
+with a single loss sync; the sequential path pays a jitted-call
+dispatch + float(loss) host sync per batch and per-leaf Python
+aggregation per round.  Expected speedup >= 2x (acceptance floor);
+typically ~8-11x on the 2-core CI box.
+
+Note the flat engines compile with unroll=1 (bit-stability with the
+sequential reference — see fl/baselines.py), so this bench also guards
+the scan-carried step cost on XLA:CPU.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import SMOKE_UNET
+from repro.configs.base import FLConfig
+from repro.data import ClientData, shards_per_client
+from repro.data.synthetic import DatasetSpec, make_dataset
+from repro.fl.baselines import FlatTrainer
+from repro.fl.client import Client
+
+NUM_CLIENTS = 8
+BATCH = 1
+TIMED_ROUNDS = 4
+METHODS = ("fedprox", "scaffold")
+
+MICRO_UNET = SMOKE_UNET.replace(name="ddpm-unet-micro", image_size=4,
+                                base_channels=8, channel_mults=(1,),
+                                num_res_blocks=1, attn_resolutions=())
+MICRO_DATA = DatasetSpec("bench-micro", num_classes=4, image_size=4,
+                         samples_per_class=64)
+
+
+def _clients(seed: int = 0):
+    images, labels = make_dataset(MICRO_DATA, seed=seed)
+    parts = shards_per_client(labels, num_clients=NUM_CLIENTS,
+                              classes_per_client=1, seed=seed)
+    return [Client(i, ClientData(images[p], labels[p], batch_size=BATCH,
+                                 seed=i), MICRO_DATA.num_classes)
+            for i, p in enumerate(parts)]
+
+
+def _fl() -> FLConfig:
+    return FLConfig(num_clients=NUM_CLIENTS, num_edges=1, local_epochs=2,
+                    edge_agg_every=1, cloud_agg_every=10 ** 6,
+                    rounds=2 * TIMED_ROUNDS + 2, sh_a=1000.0)
+
+
+def main() -> None:
+    for method in METHODS:
+        seq = FlatTrainer(method, MICRO_UNET, _fl(), _clients(),
+                          rng_seed=0, engine="sequential")
+        vec = FlatTrainer(method, MICRO_UNET, _fl(), _clients(),
+                          rng_seed=0, engine="vectorized")
+        seq.run_round(1)                   # warmup: jit compile
+        vec.run_round(1)
+
+        t_seq, t_vec = [], []
+        r = 2
+        for _ in range(TIMED_ROUNDS):      # interleave against CPU drift
+            t0 = time.perf_counter()
+            seq.run_round(r)
+            t_seq.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            vec.run_round(r + 1)
+            t_vec.append(time.perf_counter() - t0)
+            r += 2
+
+        us_seq = float(np.median(t_seq)) * 1e6
+        us_vec = float(np.median(t_vec)) * 1e6
+        speedup = us_seq / max(us_vec, 1e-9)
+        shape = f"C={NUM_CLIENTS};B={BATCH}"
+        emit(f"baseline_engine/{method}/sequential", us_seq, shape)
+        emit(f"baseline_engine/{method}/vectorized", us_vec,
+             f"{shape};speedup={speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

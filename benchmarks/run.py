@@ -20,10 +20,11 @@ def main() -> None:
                     help="skip the FL-training quality tables")
     args = ap.parse_args()
 
-    from benchmarks import (fig1_divergence, fig5_selection, kernels_bench,
-                            roofline_report, round_engine_bench,
-                            table1_quality, table3_pruning,
-                            table4_efficiency, table5_scalability)
+    from benchmarks import (baseline_engine_bench, fig1_divergence,
+                            fig5_selection, kernels_bench, roofline_report,
+                            round_engine_bench, table1_quality,
+                            table3_pruning, table4_efficiency,
+                            table5_scalability)
 
     modules = {
         "table4": table4_efficiency,    # fast, exact accounting first
@@ -31,6 +32,7 @@ def main() -> None:
         "fig5": fig5_selection,
         "kernels": kernels_bench,
         "round_engine": round_engine_bench,
+        "baseline_engine": baseline_engine_bench,
         "roofline": roofline_report,
         "fig1": fig1_divergence,        # FL training (slow) last
         "table1": table1_quality,

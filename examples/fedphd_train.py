@@ -29,7 +29,11 @@ def main():
     ap.add_argument("--engine", default="auto",
                     choices=("auto", "vectorized", "sequential"),
                     help="round engine: one jitted vmap/scan program per "
-                         "round (vectorized) vs per-client loop")
+                         "round (vectorized) vs per-client loop; applies "
+                         "to FedPhD and the FedAvg baseline alike")
+    ap.add_argument("--persistent-opt", action="store_true",
+                    help="carry per-client Adam moments across rounds "
+                         "(off = paper semantics: fresh Adam per round)")
     args = ap.parse_args()
 
     if args.paper_scale:
@@ -67,7 +71,8 @@ def main():
     print(f"== FedPhD ({fl.num_clients} clients, {fl.num_edges} edges, "
           f"r_e={fl.edge_agg_every}, r_g={fl.cloud_agg_every}) ==")
     trainer = FedPhD(cfg, fl, clients, rng_seed=args.seed,
-                     engine=args.engine)
+                     engine=args.engine,
+                     persistent_opt=args.persistent_opt)
     hist, _ = trainer.run()
     total_comm = sum(h.comm_gb for h in hist)
     print(f"final loss {hist[-1].loss:.4f}; params "
@@ -76,7 +81,8 @@ def main():
 
     print("== FedAvg baseline ==")
     res = run_flat_fl("fedavg", cfg, fl, clients, rounds=fl.rounds,
-                      rng_seed=args.seed)
+                      rng_seed=args.seed, engine=args.engine,
+                      persistent_opt=args.persistent_opt)
     total_comm_avg = sum(h["comm_gb"] for h in res.history)
     print(f"final loss {res.history[-1]['loss']:.4f}; "
           f"total comm {total_comm_avg:.3f} GB")

@@ -62,6 +62,12 @@ def weighted_average(param_trees: Sequence, weights: Sequence[float]):
     return weighted_average_stacked(stacked, w)
 
 
+def uniform_weights(n: int) -> np.ndarray:
+    """Unnormalized equal weights — ``normalize_weights`` turns them into
+    exactly 1/n (SCAFFOLD's unweighted control-variate mean)."""
+    return np.ones(n)
+
+
 def fedavg_weights(sample_counts: Sequence[int]) -> np.ndarray:
     """rho_n = D_n / D (Eq. 10)."""
     n = np.asarray(sample_counts, np.float64)

@@ -28,10 +28,11 @@ from repro.core.pruning import (build_groups, compact, l2_scores, make_masks,
                                 random_scores)
 from repro.core.selection import random_selection, select_edge
 from repro.core.sh_score import AccumulatedDistribution, sh_score, uniform_target
+from repro.data.pipeline import stack_round
 from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
-from repro.fl.engine import (make_round_engine, stack_clients,
-                             uniform_batch_shape)
+from repro.fl.engine import (make_round_engine, resolve_engine, route_engine,
+                             stacked_adam_init, tree_gather, tree_scatter)
 from repro.models import model
 from repro.optim import adam_init
 
@@ -57,8 +58,14 @@ class FedPhD:
             per round with fused on-device edge aggregation and a single
             loss sync (repro/fl/engine.py);
             "sequential" — the per-client Python reference loop;
-            "auto" (default) — vectorized whenever the selected clients
-            share a batch shape, sequential otherwise.
+            "auto" — vectorized whenever the selected clients share a
+            batch shape, sequential (with a one-time warning) otherwise;
+            None (default) — $FEDPHD_ENGINE if set, else "auto".
+    persistent_opt: carry per-client Adam moments across rounds in a
+            stacked (N, ...) device buffer, gathered/scattered by each
+            round's participation selection.  Off by default (the paper
+            restarts Adam every round); moments reset when pruning
+            changes the parameter shapes at r = R_s.
     mesh:   optional jax mesh; the stacked client axis of the vectorized
             engine is laid over ``client_axis`` (launch/federated.py).
     """
@@ -66,11 +73,10 @@ class FedPhD:
     def __init__(self, cfg: ModelConfig, fl: FLConfig, clients: List[Client],
                  *, rng_seed: int = 0, selection: str = "sh",
                  aggregation: str = "sh", prune: bool = True,
-                 lr: float = 2e-4, engine: str = "auto",
+                 lr: float = 2e-4, engine: Optional[str] = None,
+                 persistent_opt: bool = False,
                  mesh=None, client_axis: str = "data",
                  eval_fn: Optional[Callable] = None):
-        if engine not in ("auto", "vectorized", "sequential"):
-            raise ValueError(f"unknown engine {engine!r}")
         self.cfg = cfg
         self.fl = fl
         self.clients = clients
@@ -78,7 +84,9 @@ class FedPhD:
         self.aggregation = aggregation
         self.prune = prune
         self.lr = lr
-        self.engine = engine
+        self.engine, self._engine_strict = resolve_engine(engine)
+        self.persistent_opt = persistent_opt
+        self._warned_ragged = False
         self.mesh = mesh
         self.client_axis = client_axis
         self.eval_fn = eval_fn
@@ -133,6 +141,11 @@ class FedPhD:
         # every sequential round (the vectorized engine builds its own
         # in-program constant)
         self._opt_zero = adam_init(self.params)
+        # persistent per-client moments: a stacked (N, ...) buffer both
+        # engines gather/scatter by participation.  Rebuilt (i.e. reset
+        # to zeros) whenever pruning changes the parameter shapes.
+        self._opt_stack = stacked_adam_init(self.params, len(self.clients)) \
+            if self.persistent_opt else None
 
     # -- bookkeeping ----------------------------------------------------------
     def _param_count_m(self) -> float:
@@ -144,14 +157,10 @@ class FedPhD:
 
     # -- local training + edge aggregation (Alg. 1 lines 7-21) ---------------
     def _use_vectorized(self, round_clients) -> bool:
-        if self.engine == "sequential":
-            return False
-        uniform = uniform_batch_shape(round_clients) is not None
-        if self.engine == "vectorized" and not uniform:
-            raise ValueError("vectorized engine needs a uniform client "
-                             "batch shape; use engine='auto' or "
-                             "'sequential' for ragged clients")
-        return uniform
+        use, self._warned_ragged = route_engine(
+            self.engine, self._engine_strict, round_clients,
+            self._warned_ragged, "FedPhD")
+        return use
 
     def _local_and_edge_sequential(self, r, assignment, sparse_round, mbytes):
         """Reference path: one jitted step per batch, Python aggregation."""
@@ -167,9 +176,14 @@ class FedPhD:
             for cid in cids:
                 cl = self.clients[cid]
                 self.rng, sub = jax.random.split(self.rng)
-                p, _, loss = run_local(step_fn, edge_model, cl,
-                                       epochs=fl.local_epochs, rng=sub,
-                                       opt_state=self._opt_zero)
+                opt_in = tree_gather(self._opt_stack, int(cid)) \
+                    if self.persistent_opt else self._opt_zero
+                p, opt_out, loss = run_local(step_fn, edge_model, cl,
+                                             epochs=fl.local_epochs, rng=sub,
+                                             opt_state=opt_in)
+                if self.persistent_opt:
+                    self._opt_stack = tree_scatter(self._opt_stack,
+                                                   int(cid), opt_out)
                 client_models.append(p)
                 counts.append(cl.n_samples)
                 mus.append(sh_score(cl.q_n, self.q_u))
@@ -199,15 +213,12 @@ class FedPhD:
             self.rng, sub = jax.random.split(self.rng)
             subs.append(sub)
         clients = [self.clients[cid] for _, cid in order]
-        steps = max(cl.data.steps_per_epoch for cl in clients) \
-            * fl.local_epochs
-        per = [cl.data.stacked_epochs(fl.local_epochs, steps)
-               for cl in clients]
         # masking is identity when no client needed padding — elide the
         # per-step select ops at trace time in that (common) case
-        masked = not all(v.all() for _, v in per)
-        batches, valid = stack_clients([b for b, _ in per],
-                                       [v for _, v in per])
+        batches, valid, masked = stack_round([cl.data for cl in clients],
+                                             fl.local_epochs)
+        batches = {k: jnp.asarray(v) for k, v in batches.items()}
+        valid = jnp.asarray(valid)
         rngs = jnp.stack(subs)
         edge_models = getattr(self, "_edge_models", {})
         edge_stack = jax.tree.map(
@@ -235,9 +246,17 @@ class FedPhD:
                 for t in (batches, valid, rngs))
 
         engine = self._engine_sparse if sparse_round else self._engine_plain
-        agg_stack, losses = engine(edge_stack, edge_idx, batches, valid,
-                                   rngs, jnp.asarray(w_mat), masked=masked)
-        losses = np.asarray(losses)          # the round's ONE host sync
+        idx_arr = np.asarray([cid for _, cid in order])
+        out = engine(edge_stack, edge_idx, batches, valid, rngs,
+                     jnp.asarray(w_mat),
+                     opt_states=(tree_gather(self._opt_stack, idx_arr)
+                                 if self.persistent_opt else None),
+                     masked=masked, per_client_opt=self.persistent_opt)
+        if self.persistent_opt:
+            self._opt_stack = tree_scatter(self._opt_stack, idx_arr,
+                                           out["opt"])
+        agg_stack = out["agg"]
+        losses = np.asarray(out["losses"])   # the round's ONE host sync
 
         round_losses: List[float] = []
         comm_bytes = 0.0

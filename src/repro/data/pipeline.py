@@ -1,7 +1,7 @@
 """Minimal batching pipeline for client-local training."""
 from __future__ import annotations
 
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator, Sequence, Tuple
 
 import numpy as np
 
@@ -64,3 +64,22 @@ class ClientData:
                 produced += 1
                 if produced >= num:
                     return
+
+
+def stack_round(datas: Sequence[ClientData], num_epochs: int
+                ) -> Tuple[Dict[str, np.ndarray], np.ndarray, bool]:
+    """Stack every client's ``stacked_epochs`` onto a leading client axis.
+
+    Pads all clients to the round's max step count and returns
+    ``(batches, valid, masked)``: every ``batches`` leaf has shape
+    (C, S, B, ...), ``valid`` is the (C, S) padded-step mask, and
+    ``masked`` is False when no client needed padding — the engine uses
+    that to elide the per-step select ops at trace time (the common
+    uniform-client case).  Requires a uniform per-client batch shape
+    (callers gate on ``repro.fl.engine.uniform_batch_shape``).
+    """
+    steps = max(d.steps_per_epoch for d in datas) * num_epochs
+    per = [d.stacked_epochs(num_epochs, steps) for d in datas]
+    batches = {k: np.stack([b[k] for b, _ in per]) for k in per[0][0]}
+    valid = np.stack([v for _, v in per])
+    return batches, valid, not bool(valid.all())

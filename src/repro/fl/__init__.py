@@ -1,9 +1,17 @@
-from repro.fl.client import Client, make_local_step, run_local
+from repro.fl.client import (Client, make_local_step, make_loss_fn,
+                             run_local, scaffold_correction)
 from repro.fl.comm import CommModel
-from repro.fl.baselines import run_flat_fl, run_centralized, FlatFLResult
-from repro.fl.engine import (make_round_engine, stack_clients,
-                             uniform_batch_shape)
+from repro.fl.baselines import (FlatFLResult, FlatTrainer, run_centralized,
+                                run_flat_fl, shared_fraction)
+from repro.fl.engine import (CTX_AXES, ENGINES, make_round_engine,
+                             make_train_one, resolve_engine, route_engine,
+                             stack_trees, stacked_adam_init, tree_gather,
+                             tree_scatter, uniform_batch_shape, unstack_tree)
 
-__all__ = ["Client", "make_local_step", "run_local", "CommModel",
-           "run_flat_fl", "run_centralized", "FlatFLResult",
-           "make_round_engine", "stack_clients", "uniform_batch_shape"]
+__all__ = ["Client", "make_local_step", "make_loss_fn", "run_local",
+           "scaffold_correction", "CommModel", "run_flat_fl",
+           "run_centralized", "FlatFLResult", "FlatTrainer",
+           "shared_fraction", "CTX_AXES", "ENGINES", "make_round_engine",
+           "make_train_one", "resolve_engine", "route_engine", "stack_trees",
+           "stacked_adam_init", "tree_gather", "tree_scatter",
+           "uniform_batch_shape", "unstack_tree"]

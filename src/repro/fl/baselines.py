@@ -3,6 +3,30 @@
 FedAvg [6], FedProx [21], FedDiffuse [15] (partial-parameter updates),
 MOON [22] (model-contrastive), SCAFFOLD [23] (control variates), plus
 centralized training.  All share the client substrate in fl/client.py.
+
+Like FedPhD's hierarchical loop, every baseline runs on either of two
+interchangeable engines (``run_flat_fl(..., engine=)``):
+
+  "sequential"  — the numerical reference: one jitted step per batch,
+                  Python-side aggregation (fl/client.py:run_local);
+  "vectorized"  — ONE jitted program per round (vmap clients x scan
+                  batches, fused FedAvg einsum, device-side SCAFFOLD
+                  c_i+ update and delta mean) via the E=1 special case
+                  of repro.fl.engine.make_round_engine, with the
+                  method's per-client anchors (FedProx/MOON params,
+                  SCAFFOLD control variates, FedDiffuse local subtrees)
+                  stacked into a (C, ...) ctx pytree;
+  "auto"        — vectorized whenever the selected clients share a
+                  batch shape, sequential (with a one-time warning)
+                  otherwise.
+
+Method state that persists across rounds (MOON's previous local
+models, FedDiffuse's local parameter subtrees, SCAFFOLD's c_i, and —
+with ``persistent_opt`` — per-client Adam moments) lives in stacked
+device buffers with a leading (N,) client axis, gathered/scattered by
+the round's participation selection; both engines read and write the
+same buffers, so "auto" may switch engines between rounds without
+losing state.
 """
 from __future__ import annotations
 
@@ -14,11 +38,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig, ModelConfig
-from repro.core.aggregation import aggregate_fedavg
+from repro.core.aggregation import (aggregate_fedavg, fedavg_weights,
+                                    normalize_weights, uniform_weights,
+                                    weighted_average)
+from repro.data.pipeline import stack_round
 from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
+from repro.fl.engine import (make_round_engine, resolve_engine, route_engine,
+                             stacked_adam_init, tree_gather, tree_scatter)
 from repro.models import model
 from repro.optim import adam_init, adam_update
+
+FLAT_METHODS = ("fedavg", "fedprox", "feddiffuse", "moon", "scaffold")
 
 
 # ---------------------------------------------------------------------------
@@ -60,101 +91,277 @@ class FlatFLResult:
     params: Dict
 
 
-def run_flat_fl(method: str, cfg: ModelConfig, fl: FLConfig,
-                clients: List[Client], *, rounds: Optional[int] = None,
-                lr: float = 2e-4, rng_seed: int = 0,
-                eval_fn: Optional[Callable] = None,
-                eval_every: int = 0) -> FlatFLResult:
-    """method in {fedavg, fedprox, feddiffuse, moon, scaffold}."""
-    assert method in ("fedavg", "fedprox", "feddiffuse", "moon", "scaffold")
-    rounds = rounds or fl.rounds
-    np_rng = np.random.default_rng(rng_seed)
-    rng = jax.random.PRNGKey(rng_seed)
-    rng, sub = jax.random.split(rng)
-    params = model.init(sub, cfg)
-    comm = CommModel()
-    mbytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+def _rows_or_default(rows, default_tree, seen_rows):
+    """Per-leaf select: stored row if the client has participated
+    before, the current global value otherwise (the sequential path's
+    ``dict.get(cid, params)`` semantics, vectorized)."""
+    m = jnp.asarray(np.asarray(seen_rows, bool))
+    pick = lambda r, g: jnp.where(m.reshape((-1,) + (1,) * g.ndim),
+                                  r, g[None])
+    return jax.tree.map(pick, rows, default_tree)
 
-    step_fn = make_local_step(cfg, fl, method=method, lr=lr)
-    opt_zero = adam_init(params)   # one zero-tree, reused by every client
 
-    # method-specific state
-    zeros_like = lambda t: jax.tree.map(
-        lambda p: jnp.zeros_like(p, jnp.float32), t)
-    c_global = zeros_like(params) if method == "scaffold" else None
-    c_locals = {c.cid: zeros_like(params) for c in clients} \
-        if method == "scaffold" else {}
-    prev_locals: Dict[int, Dict] = {}      # MOON
-    local_parts: Dict[int, Dict] = {}      # FedDiffuse
+class FlatTrainer:
+    """Round-stepped flat-FL trainer (the substrate of ``run_flat_fl``;
+    exposed so benchmarks can interleave engines round-by-round)."""
 
-    history: List[Dict] = []
-    for r in range(1, rounds + 1):
-        C = max(1, round(fl.participation * len(clients)))
-        sel = np_rng.choice(len(clients), size=C, replace=False)
-        client_models, counts, losses = [], [], []
-        c_deltas = []
-        for cid in sel:
-            cl = clients[cid]
+    def __init__(self, method: str, cfg: ModelConfig, fl: FLConfig,
+                 clients: List[Client], *, lr: float = 2e-4,
+                 rng_seed: int = 0, engine: Optional[str] = None,
+                 persistent_opt: bool = False):
+        assert method in FLAT_METHODS
+        self.method = method
+        self.cfg = cfg
+        self.fl = fl
+        self.clients = clients
+        self.lr = lr
+        self.engine, self._engine_strict = resolve_engine(engine)
+        self.persistent_opt = persistent_opt
+        self._warned_ragged = False
+
+        self.np_rng = np.random.default_rng(rng_seed)
+        self.rng = jax.random.PRNGKey(rng_seed)
+        self.rng, sub = jax.random.split(self.rng)
+        self.params = model.init(sub, cfg)
+        self.comm = CommModel()
+        self.mbytes = sum(x.size * x.dtype.itemsize
+                          for x in jax.tree.leaves(self.params))
+
+        self.step_fn = make_local_step(cfg, fl, method=method, lr=lr)
+        self._opt_zero = adam_init(self.params)  # shared fresh-Adam tree
+        # unroll=1: block-unrolling the scan lets XLA fuse ACROSS local
+        # steps, which reassociates fp ops enough that FedProx/SCAFFOLD
+        # Adam trajectories drift past atol 1e-5 from the sequential
+        # reference; step-at-a-time keeps the baselines bit-stable (the
+        # speedup is dispatch-bound anyway — see baseline_engine_bench).
+        # Built unconditionally (memoized, jit-compiled only on first
+        # call) so a trainer may switch self.engine between rounds.
+        self._round_engine = make_round_engine(cfg, fl, method=method,
+                                               lr=lr, unroll=1)
+
+        n = len(clients)
+        self._opt_stack = stacked_adam_init(self.params, n) \
+            if persistent_opt else None
+        zeros_like = lambda t: jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), t)
+        stack_like = lambda t: jax.tree.map(
+            lambda p: jnp.zeros((n,) + p.shape, p.dtype), t)
+        stack_f32 = lambda t: jax.tree.map(
+            lambda p: jnp.zeros((n,) + p.shape, jnp.float32), t)
+        # method state, all with a leading (N,) client axis; `seen`
+        # marks clients that have participated (unseen rows default to
+        # the current global model, matching the reference dict.get)
+        self.c_global = zeros_like(self.params) \
+            if method == "scaffold" else None
+        self._c_local_stack = stack_f32(self.params) \
+            if method == "scaffold" else None
+        self._prev_stack = stack_like(self.params) \
+            if method == "moon" else None
+        self._local_stack = stack_like(_split_shared(self.params, cfg)[1]) \
+            if method == "feddiffuse" else None
+        self._seen = np.zeros(n, bool)
+
+        self.history: List[Dict] = []
+
+    # -- engine routing ------------------------------------------------------
+    def _use_vectorized(self, round_clients) -> bool:
+        use, self._warned_ragged = route_engine(
+            self.engine, self._engine_strict, round_clients,
+            self._warned_ragged, "run_flat_fl")
+        return use
+
+    # -- reference path ------------------------------------------------------
+    def _round_sequential(self, sel, subs):
+        method, fl, cfg, params = self.method, self.fl, self.cfg, self.params
+        client_models, counts, losses, c_deltas = [], [], [], []
+        for i, cid in enumerate(sel):
+            cid = int(cid)
+            cl = self.clients[cid]
             start = params
-            if method == "feddiffuse" and cid in local_parts:
+            if method == "feddiffuse" and self._seen[cid]:
                 shared, _ = _split_shared(params, cfg)
-                start = _merge(shared, local_parts[cid])
+                start = _merge(shared, tree_gather(self._local_stack, cid))
             ctx = {}
             if method in ("fedprox", "moon"):
                 ctx["global_params"] = params
             if method == "moon":
-                ctx["prev_params"] = prev_locals.get(cid, params)
+                ctx["prev_params"] = tree_gather(self._prev_stack, cid) \
+                    if self._seen[cid] else params
             if method == "scaffold":
-                ctx["c_local"] = c_locals[cid]
-                ctx["c_global"] = c_global
-            rng, sub = jax.random.split(rng)
-            new_p, _, loss = run_local(step_fn, start, cl,
-                                       epochs=fl.local_epochs, rng=sub,
-                                       ctx=ctx, opt_state=opt_zero)
+                ctx["c_local"] = tree_gather(self._c_local_stack, cid)
+                ctx["c_global"] = self.c_global
+            opt_in = tree_gather(self._opt_stack, cid) \
+                if self.persistent_opt else self._opt_zero
+            new_p, opt_out, loss = run_local(self.step_fn, start, cl,
+                                             epochs=fl.local_epochs,
+                                             rng=subs[i], ctx=ctx,
+                                             opt_state=opt_in)
             losses.append(loss)
             counts.append(cl.n_samples)
+            if self.persistent_opt:
+                self._opt_stack = tree_scatter(self._opt_stack, cid, opt_out)
             if method == "moon":
-                prev_locals[cid] = new_p
+                self._prev_stack = tree_scatter(self._prev_stack, cid, new_p)
+                self._seen[cid] = True
             if method == "feddiffuse":
                 shared, local = _split_shared(new_p, cfg)
-                local_parts[cid] = local
+                self._local_stack = tree_scatter(self._local_stack, cid,
+                                                 local)
+                self._seen[cid] = True
                 client_models.append(shared)
             else:
                 client_models.append(new_p)
             if method == "scaffold":
                 # c_i+ = c_i - c + (x - y_i) / (K * lr)
-                steps = fl.local_epochs * max(
-                    len(cl.data) // cl.data.batch_size, 1)
-                scale = 1.0 / (steps * lr)
+                steps = fl.local_epochs * cl.data.steps_per_epoch
+                scale = 1.0 / (steps * self.lr)
+                ci = ctx["c_local"]
                 new_ci = jax.tree.map(
-                    lambda ci, c, x, y: ci - c + scale
+                    lambda ci_, c, x, y: ci_ - c + scale
                     * (x.astype(jnp.float32) - y.astype(jnp.float32)),
-                    c_locals[cid], c_global, start, new_p)
-                c_deltas.append(jax.tree.map(lambda a, b: a - b, new_ci,
-                                             c_locals[cid]))
-                c_locals[cid] = new_ci
+                    ci, self.c_global, start, new_p)
+                c_deltas.append(jax.tree.map(lambda a, b: a - b, new_ci, ci))
+                self._c_local_stack = tree_scatter(self._c_local_stack, cid,
+                                                   new_ci)
 
         agg = aggregate_fedavg(client_models, counts)
         if method == "feddiffuse":
             _, local = _split_shared(params, cfg)
-            params = _merge(agg, local)
-            vol = mbytes * shared_fraction(params, cfg)
+            self.params = _merge(agg, local)
         else:
-            params = agg
-            vol = mbytes
+            self.params = agg
         if method == "scaffold":
-            mean_dc = aggregate_fedavg(c_deltas, [1] * len(c_deltas))
-            frac = len(sel) / len(clients)
-            c_global = jax.tree.map(lambda c, d: c + frac * d, c_global,
-                                    mean_dc)
-            vol = mbytes * 2  # model + control variate
-        comm_gb = comm.flat_fl_round(vol, len(sel)) / 1e9
+            mean_dc = weighted_average(c_deltas,
+                                       uniform_weights(len(c_deltas)))
+            frac = len(sel) / len(self.clients)
+            self.c_global = jax.tree.map(lambda c, d: c + frac * d,
+                                         self.c_global, mean_dc)
+        return losses
+
+    # -- device-resident path ------------------------------------------------
+    def _round_vectorized(self, sel, subs):
+        method, fl, cfg, params = self.method, self.fl, self.cfg, self.params
+        sel_arr = np.asarray(sel)
+        sel_clients = [self.clients[int(cid)] for cid in sel]
+        counts = [cl.n_samples for cl in sel_clients]
+
+        batches, valid, padded = stack_round([cl.data for cl in sel_clients],
+                                             fl.local_epochs)
+        batches = {k: jnp.asarray(v) for k, v in batches.items()}
+        valid = jnp.asarray(valid)
+        rngs = jnp.stack(subs)
+        # the flat topology is the E=1 special case of the edge engine
+        server = jax.tree.map(lambda leaf: leaf[None], params)
+        edge_idx = jnp.zeros((len(sel),), jnp.int32)
+        w_row = jnp.asarray(np.asarray(
+            normalize_weights(fedavg_weights(counts))[None], np.float32))
+
+        ctx = None
+        if method in ("fedprox", "moon"):
+            ctx = {"global_params": params}
+        if method == "moon":
+            rows = tree_gather(self._prev_stack, sel_arr)
+            ctx["prev_params"] = _rows_or_default(rows, params,
+                                                  self._seen[sel_arr])
+        if method == "feddiffuse":
+            _, local_g = _split_shared(params, cfg)
+            rows = tree_gather(self._local_stack, sel_arr)
+            ctx = {"local_params": _rows_or_default(rows, local_g,
+                                                    self._seen[sel_arr])}
+        if method == "scaffold":
+            steps = np.asarray([fl.local_epochs * cl.data.steps_per_epoch
+                                for cl in sel_clients], np.float64)
+            ctx = {"c_local": tree_gather(self._c_local_stack, sel_arr),
+                   "c_global": self.c_global,
+                   "scale": jnp.asarray(1.0 / (steps * self.lr),
+                                        jnp.float32)}
+
+        out = self._round_engine(
+            server, edge_idx, batches, valid, rngs, w_row, ctx=ctx,
+            opt_states=(tree_gather(self._opt_stack, sel_arr)
+                        if self.persistent_opt else None),
+            masked=padded, per_client_opt=self.persistent_opt)
+        losses = [float(x) for x in np.asarray(out["losses"])]  # ONE sync
+        agg = jax.tree.map(lambda leaf: leaf[0], out["agg"])
+
+        if self.persistent_opt:
+            self._opt_stack = tree_scatter(self._opt_stack, sel_arr,
+                                           out["opt"])
+        if method == "moon":
+            self._prev_stack = tree_scatter(self._prev_stack, sel_arr,
+                                            out["trained"])
+            self._seen[sel_arr] = True
+        if method == "feddiffuse":
+            shared_g, local_g = _split_shared(params, cfg)
+            trained_local = {k: out["trained"][k] for k in local_g}
+            self._local_stack = tree_scatter(self._local_stack, sel_arr,
+                                             trained_local)
+            self._seen[sel_arr] = True
+            # only the shared half of the fused aggregate is used; the
+            # server keeps its own local subtree (never communicated)
+            self.params = _merge({k: agg[k] for k in shared_g}, local_g)
+        else:
+            self.params = agg
+        if method == "scaffold":
+            self._c_local_stack = tree_scatter(self._c_local_stack, sel_arr,
+                                               out["c_new"])
+            frac = len(sel) / len(self.clients)
+            self.c_global = jax.tree.map(lambda c, d: c + frac * d,
+                                         self.c_global, out["dc_mean"])
+        return losses
+
+    # -- one round -----------------------------------------------------------
+    def run_round(self, r: int) -> Dict:
+        fl, method = self.fl, self.method
+        C = max(1, round(fl.participation * len(self.clients)))
+        sel = self.np_rng.choice(len(self.clients), size=C, replace=False)
+        # identical RNG folding on both paths: one split per selected
+        # client, in selection order
+        subs = []
+        for _ in range(C):
+            self.rng, sub = jax.random.split(self.rng)
+            subs.append(sub)
+
+        if self._use_vectorized([self.clients[int(c)] for c in sel]):
+            losses = self._round_vectorized(sel, subs)
+        else:
+            losses = self._round_sequential(sel, subs)
+
+        if method == "feddiffuse":
+            vol = self.mbytes * shared_fraction(self.params, self.cfg)
+        elif method == "scaffold":
+            vol = self.mbytes * 2  # model + control variate
+        else:
+            vol = self.mbytes
         rec = {"round": r, "loss": float(np.mean(losses)),
-               "comm_gb": comm_gb}
+               "comm_gb": self.comm.flat_fl_round(vol, len(sel)) / 1e9,
+               "selected": [int(c) for c in sel]}
+        self.history.append(rec)
+        return rec
+
+
+def run_flat_fl(method: str, cfg: ModelConfig, fl: FLConfig,
+                clients: List[Client], *, rounds: Optional[int] = None,
+                lr: float = 2e-4, rng_seed: int = 0,
+                eval_fn: Optional[Callable] = None,
+                eval_every: int = 0, engine: Optional[str] = None,
+                persistent_opt: bool = False) -> FlatFLResult:
+    """method in {fedavg, fedprox, feddiffuse, moon, scaffold}.
+
+    engine: "vectorized" | "sequential" | "auto" (None = $FEDPHD_ENGINE
+    or auto); persistent_opt carries per-client Adam moments across
+    rounds (off by default — the paper's baselines restart Adam each
+    round).
+    """
+    trainer = FlatTrainer(method, cfg, fl, clients, lr=lr,
+                          rng_seed=rng_seed, engine=engine,
+                          persistent_opt=persistent_opt)
+    rounds = rounds or fl.rounds
+    for r in range(1, rounds + 1):
+        rec = trainer.run_round(r)
         if eval_fn and eval_every and r % eval_every == 0:
-            rec["eval"] = eval_fn(params, cfg, r)
-        history.append(rec)
-    return FlatFLResult(history=history, params=params)
+            rec["eval"] = eval_fn(trainer.params, cfg, r)
+    return FlatFLResult(history=trainer.history, params=trainer.params)
 
 
 def run_centralized(cfg: ModelConfig, images: np.ndarray, *, steps: int,

@@ -59,12 +59,15 @@ def _cosine(a, b):
     return num / den
 
 
-def make_local_step(cfg: ModelConfig, fl: FLConfig, *, method: str = "fedphd",
-                    sparse: bool = False, groups=None, lr: float = 2e-4):
-    """Returns jitted step(params, opt_state, batch, rng, ctx) -> (...)
+def make_loss_fn(cfg: ModelConfig, fl: FLConfig, *, method: str = "fedphd",
+                 sparse: bool = False, groups=None):
+    """Method-parameterized local loss (the SINGLE definition both the
+    sequential per-batch step and the vectorized round engine close
+    over, so the two paths are equivalent by construction).
 
-    ctx: dict with optional "global_params", "prev_params", "c_local",
-    "c_global" (present per method; static structure per jit).
+    Returns ``loss_fn(params, batch, rng, ctx)``; ctx carries the
+    method's anchors ("global_params", "prev_params", "c_local",
+    "c_global", ... — static structure per jit).
     """
     lambdas = depth_lambdas(groups, fl.lambda0) if (sparse and groups) else None
 
@@ -86,12 +89,30 @@ def make_local_step(cfg: ModelConfig, fl: FLConfig, *, method: str = "fedphd",
             loss = loss + fl.moon_mu * con
         return loss
 
+    return loss_fn
+
+
+def scaffold_correction(grads, ctx):
+    """SCAFFOLD variance-reduced gradient g - c_i + c (Karimireddy et al.)."""
+    return jax.tree.map(lambda g, ci, c: g - ci + c, grads,
+                        ctx["c_local"], ctx["c_global"])
+
+
+def make_local_step(cfg: ModelConfig, fl: FLConfig, *, method: str = "fedphd",
+                    sparse: bool = False, groups=None, lr: float = 2e-4):
+    """Returns jitted step(params, opt_state, batch, rng, ctx) -> (...)
+
+    ctx: dict with optional "global_params", "prev_params", "c_local",
+    "c_global" (present per method; static structure per jit).
+    """
+    loss_fn = make_loss_fn(cfg, fl, method=method, sparse=sparse,
+                           groups=groups)
+
     @jax.jit
     def step(params, opt_state, batch, rng, ctx):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng, ctx)
         if method == "scaffold":
-            grads = jax.tree.map(lambda g, ci, c: g - ci + c, grads,
-                                 ctx["c_local"], ctx["c_global"])
+            grads = scaffold_correction(grads, ctx)
         params, opt_state = adam_update(grads, opt_state, params, lr=lr,
                                         grad_clip=1.0)
         return params, opt_state, loss

@@ -1,22 +1,38 @@
-"""Device-resident vectorized round engine.
+"""Device-resident vectorized round engine, method-parameterized.
 
-The sequential reference path (fl/client.py:run_local) dispatches one
-jitted step per batch with a host sync per loss and aggregates pytrees
-leaf-by-leaf in Python.  This module compiles ONE program per round
-shape that does all of it on device:
+The sequential reference paths (fl/client.py:run_local driven by
+core/hfl.py and fl/baselines.py) dispatch one jitted step per batch
+with a host sync per loss and aggregate pytrees leaf-by-leaf in
+Python.  This module compiles ONE program per round shape that does
+all of it on device, for FedPhD's hierarchical loop AND the flat
+baselines (FedAvg / FedProx / FedDiffuse / MOON / SCAFFOLD):
 
     clients  -> jax.vmap  over a stacked leading client axis
     batches  -> jax.lax.scan over a shape-static step axis
                 (ClientData.stacked_epochs pads ragged clients; padded
                 steps are masked no-ops)
-    edge agg -> fused (E, C) weight-matrix einsum per leaf
+    ctx      -> stacked per-client context pytree: FedProx/MOON anchor
+                params, SCAFFOLD control variates, FedDiffuse local
+                (non-communicated) parameter subtrees.  CTX_AXES maps
+                each entry to a vmap axis (0 = per-client (C, ...)
+                stack, None = broadcast to every lane).
+    edge agg -> fused (E, C) weight-matrix einsum per leaf (the flat
+                baselines are the E=1 special case)
+    scaffold -> c_i+ update and control-delta mean fused on device
 
 Per-round losses come back as a single (C,) device array — one host
 sync per round instead of one per batch.  Numerical equivalence with
-the sequential path is preserved by folding the per-client RNG exactly
-as run_local does (split once per step, carry the first key) and by
+the sequential paths is preserved by closing over the SAME loss
+(fl/client.py:make_loss_fn), folding the per-client RNG exactly as
+run_local does (split once per step, carry the first key), and
 masking padded steps out of both the params update and the loss mean;
-tests/test_round_engine.py asserts it.
+tests/test_round_engine.py and tests/test_baseline_engines.py assert
+it per method.
+
+Per-client optimizer state can persist across rounds: pass stacked
+Adam moments (``stacked_adam_init`` + ``tree_gather``/``tree_scatter``
+keyed by the round's participation selection) and the engine threads
+them through the scan and returns the updated stack.
 
 The stacked client axis is also the parallelism axis: lay it over the
 device mesh with repro.launch.federated.shard_clients and jit's
@@ -24,51 +40,117 @@ partitioner splits the vmapped program across devices.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
+import os
+import warnings
+from functools import lru_cache, partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.aggregation import combine_leaf
-from repro.core.pruning import depth_lambdas, omega
-from repro.models import model
-from repro.optim import adam_init, adam_update
+from repro.fl.client import make_loss_fn, scaffold_correction
+from repro.optim import AdamState, adam_init, adam_update
+
+ENGINES = ("auto", "vectorized", "sequential")
+
+# vmap axes for each method's stacked ctx pytree: 0 = per-client
+# leading (C, ...) axis, None = one copy broadcast to every lane.
+CTX_AXES = {
+    "fedphd": {},
+    "fedavg": {},
+    "fedprox": {"global_params": None},
+    "feddiffuse": {"local_params": 0},
+    "moon": {"global_params": None, "prev_params": 0},
+    "scaffold": {"c_local": 0, "c_global": None, "scale": 0},
+}
 
 
-def make_round_engine(cfg: ModelConfig, fl: FLConfig, *, sparse: bool = False,
-                      groups=None, lr: float = 2e-4, unroll: int = 8):
-    """Build the jitted vectorized round program.
+def resolve_engine(engine: Optional[str]) -> Tuple[str, bool]:
+    """Resolve an engine choice to ``(engine, strict)``.
 
-    Returns ``engine(edge_params, edge_idx, batches, valid, rngs, w_mat)
-    -> (agg_stack, losses)`` where
-
-      edge_params: pytree, leaves (E, ...) — one model per edge server
-      edge_idx:    (C,) int32 — which edge each client starts from
-      batches:     pytree, leaves (C, S, B, ...) — stacked_epochs output
-      valid:       (C, S) bool — padded-step mask
-      rngs:        (C, 2) uint32 — per-client fold of the round RNG
-      w_mat:       (E, C) fp32 — normalized per-edge aggregation rows
-
-    and ``agg_stack`` is the pytree of edge-aggregated models with a
-    leading (E,) axis, ``losses`` the (C,) per-client mean local loss.
+    An explicit caller argument wins and is strict; ``None`` falls back
+    to ``$FEDPHD_ENGINE`` (the CI matrix knob, consumed via the
+    conftest fixture) and finally ``"auto"``.  A strict "vectorized"
+    raises on ragged clients; a non-strict one (env-selected) falls
+    back to the sequential path with a warning so suites that mix
+    ragged fixtures stay green under the matrix.
     """
-    lambdas = depth_lambdas(groups, fl.lambda0) if (sparse and groups) else None
+    strict = engine is not None
+    engine = engine or os.environ.get("FEDPHD_ENGINE") or "auto"
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of "
+                         f"{ENGINES}")
+    return engine, strict
 
-    def loss_fn(params, batch, rng):
-        loss = model.loss_fn(params, cfg, batch, rng)
-        if sparse and groups:
-            loss = loss + omega(params, groups, lambdas)
-        return loss
 
-    def train_one(params, opt_state, batches, valid, rng, masked):
+# ---------------------------------------------------------------------------
+# Stacked-pytree utilities (the "ctx stacking" substrate).
+# ---------------------------------------------------------------------------
+
+def stack_trees(trees):
+    """Stack a list of congruent pytrees onto a leading member axis."""
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *trees)
+
+
+def unstack_tree(stacked, n: int):
+    """Inverse of stack_trees: n per-member pytrees."""
+    return [jax.tree.map(lambda leaf, _i=i: leaf[_i], stacked)
+            for i in range(n)]
+
+
+def tree_gather(stacked, idx):
+    """Rows ``idx`` of every leaf's leading axis (scalar idx drops it)."""
+    idx = jnp.asarray(idx)
+    return jax.tree.map(lambda leaf: leaf[idx], stacked)
+
+
+def tree_scatter(stacked, idx, rows):
+    """Write ``rows`` back into every leaf at ``idx`` on the leading axis.
+
+    With ``idx`` a permutation-free index set (participation selections
+    are drawn without replacement) this is the exact inverse of
+    ``tree_gather``: rows outside ``idx`` are untouched and the result
+    is invariant to permuting ``(idx, rows)`` in lockstep.
+    """
+    idx = jnp.asarray(idx)
+    return jax.tree.map(lambda leaf, r: leaf.at[idx].set(r), stacked, rows)
+
+
+def stacked_adam_init(params, n: int) -> AdamState:
+    """Adam state for ``n`` persistent clients: every moment leaf gains
+    a leading (n,) axis and the step counter becomes an (n,) vector.
+    Gather rows with ``tree_gather`` for the round's participants and
+    scatter the engine's updated rows back with ``tree_scatter``."""
+    zeros = lambda p: jnp.zeros((n,) + p.shape, jnp.float32)
+    return AdamState(step=jnp.zeros((n,), jnp.int32),
+                     mu=jax.tree.map(zeros, params),
+                     nu=jax.tree.map(zeros, params),
+                     master=None)
+
+
+# ---------------------------------------------------------------------------
+# The engine.
+# ---------------------------------------------------------------------------
+
+def make_train_one(loss_fn, *, method: str = "fedphd", lr: float = 2e-4,
+                   unroll: int = 8):
+    """One client's local round as a masked scan over stacked batches.
+
+    ``train_one(params, opt_state, batches, valid, rng, ctx, masked)``
+    -> ``(params, opt_state, mean_loss)``.  Used under vmap by
+    ``make_round_engine`` and directly (with toy loss_fns) by the
+    property tests that pin the padding-mask invariant.
+    """
+    def train_one(params, opt_state, batches, valid, rng, ctx, masked):
         def body(carry, xs):
             p, o, r = carry
             batch, v = xs
             r, sub = jax.random.split(r)
-            loss, grads = jax.value_and_grad(loss_fn)(p, batch, sub)
+            loss, grads = jax.value_and_grad(loss_fn)(p, batch, sub, ctx)
+            if method == "scaffold":
+                grads = scaffold_correction(grads, ctx)
             new_p, new_o = adam_update(grads, o, p, lr=lr, grad_clip=1.0)
             if masked:
                 # ragged clients: padded steps must be no-ops
@@ -81,36 +163,115 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *, sparse: bool = False,
         # without the runtime thread pool; block-unrolling a few steps
         # amortizes that penalty at modest compile-time cost (full
         # unroll explodes compile time for long rounds)
-        (params, _, _), losses = jax.lax.scan(
+        (params, opt_state, _), losses = jax.lax.scan(
             body, (params, opt_state, rng), (batches, valid),
             unroll=min(unroll, valid.shape[0]))
         n_valid = jnp.maximum(jnp.sum(valid), 1) if masked \
             else valid.shape[0]
-        return params, jnp.sum(losses) / n_valid
+        return params, opt_state, jnp.sum(losses) / n_valid
 
-    @partial(jax.jit, static_argnames=("masked",))
+    return train_one
+
+
+def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
+                      method: str = "fedphd", sparse: bool = False,
+                      groups=None, lr: float = 2e-4, unroll: int = 8):
+    """Build the jitted vectorized round program for ``method``.
+
+    Plain (non-sparse) engines are memoized on the hashable
+    ``(cfg, fl, method, lr, unroll)`` key: every trainer built with the
+    same configs shares one engine function and therefore one XLA
+    compile cache — constructing several trainers (equivalence tests,
+    benches, sweeps) no longer recompiles the round program.
+
+    Returns ``engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
+    ctx=None, opt_states=None, masked=True, per_client_opt=False)``
+    where
+
+      edge_params: pytree, leaves (E, ...) — one model per edge server
+                   (flat baselines: E = 1, the cloud model)
+      edge_idx:    (C,) int32 — which edge each client starts from
+      batches:     pytree, leaves (C, S, B, ...) — stacked_epochs output
+      valid:       (C, S) bool — padded-step mask
+      rngs:        (C, 2) uint32 — per-client fold of the round RNG
+      w_mat:       (E, C) fp32 — normalized per-edge aggregation rows
+      ctx:         method ctx pytree, stacked per CTX_AXES[method]
+      opt_states:  stacked per-client Adam rows (with per_client_opt)
+
+    and the result is a dict:
+
+      "agg":    pytree of edge-aggregated models, leading (E,) axis
+      "losses": (C,) per-client mean local loss
+      "opt":    updated stacked Adam rows        (iff per_client_opt)
+      "trained": (C, ...) per-client trained params   (moon/feddiffuse,
+                 which persist per-client state between rounds)
+      "c_new", "dc_mean": SCAFFOLD c_i+ stack and mean control delta
+    """
+    if not sparse and groups is None:
+        return _plain_round_engine(cfg, fl, method, lr, unroll)
+    return _build_round_engine(cfg, fl, method=method, sparse=sparse,
+                               groups=groups, lr=lr, unroll=unroll)
+
+
+@lru_cache(maxsize=64)
+def _plain_round_engine(cfg, fl, method, lr, unroll):
+    return _build_round_engine(cfg, fl, method=method, sparse=False,
+                               groups=None, lr=lr, unroll=unroll)
+
+
+def _build_round_engine(cfg: ModelConfig, fl: FLConfig, *, method: str,
+                        sparse: bool, groups, lr: float, unroll: int):
+    loss_fn = make_loss_fn(cfg, fl, method=method, sparse=sparse,
+                           groups=groups)
+    train_one = make_train_one(loss_fn, method=method, lr=lr, unroll=unroll)
+    ctx_axes = CTX_AXES[method]
+    return_trained = method in ("moon", "feddiffuse")
+
+    @partial(jax.jit, static_argnames=("masked", "per_client_opt"))
     def engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
-               masked: bool = True):
+               ctx=None, opt_states=None, masked: bool = True,
+               per_client_opt: bool = False):
+        ctx = {} if ctx is None else ctx
         start = jax.tree.map(lambda leaf: leaf[edge_idx], edge_params)
-        # one zero-tree, shared across all vmapped clients (in_axes=None)
-        opt_zero = adam_init(jax.tree.map(lambda leaf: leaf[0], edge_params))
-        trained, losses = jax.vmap(
-            lambda p, o, b, v, r: train_one(p, o, b, v, r, masked),
-            in_axes=(0, None, 0, 0, 0))(
-                start, opt_zero, batches, valid, rngs)
-        agg = jax.tree.map(lambda leaf: combine_leaf(leaf, w_mat), trained)
-        return agg, losses
+        if method == "feddiffuse":
+            # per-client local (never-communicated) subtrees override
+            # the gathered start rows; the loss itself is plain FedAvg
+            start = {**start, **ctx["local_params"]}
+        if per_client_opt:
+            opt0, opt_axes = opt_states, 0
+        else:
+            # one zero-tree, shared across all vmapped clients
+            opt0 = adam_init(jax.tree.map(lambda leaf: leaf[0], edge_params))
+            opt_axes = None
+        trained, opt_out, losses = jax.vmap(
+            lambda p, o, b, v, r, c: train_one(p, o, b, v, r, c, masked),
+            in_axes=(0, opt_axes, 0, 0, 0, ctx_axes))(
+                start, opt0, batches, valid, rngs, ctx)
+        out = {"agg": jax.tree.map(lambda leaf: combine_leaf(leaf, w_mat),
+                                   trained),
+               "losses": losses}
+        if per_client_opt:
+            out["opt"] = opt_out
+        if return_trained:
+            out["trained"] = trained
+        if method == "scaffold":
+            # c_i+ = c_i - c + (x - y_i) / (K_i * lr), fused over the
+            # stack; ctx["scale"] carries per-client 1 / (K_i * lr)
+            def ci_new(ci, c, x, y):
+                s = ctx["scale"].reshape((-1,) + (1,) * (x.ndim - 1))
+                return ci - c + s * (x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))
+            c_new = jax.tree.map(ci_new, ctx["c_local"], ctx["c_global"],
+                                 start, trained)
+            delta = jax.tree.map(lambda a, b: a - b, c_new, ctx["c_local"])
+            uni = jnp.full((valid.shape[0],), 1.0 / valid.shape[0],
+                           jnp.float32)
+            out["c_new"] = c_new
+            out["dc_mean"] = jax.tree.map(lambda d: combine_leaf(d, uni),
+                                          delta)
+        return out
 
     return engine
-
-
-def stack_clients(per_client_batches, per_client_valid):
-    """Host-side stack of stacked_epochs outputs onto a client axis."""
-    keys = per_client_batches[0].keys()
-    batches = {k: jnp.asarray(np.stack([b[k] for b in per_client_batches]))
-               for k in keys}
-    valid = jnp.asarray(np.stack(per_client_valid))
-    return batches, valid
 
 
 def uniform_batch_shape(clients) -> Optional[tuple]:
@@ -123,3 +284,28 @@ def uniform_batch_shape(clients) -> Optional[tuple]:
     shapes = {(c.data.batch_size,) + c.data.images.shape[1:]
               for c in clients}
     return shapes.pop() if len(shapes) == 1 else None
+
+
+def route_engine(engine: str, strict: bool, round_clients, warned: bool,
+                 trainer: str) -> Tuple[bool, bool]:
+    """Shared auto/strict engine routing for one round.
+
+    Returns ``(use_vectorized, warned)``.  Ragged clients fall back to
+    the sequential path; a strict (explicitly requested) "vectorized"
+    raises instead, and the fallback warns exactly once per trainer —
+    FedPhD and FlatTrainer must not diverge on this contract.
+    """
+    if engine == "sequential":
+        return False, warned
+    uniform = uniform_batch_shape(round_clients) is not None
+    if not uniform:
+        if engine == "vectorized" and strict:
+            raise ValueError("vectorized engine needs a uniform client "
+                             "batch shape; use engine='auto' or "
+                             "'sequential' for ragged clients")
+        if not warned:
+            warnings.warn(f"ragged client batch shapes: {trainer} falling "
+                          "back to the sequential round engine",
+                          RuntimeWarning)
+            warned = True
+    return uniform, warned

@@ -1,5 +1,7 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
 must see the real single CPU device; only dryrun.py forces 512."""
+import os
+
 import jax
 import pytest
 
@@ -7,3 +9,23 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def fedphd_engine_matrix():
+    """CI matrix knob: FEDPHD_ENGINE=sequential|vectorized|auto pins the
+    default round engine for every FedPhD / run_flat_fl constructed
+    without an explicit engine= (repro.fl.engine.resolve_engine reads
+    the env).  Tests that pass engine= explicitly — the equivalence
+    suites — are unaffected, so both paths stay covered in every matrix
+    leg.  Fails fast on a typo'd value instead of silently running the
+    default path twice.
+    """
+    from repro.fl.engine import ENGINES, resolve_engine
+    env = os.environ.get("FEDPHD_ENGINE")
+    if env is not None and env not in ENGINES:
+        raise RuntimeError(f"FEDPHD_ENGINE={env!r}; expected one of "
+                           f"{ENGINES}")
+    engine, strict = resolve_engine(None)
+    assert not strict and engine == (env or "auto")
+    return engine

@@ -1,4 +1,6 @@
 """Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -114,3 +116,91 @@ def test_weighted_average_convexity(weights):
     out = weighted_average(trees, weights)
     x = np.asarray(out["x"])
     assert np.all(x >= vals.min() - 1e-6) and np.all(x <= vals.max() + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Round-engine substrate: ctx stacking, padding masks, persistent Adam.
+# ---------------------------------------------------------------------------
+
+_shapes = st.lists(st.tuples(st.integers(1, 3), st.integers(1, 4)),
+                   min_size=1, max_size=3)
+
+
+@given(_shapes, st.integers(1, 5))
+@settings(max_examples=25, deadline=None)
+def test_ctx_stacking_roundtrips(shapes, n):
+    """stack_trees/unstack_tree round-trip arbitrary pytree shapes,
+    including nesting — the substrate of the engine's stacked ctx."""
+    from repro.fl.engine import stack_trees, unstack_tree
+    trees = [{"a": {f"k{j}": np.full(s, 10 * i + j, np.float32)
+                    for j, s in enumerate(shapes)},
+              "b": np.full((2,), float(i), np.float32)}
+             for i in range(n)]
+    back = unstack_tree(stack_trees(trees), n)
+    assert len(back) == n
+    for t, r in zip(trees, back):
+        for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(st.integers(1, 6), st.integers(0, 4), st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_stacked_epochs_padding_never_leaks(n_real, pad, seed):
+    """For random ragged client sizes, the masked scan yields params
+    bitwise-identical to an unpadded run: padded steps never leak into
+    params, opt state, or the loss mean."""
+    from repro.fl.engine import make_train_one
+    from repro.optim import adam_init
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n_real + pad, 4)).astype(np.float32)
+    xs[n_real:] = xs[n_real - 1]            # stacked_epochs-style padding
+    valid = np.arange(n_real + pad) < n_real
+    params = {"w": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    loss_fn = lambda p, batch, r, ctx: jnp.mean((batch["x"] - p["w"]) ** 2)
+    train_one = make_train_one(loss_fn, lr=0.1)
+    opt = adam_init(params)
+    key = jax.random.PRNGKey(seed)
+    p_pad, o_pad, l_pad = train_one(params, opt, {"x": jnp.asarray(xs)},
+                                    jnp.asarray(valid), key, {}, True)
+    p_ref, o_ref, l_ref = train_one(params, opt,
+                                    {"x": jnp.asarray(xs[:n_real])},
+                                    jnp.ones(n_real, bool), key, {}, False)
+    np.testing.assert_array_equal(np.asarray(p_pad["w"]),
+                                  np.asarray(p_ref["w"]))
+    np.testing.assert_array_equal(np.asarray(o_pad.mu["w"]),
+                                  np.asarray(o_ref.mu["w"]))
+    assert int(o_pad.step) == int(o_ref.step) == n_real
+    np.testing.assert_allclose(float(l_pad), float(l_ref), rtol=1e-6)
+
+
+@given(st.integers(2, 8), st.integers(1, 8), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_persistent_adam_gather_scatter(n, k, seed):
+    """Gather/scatter by a participation selection is (i) a no-op when
+    rows are written back unchanged, (ii) invariant to permuting the
+    selection, (iii) leaves non-participating clients untouched."""
+    from repro.fl.engine import stacked_adam_init, tree_gather, tree_scatter
+    rng = np.random.default_rng(seed)
+    k = min(k, n)
+    stack = stacked_adam_init({"w": np.zeros((3,), np.float32)}, n)
+    fill = lambda leaf: (jnp.arange(np.prod(leaf.shape), dtype=leaf.dtype)
+                         .reshape(leaf.shape))
+    stack = jax.tree.map(fill, stack)
+    idx = rng.choice(n, size=k, replace=False)
+
+    rows = tree_gather(stack, idx)
+    noop = tree_scatter(stack, idx, rows)
+    for x, y in zip(jax.tree.leaves(stack), jax.tree.leaves(noop)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    new_rows = jax.tree.map(lambda leaf: leaf + 1, rows)
+    perm = rng.permutation(k)
+    out1 = tree_scatter(stack, idx, new_rows)
+    out2 = tree_scatter(stack, idx[perm],
+                        jax.tree.map(lambda leaf: leaf[perm], new_rows))
+    others = np.setdiff1d(np.arange(n), idx)
+    for x, y, base in zip(jax.tree.leaves(out1), jax.tree.leaves(out2),
+                          jax.tree.leaves(stack)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        np.testing.assert_array_equal(np.asarray(x)[others],
+                                      np.asarray(base)[others])
