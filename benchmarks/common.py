@@ -9,6 +9,11 @@ import numpy as np
 from repro.configs import SMOKE_UNET
 from repro.configs.base import FLConfig
 from repro.data import SMOKE_DATA, ClientData, make_dataset, shards_per_client
+# re-export: sampling moved into the library (repro.diffusion) so
+# examples don't need the repo root on sys.path; benches keep importing
+# it from here
+from repro.diffusion import sample_images  # noqa: F401
+from repro.experiment import DataSpec, ExperimentSpec
 from repro.fl.client import Client
 
 ROWS: List[str] = []
@@ -51,14 +56,13 @@ def smoke_fl(rounds: int = 4, **kw) -> FLConfig:
     return FLConfig(**base)
 
 
-def sample_images(params, cfg, n: int = 64, steps: int = 10, seed: int = 0):
-    """DDIM-sample n images from a trained U-Net."""
-    import jax
-    from repro.diffusion import ddim_sample, linear_schedule
-    from repro.models.unet import apply_unet
-    sched = linear_schedule(cfg.diffusion_steps)
-    eps_fn = lambda x, t: apply_unet(params, cfg, x, t)
-    out = ddim_sample(eps_fn, sched, jax.random.PRNGKey(seed),
-                      (n, cfg.image_size, cfg.image_size, cfg.in_channels),
-                      num_steps=steps)
-    return np.asarray(out)
+def smoke_spec(method: str = "fedphd", rounds: int = 4,
+               **fl_kw) -> ExperimentSpec:
+    """The table benches' smoke setup as a declarative spec — same data
+    population as ``smoke_clients()`` (spec-built clients reproduce it
+    field-for-field)."""
+    return ExperimentSpec(
+        name=f"smoke-{method}", method=method, model="ddpm-unet-smoke",
+        fl=smoke_fl(rounds=rounds, **fl_kw),
+        data=DataSpec(dataset="smoke", partition="shards",
+                      classes_per_client=1, batch_size=32))

@@ -2,55 +2,40 @@
 
 Reduced scale (smoke U-Net, synthetic 4-class data, few rounds, 10-step
 DDIM, proxy-FID) — the paper's ordering claims, not its absolute values.
+
+The whole table is ONE spec grid over ``method`` through the unified
+experiment API: every row (hierarchical FedPhD variants and flat
+baselines alike) runs via ``repro.experiment.run_spec`` and reports from
+the same RoundRecord history schema.
 """
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import (emit, sample_images, smoke_clients, smoke_fl,
-                               time_fn)
-from repro.configs import SMOKE_UNET
-from repro.core.hfl import FedPhD
-from repro.fl.baselines import run_flat_fl
+from benchmarks.common import emit, sample_images, smoke_spec
+from repro.experiment import run_spec
 from repro.metrics import fid_proxy, inception_score_proxy
+
+METHODS = ("fedphd", "fedphd-os", "fedavg", "fedprox", "moon", "scaffold",
+           "feddiffuse")
 
 
 def main(rounds: int = 6) -> None:
-    clients, images, labels = smoke_clients()
-    fl = smoke_fl(rounds=rounds)
-    real = images[:256]
-
-    def evaluate(params, cfg, tag):
-        fake = sample_images(params, cfg, n=128, steps=10)
+    real = None
+    for method in METHODS:
+        spec = smoke_spec(method, rounds=rounds)
+        t0 = time.perf_counter()
+        exp = run_spec(spec)
+        dt = (time.perf_counter() - t0) * 1e6 / rounds
+        if real is None:
+            real = exp.images[:256]
+        fake = sample_images(exp.params, exp.cfg, n=128, steps=10)
         fid = fid_proxy(real, fake)
         is_ = inception_score_proxy(fake)
-        return fid, is_
-
-    # FedPhD
-    t0 = time.perf_counter()
-    trainer = FedPhD(SMOKE_UNET, fl, clients, rng_seed=0)
-    trainer.run(rounds)
-    dt = (time.perf_counter() - t0) * 1e6 / rounds
-    fid, is_ = evaluate(trainer.params, trainer.cfg, "fedphd")
-    emit("table1/fedphd", dt, f"fid={fid:.2f};is={is_:.3f};"
-         f"params_m={trainer.history[-1].params_m:.3f}")
-
-    # FedPhD-OS
-    import dataclasses
-    trainer = FedPhD(SMOKE_UNET, dataclasses.replace(
-        fl, prune_mode="oneshot_l2"), clients, rng_seed=0)
-    trainer.run(rounds)
-    fid, is_ = evaluate(trainer.params, trainer.cfg, "fedphd-os")
-    emit("table1/fedphd_os", dt, f"fid={fid:.2f};is={is_:.3f}")
-
-    for method in ("fedavg", "fedprox", "moon", "scaffold", "feddiffuse"):
-        t0 = time.perf_counter()
-        res = run_flat_fl(method, SMOKE_UNET, fl, clients, rounds=rounds)
-        dt = (time.perf_counter() - t0) * 1e6 / rounds
-        fid, is_ = evaluate(res.params, SMOKE_UNET, method)
-        emit(f"table1/{method}", dt, f"fid={fid:.2f};is={is_:.3f}")
+        tag = method.replace("-", "_")
+        emit(f"table1/{tag}", dt,
+             f"fid={fid:.2f};is={is_:.3f};"
+             f"params_m={exp.history[-1].params_m:.3f}")
 
 
 if __name__ == "__main__":

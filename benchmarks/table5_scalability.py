@@ -2,38 +2,36 @@
 
 FedPhD vs FedAvg at N = 6 and N = 12 clients (scaled-down analogue of the
 paper's 20/50/100); reports final-round training loss and proxy-FID.
+Both methods run as points of one spec grid through
+``repro.experiment.run_spec``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
-from benchmarks.common import (emit, sample_images, smoke_clients, smoke_fl)
-from repro.configs import SMOKE_UNET
-from repro.core.hfl import FedPhD
-from repro.fl.baselines import run_flat_fl
+from benchmarks.common import emit, sample_images, smoke_spec
+from repro.experiment import run_spec
 from repro.metrics import fid_proxy
 
 
 def main(rounds: int = 4) -> None:
     for n in (6, 12):
-        clients, images, _ = smoke_clients(num_clients=n)
-        fl = smoke_fl(rounds=rounds, num_clients=n)
-        real = images[:256]
-
-        t0 = time.perf_counter()
-        trainer = FedPhD(SMOKE_UNET, fl, clients, rng_seed=0, prune=False)
-        hist, _ = trainer.run(rounds)
-        us = (time.perf_counter() - t0) * 1e6 / rounds
-        fid = fid_proxy(real, sample_images(trainer.params, trainer.cfg,
-                                            n=96, steps=10))
-        emit(f"table5/fedphd_n{n}", us,
-             f"loss={hist[-1].loss:.4f};fid={fid:.2f}")
-
-        res = run_flat_fl("fedavg", SMOKE_UNET, fl, clients, rounds=rounds)
-        fid = fid_proxy(real, sample_images(res.params, SMOKE_UNET,
-                                            n=96, steps=10))
-        emit(f"table5/fedavg_n{n}", us,
-             f"loss={res.history[-1]['loss']:.4f};fid={fid:.2f}")
+        base = smoke_spec(rounds=rounds, num_clients=n)
+        real = None
+        for method in ("fedphd", "fedavg"):
+            spec = dataclasses.replace(base, method=method,
+                                       name=f"table5-{method}-n{n}",
+                                       prune=False)
+            t0 = time.perf_counter()
+            exp = run_spec(spec)
+            us = (time.perf_counter() - t0) * 1e6 / rounds
+            if real is None:
+                real = exp.images[:256]
+            fid = fid_proxy(real, sample_images(exp.params, exp.cfg,
+                                                n=96, steps=10))
+            emit(f"table5/{method}_n{n}", us,
+                 f"loss={exp.history[-1].loss:.4f};fid={fid:.2f}")
 
 
 if __name__ == "__main__":

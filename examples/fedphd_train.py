@@ -1,4 +1,5 @@
-"""End-to-end driver: FedPhD vs FedAvg on CIFAR-10-like data (paper §V).
+"""End-to-end driver: FedPhD vs FedAvg on CIFAR-10-like data (paper §V),
+on the unified experiment API — two points of one spec grid.
 
 Default is the reduced config (CPU-friendly: a few hundred local steps
 total).  ``--paper-scale`` switches to the full 35.7M U-Net + 20 clients
@@ -6,18 +7,17 @@ total).  ``--paper-scale`` switches to the full 35.7M U-Net + 20 clients
 clock, but runs the identical code path).
 
   PYTHONPATH=src python examples/fedphd_train.py --rounds 10
+
+With ``--out DIR`` the FedPhD run checkpoints after finishing and
+``--resume`` continues a previously killed run — the CLI equivalent is
+``python -m repro.experiment.runner``.
 """
 import argparse
+import dataclasses
 
-import numpy as np
-
-from repro.configs import CIFAR10_UNET, SMOKE_UNET
-from repro.configs.base import FLConfig
-from repro.core.hfl import FedPhD
-from repro.data import (CIFAR10_LIKE, SMOKE_DATA, ClientData, make_dataset,
-                        shards_per_client)
-from repro.fl.baselines import run_flat_fl
-from repro.fl.client import Client
+from repro.diffusion import sample_images
+from repro.experiment import ExperimentSpec, run_spec
+from repro.experiment.runner import PRESETS
 from repro.metrics import fid_proxy, inception_score_proxy
 
 
@@ -34,61 +34,52 @@ def main():
     ap.add_argument("--persistent-opt", action="store_true",
                     help="carry per-client Adam moments across rounds "
                          "(off = paper semantics: fresh Adam per round)")
+    ap.add_argument("--out", default=None,
+                    help="checkpoint the FedPhD run to <out>/ckpt.npz")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume the FedPhD run from <out>/ckpt.npz")
     args = ap.parse_args()
+    if args.resume and not args.out:
+        ap.error("--resume needs --out (the checkpoint location)")
 
-    if args.paper_scale:
-        cfg, spec = CIFAR10_UNET, CIFAR10_LIKE
-        fl = FLConfig(num_clients=20, num_edges=2, local_epochs=1,
-                      edge_agg_every=1, cloud_agg_every=5,
-                      rounds=args.rounds, sparse_rounds=50,
-                      prune_ratio=0.44, sh_a=15000.0)
-        classes_per_client = 2                      # paper: CIFAR-10 setup
-    else:
-        cfg, spec = SMOKE_UNET, SMOKE_DATA
-        fl = FLConfig(num_clients=8, num_edges=2, local_epochs=1,
-                      edge_agg_every=1, cloud_agg_every=2,
-                      rounds=args.rounds, sparse_rounds=3,
-                      prune_ratio=0.44, sh_a=1000.0)
-        classes_per_client = 1
+    base = PRESETS["paper" if args.paper_scale else "smoke"]
+    base = base.replace(seed=args.seed, engine=args.engine,
+                        persistent_opt=args.persistent_opt,
+                        fl=dataclasses.replace(base.fl, rounds=args.rounds))
+    fl = base.fl
 
-    images, labels = make_dataset(spec, seed=args.seed)
-    parts = shards_per_client(labels, fl.num_clients, classes_per_client,
-                              seed=args.seed)
-    clients = [Client(i, ClientData(images[p], labels[p], batch_size=32,
-                                    seed=i), spec.num_classes)
-               for i, p in enumerate(parts)]
-    real = images[:512]
+    def run(spec: ExperimentSpec, ckpt=None, resume=False) -> "Experiment":
+        # resume loads the checkpointed spec; --rounds still extends it
+        return run_spec(None if resume else spec, rounds=args.rounds,
+                        ckpt=ckpt, resume=resume)
 
-    def score(params, model_cfg, tag):
-        from benchmarks.common import sample_images
-        fake = sample_images(params, model_cfg, n=128, steps=10,
+    def report(exp) -> tuple:
+        fake = sample_images(exp.params, exp.cfg, n=128, steps=10,
                              seed=args.seed)
+        real = exp.images[:512]
         fid = fid_proxy(real, fake)
         is_ = inception_score_proxy(fake)
-        print(f"{tag:>10s}: proxy-FID={fid:7.2f}  proxy-IS={is_:.3f}")
-        return fid
+        last = exp.history[-1]
+        total = sum(r.comm_gb for r in exp.history)
+        print(f"{exp.spec.method:>10s}: final loss {last.loss:.4f}; params "
+              f"{last.params_m:.2f}M; total comm {total:.3f} GB; "
+              f"proxy-FID={fid:7.2f}  proxy-IS={is_:.3f}")
+        return fid, total
 
     print(f"== FedPhD ({fl.num_clients} clients, {fl.num_edges} edges, "
           f"r_e={fl.edge_agg_every}, r_g={fl.cloud_agg_every}) ==")
-    trainer = FedPhD(cfg, fl, clients, rng_seed=args.seed,
-                     engine=args.engine,
-                     persistent_opt=args.persistent_opt)
-    hist, _ = trainer.run()
-    total_comm = sum(h.comm_gb for h in hist)
-    print(f"final loss {hist[-1].loss:.4f}; params "
-          f"{hist[-1].params_m:.2f}M; total comm {total_comm:.3f} GB")
-    fid_phd = score(trainer.params, trainer.cfg, "FedPhD")
+    ckpt = f"{args.out}/ckpt.npz" if args.out else None
+    exp_phd = run(base.replace(method="fedphd", name="fedphd"),
+                  ckpt=ckpt, resume=args.resume)
+    fid_phd, comm_phd = report(exp_phd)
 
     print("== FedAvg baseline ==")
-    res = run_flat_fl("fedavg", cfg, fl, clients, rounds=fl.rounds,
-                      rng_seed=args.seed, engine=args.engine,
-                      persistent_opt=args.persistent_opt)
-    total_comm_avg = sum(h["comm_gb"] for h in res.history)
-    print(f"final loss {res.history[-1]['loss']:.4f}; "
-          f"total comm {total_comm_avg:.3f} GB")
-    fid_avg = score(res.params, cfg, "FedAvg")
+    # derive the baseline from the (possibly checkpointed) FedPhD spec
+    # so a resume with different local flags can't skew the comparison
+    exp_avg = run(exp_phd.spec.replace(method="fedavg", name="fedavg"))
+    fid_avg, comm_avg = report(exp_avg)
 
-    print(f"\ncomm reduction: {1 - total_comm/max(total_comm_avg,1e-9):.1%}; "
+    print(f"\ncomm reduction: {1 - comm_phd/max(comm_avg, 1e-9):.1%}; "
           f"FID delta (FedAvg - FedPhD): {fid_avg - fid_phd:+.2f}")
 
 

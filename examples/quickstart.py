@@ -36,7 +36,7 @@ def main():
               + ("  <- pruned!" if h.pruned else ""))
 
     # 3. sample + proxy-FID
-    from benchmarks.common import sample_images
+    from repro.diffusion import sample_images
     fake = sample_images(trainer.params, trainer.cfg, n=96, steps=10)
     print(f"proxy-FID vs real data: {fid_proxy(images[:256], fake):.2f}")
 

@@ -58,6 +58,16 @@ def get_config(name: str) -> ModelConfig:
     return ALL_CONFIGS[name]
 
 
+def register_config(name: str, cfg: ModelConfig, *,
+                    overwrite: bool = False) -> None:
+    """Add a model config to the registry (the extension point the
+    declarative experiment specs resolve ``spec.model`` through)."""
+    if name in ALL_CONFIGS and not overwrite:
+        raise ValueError(f"config {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    ALL_CONFIGS[name] = cfg
+
+
 def get_shape(name: str) -> InputShape:
     return INPUT_SHAPES[name]
 

@@ -178,6 +178,39 @@ class ShardingRules:
                                          # unsharded (weights fully local)
 
 
+# -- JSON (de)serialization --------------------------------------------------
+# Configs are frozen dataclasses of scalars and tuples; JSON turns the
+# tuples into lists, so round-tripping needs explicit coercion.  Used by
+# repro.experiment (declarative specs) and checkpoint manifests (the
+# post-prune ModelConfig differs from the one the run started with).
+
+_MODEL_TUPLE_FIELDS = ("layer_pattern", "channel_mults", "attn_resolutions")
+
+
+def config_to_dict(cfg: "ModelConfig") -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> "ModelConfig":
+    d = dict(d)
+    if d.get("moe"):
+        d["moe"] = MoEConfig(**d["moe"])
+    if d.get("mla"):
+        d["mla"] = MLAConfig(**d["mla"])
+    for k in _MODEL_TUPLE_FIELDS:
+        if d.get(k) is not None:
+            d[k] = tuple(d[k])
+    return ModelConfig(**d)
+
+
+def fl_to_dict(fl: "FLConfig") -> dict:
+    return dataclasses.asdict(fl)
+
+
+def fl_from_dict(d: dict) -> "FLConfig":
+    return FLConfig(**d)
+
+
 @dataclass(frozen=True)
 class FLConfig:
     """Federated-learning / FedPhD hyper-parameters (paper §V-A)."""

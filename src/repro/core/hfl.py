@@ -13,14 +13,14 @@ the faithful event-level simulation the paper's tables are produced from.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import FLConfig, ModelConfig
+from repro.configs.base import (FLConfig, ModelConfig, config_from_dict,
+                                config_to_dict)
 from repro.core.aggregation import (aggregate_fedavg, aggregate_sh,
                                     fedavg_weights, normalize_weights,
                                     sh_weights)
@@ -33,18 +33,11 @@ from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
 from repro.fl.engine import (make_round_engine, resolve_engine, route_engine,
                              stacked_adam_init, tree_gather, tree_scatter)
+# RoundRecord is re-exported here for compatibility: it moved to
+# repro.fl.record when the flat baselines adopted the same schema.
+from repro.fl.record import RoundRecord, RunResult, evals_of
 from repro.models import model
-from repro.optim import adam_init
-
-
-@dataclasses.dataclass
-class RoundRecord:
-    round: int
-    loss: float
-    comm_gb: float
-    edge_sh: List[float]
-    params_m: float
-    pruned: bool = False
+from repro.optim import adam_from_tree, adam_init
 
 
 class FedPhD:
@@ -68,6 +61,10 @@ class FedPhD:
             changes the parameter shapes at r = R_s.
     mesh:   optional jax mesh; the stacked client axis of the vectorized
             engine is laid over ``client_axis`` (launch/federated.py).
+    eval_fn/eval_every: the unified eval-hook contract —
+            ``eval_fn(params, cfg, round)`` is called every
+            ``eval_every`` rounds and its result stored in
+            ``RoundRecord.eval`` (identical for the flat trainers).
     """
 
     def __init__(self, cfg: ModelConfig, fl: FLConfig, clients: List[Client],
@@ -76,7 +73,7 @@ class FedPhD:
                  lr: float = 2e-4, engine: Optional[str] = None,
                  persistent_opt: bool = False,
                  mesh=None, client_axis: str = "data",
-                 eval_fn: Optional[Callable] = None):
+                 eval_fn: Optional[Callable] = None, eval_every: int = 0):
         self.cfg = cfg
         self.fl = fl
         self.clients = clients
@@ -90,6 +87,7 @@ class FedPhD:
         self.mesh = mesh
         self.client_axis = client_axis
         self.eval_fn = eval_fn
+        self.eval_every = eval_every
         self.np_rng = np.random.default_rng(rng_seed)
         self.rng = jax.random.PRNGKey(rng_seed)
 
@@ -337,18 +335,80 @@ class FedPhD:
             round=r,
             loss=float(np.mean(round_losses)) if round_losses else float("nan"),
             comm_gb=comm_bytes / 1e9,
-            edge_sh=[e.sh(self.q_u) for e in self.edges],
             params_m=self._param_count_m(),
+            selected=[int(c) for c in sel_ids],
+            edge_sh=[e.sh(self.q_u) for e in self.edges],
             pruned=pruned_this_round,
         )
+        if self.eval_fn and self.eval_every and r % self.eval_every == 0:
+            rec.eval = self.eval_fn(self.params, self.cfg, r)
         self.history.append(rec)
         return rec
 
-    def run(self, rounds: Optional[int] = None, *, eval_every: int = 0):
+    def run(self, rounds: Optional[int] = None, *,
+            eval_every: Optional[int] = None) -> RunResult:
+        """Run rounds ``len(history)+1 .. rounds`` (continues after a
+        restore).  Returns ``RunResult`` — unpacks as the legacy
+        ``history, evals`` tuple; eval results also land in
+        ``RoundRecord.eval`` (the unified hook contract)."""
         rounds = rounds or self.fl.rounds
-        evals = []
-        for r in range(1, rounds + 1):
+        if eval_every is not None:            # legacy per-call override
+            self.eval_every = eval_every
+        for r in range(len(self.history) + 1, rounds + 1):
             self.run_round(r)
-            if self.eval_fn and eval_every and r % eval_every == 0:
-                evals.append((r, self.eval_fn(self.params, self.cfg, r)))
-        return self.history, evals
+        return RunResult(self.history, evals_of(self.history))
+
+    # -- checkpoint state (repro.experiment resume contract) -----------------
+    def state(self):
+        """``(arrays, meta)``: everything the trajectory depends on.
+
+        ``arrays`` is a pytree for ``repro.checkpoint.save``; ``meta``
+        is JSON-serializable (RNG bit-generator states, the possibly
+        post-prune ModelConfig, and the history records).  Restoring
+        into a freshly constructed trainer reproduces an unbroken run
+        bitwise on the sequential engine.
+        """
+        arrays = {
+            "params": self.params,
+            "rng": self.rng,
+            "opt_stack": self._opt_stack,
+            "edge_models": ({str(e): m for e, m in self._edge_models.items()}
+                            if hasattr(self, "_edge_models") else None),
+            "edge_counts": np.stack([e.counts for e in self.edges]),
+            "edge_n": np.asarray([e.n for e in self.edges], np.int64),
+        }
+        meta = {
+            "trainer": "fedphd",
+            "pruned": bool(self.pruned),
+            "cfg": config_to_dict(self.cfg),
+            "np_rng": self.np_rng.bit_generator.state,
+            "client_rngs": [cl.data.rng_state() for cl in self.clients],
+            "history": [rec.to_dict() for rec in self.history],
+        }
+        return arrays, meta
+
+    def restore(self, arrays, meta) -> None:
+        """Inverse of ``state()`` on a trainer built with the same
+        constructor arguments (same cfg/fl/clients/seed)."""
+        to_dev = lambda t: jax.tree.map(jnp.asarray, t)
+        self.cfg = config_from_dict(meta["cfg"])
+        self.pruned = bool(meta["pruned"])
+        self.params = to_dev(arrays["params"])
+        self.rng = jnp.asarray(arrays["rng"])
+        self.groups = build_groups(self.cfg, self.params)
+        if arrays.get("edge_models") is not None:
+            self._edge_models = {int(e): to_dev(m)
+                                 for e, m in arrays["edge_models"].items()}
+        elif hasattr(self, "_edge_models"):
+            del self._edge_models
+        for i, e in enumerate(self.edges):
+            e.counts = np.asarray(arrays["edge_counts"][i],
+                                  np.float64).copy()
+            e.n = int(arrays["edge_n"][i])
+        self.np_rng.bit_generator.state = meta["np_rng"]
+        for cl, st in zip(self.clients, meta["client_rngs"]):
+            cl.data.set_rng_state(st)
+        self.history = [RoundRecord.from_dict(d) for d in meta["history"]]
+        self._rebuild_steps()
+        if self.persistent_opt:
+            self._opt_stack = adam_from_tree(arrays["opt_stack"])

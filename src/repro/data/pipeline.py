@@ -19,6 +19,16 @@ class ClientData:
     def __len__(self) -> int:
         return len(self.images)
 
+    # -- checkpoint support --------------------------------------------------
+    # The shuffle RNG advances once per epoch a client participates in,
+    # so bitwise kill-and-resume (repro.experiment) must carry it.
+    def rng_state(self) -> dict:
+        """JSON-serializable bit-generator state of the shuffle RNG."""
+        return self._rng.bit_generator.state
+
+    def set_rng_state(self, state: dict) -> None:
+        self._rng.bit_generator.state = state
+
     def epoch(self) -> Iterator[Dict[str, np.ndarray]]:
         idx = self._rng.permutation(len(self.images))
         nb = max(len(idx) // self.batch_size, 1)

@@ -1,0 +1,26 @@
+"""Convenience sampling front-end for trained diffusion U-Nets.
+
+Lives in the library (not in ``benchmarks/``) so examples and external
+callers can sample without the repo root on ``sys.path``; benchmarks
+import it from here too.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.diffusion.ddim import ddim_sample
+from repro.diffusion.schedule import linear_schedule
+
+
+def sample_images(params, cfg: ModelConfig, n: int = 64, steps: int = 10,
+                  seed: int = 0) -> np.ndarray:
+    """DDIM-sample ``n`` images (N, H, W, C) from a trained U-Net."""
+    from repro.models.unet import apply_unet
+    sched = linear_schedule(cfg.diffusion_steps)
+    eps_fn = lambda x, t: apply_unet(params, cfg, x, t)
+    out = ddim_sample(eps_fn, sched, jax.random.PRNGKey(seed),
+                      (n, cfg.image_size, cfg.image_size, cfg.in_channels),
+                      num_steps=steps)
+    return np.asarray(out)

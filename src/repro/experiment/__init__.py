@@ -1,0 +1,32 @@
+"""Unified experiment API: spec -> trainer -> run -> resume.
+
+One declarative front door over FedPhD's hierarchical loop and all flat
+baselines::
+
+    from repro.experiment import ExperimentSpec, run_spec
+
+    spec = ExperimentSpec(method="fedphd", model="ddpm-unet-smoke")
+    exp = run_spec(spec, ckpt="runs/smoke/ckpt.npz")
+    exp.history[-1].loss          # shared RoundRecord schema
+
+    # later / elsewhere: continue the killed run
+    exp = run_spec(None, resume=True, ckpt="runs/smoke/ckpt.npz")
+
+CLI: ``python -m repro.experiment.runner --help``.
+"""
+from repro.experiment.data import (DATASETS, dataset_spec, make_clients,
+                                   register_dataset)
+from repro.experiment.registry import (MethodEntry, make_trainer,
+                                       method_entry, register_method,
+                                       registered_methods)
+from repro.experiment.run import (Experiment, checkpoint_exists, run_spec)
+from repro.experiment.spec import (TOPOLOGIES, DataSpec, ExperimentSpec)
+from repro.experiment.trainer import Trainer
+from repro.fl.record import RoundRecord, RunResult, evals_of
+
+__all__ = ["DATASETS", "dataset_spec", "make_clients", "register_dataset",
+           "MethodEntry",
+           "make_trainer", "method_entry", "register_method",
+           "registered_methods", "Experiment", "checkpoint_exists",
+           "run_spec", "TOPOLOGIES", "DataSpec", "ExperimentSpec",
+           "Trainer", "RoundRecord", "RunResult", "evals_of"]

@@ -1,0 +1,104 @@
+"""Method/trainer registry: one table from method name to trainer.
+
+Every method the repo implements — the hierarchical FedPhD variants and
+the flat Table-II baselines — registers a factory here, so sweeps,
+benchmarks, and the CLI resolve trainers uniformly instead of wiring
+``FedPhD(...)`` vs ``run_flat_fl(...)`` by hand.  Extensions register
+their own methods::
+
+    from repro.experiment import register_method
+
+    def make_my_method(spec, cfg, clients, eval_fn):
+        return MyTrainer(cfg, spec.fl, clients, seed=spec.seed, ...)
+
+    register_method("my-method", "flat", make_my_method)
+
+A factory returns any object satisfying the
+:class:`repro.experiment.trainer.Trainer` protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List
+
+from repro.configs.base import ModelConfig
+from repro.experiment.spec import TOPOLOGIES, ExperimentSpec
+from repro.fl.baselines import FLAT_METHODS, FlatTrainer
+from repro.fl.client import Client
+
+TrainerFactory = Callable  # (spec, cfg, clients, eval_fn) -> Trainer
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodEntry:
+    name: str
+    topology: str                       # "hierarchical" | "flat"
+    factory: TrainerFactory
+
+
+_METHODS: Dict[str, MethodEntry] = {}
+
+
+def register_method(name: str, topology: str, factory: TrainerFactory,
+                    *, overwrite: bool = False) -> None:
+    if topology not in TOPOLOGIES:
+        raise ValueError(f"topology {topology!r} not in {TOPOLOGIES}")
+    if name in _METHODS and not overwrite:
+        raise ValueError(f"method {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _METHODS[name] = MethodEntry(name, topology, factory)
+
+
+def method_entry(name: str) -> MethodEntry:
+    if name not in _METHODS:
+        raise KeyError(f"unknown method {name!r}; registered: "
+                       f"{registered_methods()}")
+    return _METHODS[name]
+
+
+def registered_methods() -> List[str]:
+    return sorted(_METHODS)
+
+
+def make_trainer(spec: ExperimentSpec, cfg: ModelConfig,
+                 clients: List[Client], eval_fn=None):
+    """Resolve ``spec.method`` and build its trainer."""
+    entry = method_entry(spec.method)
+    if spec.topology and spec.topology != entry.topology:
+        raise ValueError(f"spec.topology={spec.topology!r} but method "
+                         f"{spec.method!r} is {entry.topology}")
+    return entry.factory(spec, cfg, clients, eval_fn)
+
+
+# ---------------------------------------------------------------------------
+# Built-in methods.
+# ---------------------------------------------------------------------------
+
+def _fedphd_factory(prune_mode: str = "") -> TrainerFactory:
+    def make(spec: ExperimentSpec, cfg, clients, eval_fn):
+        from repro.core.hfl import FedPhD   # lazy: core.hfl imports repro.fl
+        fl = spec.fl
+        if prune_mode:
+            fl = dataclasses.replace(fl, prune_mode=prune_mode)
+        return FedPhD(cfg, fl, clients, rng_seed=spec.seed,
+                      selection=spec.selection, aggregation=spec.aggregation,
+                      prune=spec.prune, lr=spec.lr, engine=spec.engine,
+                      persistent_opt=spec.persistent_opt,
+                      eval_fn=eval_fn, eval_every=spec.eval_every)
+    return make
+
+
+def _flat_factory(method: str) -> TrainerFactory:
+    def make(spec: ExperimentSpec, cfg, clients, eval_fn):
+        return FlatTrainer(method, cfg, spec.fl, clients, lr=spec.lr,
+                           rng_seed=spec.seed, engine=spec.engine,
+                           persistent_opt=spec.persistent_opt,
+                           eval_fn=eval_fn, eval_every=spec.eval_every)
+    return make
+
+
+register_method("fedphd", "hierarchical", _fedphd_factory())
+# FedPhD-OS: one-shot L2 pruning at r = 0 instead of sparse-train rounds
+register_method("fedphd-os", "hierarchical", _fedphd_factory("oneshot_l2"))
+for _m in FLAT_METHODS:
+    register_method(_m, "flat", _flat_factory(_m))

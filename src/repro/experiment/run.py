@@ -1,0 +1,138 @@
+"""Experiment driver: spec -> trainer -> run -> checkpoint/resume.
+
+``Experiment`` materializes a spec (model config via the config
+registry, clients via the data spec, trainer via the method registry)
+and drives rounds; ``save``/``load`` wire the uniform
+``Trainer.state()/restore()`` contract through ``repro.checkpoint`` so
+any method — hierarchical or flat, pre- or post-prune, with persistent
+per-client state — can be killed and resumed.  A resumed run reproduces
+an unbroken one bitwise on the sequential engine (atol-1e-5 on the
+vectorized engine); ``tests/test_experiment_api.py`` locks this.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Callable, List, Optional
+
+from repro import checkpoint
+from repro.configs import get_config
+from repro.experiment.data import make_clients
+from repro.experiment.registry import make_trainer
+from repro.experiment.spec import ExperimentSpec
+from repro.fl.client import Client
+from repro.fl.record import RoundRecord
+
+CKPT_FORMAT = 1
+
+
+class Experiment:
+    """A spec bound to live state: clients + trainer + history.
+
+    ``clients`` may be injected (custom populations); by default they
+    are built from ``spec.data``, and ``images``/``labels`` keep the
+    full generated dataset for eval references.  ``eval_fn(params, cfg,
+    round)`` runs every ``spec.eval_every`` rounds, its result stored in
+    ``RoundRecord.eval``.
+    """
+
+    def __init__(self, spec: ExperimentSpec, *,
+                 clients: Optional[List[Client]] = None,
+                 eval_fn: Optional[Callable] = None):
+        self.spec = spec
+        self.model_cfg = get_config(spec.model)
+        self.images = self.labels = None
+        if clients is None:
+            clients, self.images, self.labels = make_clients(spec)
+        self.clients = clients
+        self.trainer = make_trainer(spec, self.model_cfg, clients, eval_fn)
+
+    # current (possibly post-prune) model config / params / history
+    @property
+    def cfg(self):
+        return self.trainer.cfg
+
+    @property
+    def params(self):
+        return self.trainer.params
+
+    @property
+    def history(self) -> List[RoundRecord]:
+        return self.trainer.history
+
+    @property
+    def next_round(self) -> int:
+        return len(self.trainer.history) + 1
+
+    def run(self, rounds: Optional[int] = None, *,
+            ckpt: Optional[str] = None,
+            save_every: int = 0) -> List[RoundRecord]:
+        """Advance to round ``rounds`` (absolute; default
+        ``spec.fl.rounds``).  No-op if the history is already there.
+
+        With ``ckpt`` and ``save_every=k``, a checkpoint is written
+        every k rounds mid-run, so a killed run loses at most k rounds
+        (the final save after the loop is the caller's job — see
+        ``run_spec``)."""
+        target = rounds or self.spec.fl.rounds
+        for r in range(self.next_round, target + 1):
+            self.trainer.run_round(r)
+            if ckpt and save_every and r % save_every == 0 and r < target:
+                self.save(ckpt)
+        return self.trainer.history
+
+    # -- checkpointing -------------------------------------------------------
+    def save(self, path: str) -> None:
+        """One-file checkpoint (npz + manifest): trainer arrays, RNG
+        streams, history, and the spec itself — ``Experiment.load``
+        needs nothing else."""
+        arrays, meta = self.trainer.state()
+        meta = {**meta, "spec": self.spec.to_dict(), "format": CKPT_FORMAT}
+        checkpoint.save(path, arrays, metadata=meta)
+
+    @classmethod
+    def load(cls, path: str, *, clients: Optional[List[Client]] = None,
+             eval_fn: Optional[Callable] = None) -> "Experiment":
+        """Rebuild the experiment from its checkpoint and resume state.
+        ``clients``/``eval_fn`` must be re-supplied only when the
+        original run injected custom ones."""
+        arrays, meta = checkpoint.load(path)
+        spec = ExperimentSpec.from_dict(meta["spec"])
+        exp = cls(spec, clients=clients, eval_fn=eval_fn)
+        exp.trainer.restore(arrays, meta)
+        return exp
+
+
+def checkpoint_exists(path: str) -> bool:
+    return os.path.exists(path + ".manifest.json")
+
+
+def run_spec(spec: Optional[ExperimentSpec], *, rounds: Optional[int] = None,
+             clients: Optional[List[Client]] = None,
+             eval_fn: Optional[Callable] = None,
+             ckpt: Optional[str] = None, resume: bool = False,
+             save_every: int = 1) -> Experiment:
+    """The one-call front door: build (or resume) and run an experiment.
+
+    ``ckpt`` names a checkpoint file; with ``resume=True`` an existing
+    checkpoint is loaded and the run continues from its round counter
+    (``spec`` must then be ``None`` — the checkpointed spec is the
+    experiment; pass overrides like the target round via ``rounds``).
+    When ``ckpt`` is given the state is saved every ``save_every``
+    rounds (so a killed run is actually resumable) and once more after
+    the final round.
+    """
+    if resume:
+        if spec is not None:
+            raise ValueError("resume=True loads the checkpointed spec; "
+                             "pass spec=None (use rounds= to extend the "
+                             "run)")
+        if not (ckpt and checkpoint_exists(ckpt)):
+            raise FileNotFoundError(f"resume requested but no checkpoint at "
+                                    f"{ckpt!r}")
+        exp = Experiment.load(ckpt, clients=clients, eval_fn=eval_fn)
+    else:
+        exp = Experiment(spec, clients=clients, eval_fn=eval_fn)
+    exp.run(rounds, ckpt=ckpt, save_every=save_every)
+    if ckpt:
+        exp.save(ckpt)
+    return exp

@@ -1,0 +1,83 @@
+"""Declarative experiment specification.
+
+An :class:`ExperimentSpec` is the single front door to every trainer in
+the repo: FedPhD (hierarchical, with or without pruning), FedPhD-OS,
+and the five flat Table-II baselines all resolve from one frozen,
+JSON-round-trippable description — model config, FL hyper-parameters,
+data partition, method, selection/aggregation ablations, round engine,
+persistent-optimizer flag, eval cadence, and one seed that drives data
+generation, partitioning, and both trainer RNG streams.
+
+The paper's tables are grids over these specs: Table I is
+``method in {fedphd, fedphd-os, fedavg, fedprox, moon, scaffold,
+feddiffuse}`` with everything else held fixed; the selection/aggregation
+ablations are ``selection="random"`` / ``aggregation="fedavg"`` on the
+fedphd point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.configs.base import FLConfig, fl_from_dict
+
+TOPOLOGIES = ("hierarchical", "flat")
+
+
+@dataclasses.dataclass(frozen=True)
+class DataSpec:
+    """Client-data construction: synthetic dataset + non-IID partition."""
+    dataset: str = "smoke"          # repro.experiment.data.DATASETS key
+    partition: str = "shards"       # shards | iid | dirichlet
+    classes_per_client: int = 1     # shards partition sharpness
+    alpha: float = 0.5              # dirichlet concentration
+    batch_size: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One experiment, declaratively.  ``method`` resolves through the
+    trainer registry (:mod:`repro.experiment.registry`); ``topology``
+    may be left "" to inherit the method's canonical topology, or set
+    explicitly as a consistency assertion."""
+    name: str = "experiment"
+    method: str = "fedphd"
+    model: str = "ddpm-unet-smoke"  # repro.configs.get_config key
+    fl: FLConfig = FLConfig()
+    data: DataSpec = DataSpec()
+    topology: str = ""              # "" = derive from method
+    selection: str = "sh"           # fedphd ablation: "sh" | "random"
+    aggregation: str = "sh"         # fedphd ablation: "sh" | "fedavg"
+    prune: bool = True              # fedphd only (flat methods ignore)
+    engine: Optional[str] = None    # auto | vectorized | sequential
+    persistent_opt: bool = False
+    lr: float = 2e-4
+    eval_every: int = 0             # 0 = never call the eval hook
+    seed: int = 0
+
+    def replace(self, **kw) -> "ExperimentSpec":
+        return dataclasses.replace(self, **kw)
+
+    # -- JSON round-trip -----------------------------------------------------
+    def to_dict(self) -> dict:
+        # asdict recurses into the nested frozen FLConfig/DataSpec too
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        d = dict(d)
+        if isinstance(d.get("fl"), dict):
+            d["fl"] = fl_from_dict(d["fl"])
+        if isinstance(d.get("data"), dict):
+            d["data"] = DataSpec(**d["data"])
+        known = {k: v for k, v in d.items()
+                 if k in {f.name for f in dataclasses.fields(cls)}}
+        return cls(**known)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))

@@ -1,0 +1,41 @@
+"""The uniform ``Trainer`` protocol every registered method satisfies.
+
+``FedPhD`` (core/hfl.py) and ``FlatTrainer`` (fl/baselines.py) both
+implement it; anything registered via
+:func:`repro.experiment.register_method` must too.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Protocol, Tuple, runtime_checkable
+
+from repro.fl.record import RoundRecord, RunResult
+
+
+@runtime_checkable
+class Trainer(Protocol):
+    """One federated trainer, round-stepped and checkpointable.
+
+    - ``history`` accumulates one :class:`RoundRecord` per round in the
+      shared schema (round, loss, comm_gb, params_m, selected, eval,
+      optional edge_sh/pruned).
+    - ``eval_fn(params, cfg, round)`` is called every ``eval_every``
+      rounds inside ``run_round`` and its result stored in
+      ``RoundRecord.eval``.
+    - ``state()`` returns ``(arrays, meta)`` — an array pytree for
+      ``repro.checkpoint.save`` plus JSON-serializable metadata (RNG
+      streams, history, config mutations) — and ``restore(arrays,
+      meta)`` on a freshly constructed trainer with identical
+      constructor arguments resumes the run: bitwise-identical to an
+      unbroken run on the sequential engine.
+    """
+
+    history: List[RoundRecord]
+    params: Any
+
+    def run_round(self, r: int) -> RoundRecord: ...
+
+    def run(self, rounds: int) -> RunResult: ...
+
+    def state(self) -> Tuple[Any, Dict[str, Any]]: ...
+
+    def restore(self, arrays: Any, meta: Dict[str, Any]) -> None: ...

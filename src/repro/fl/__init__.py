@@ -7,6 +7,7 @@ from repro.fl.engine import (CTX_AXES, ENGINES, make_round_engine,
                              make_train_one, resolve_engine, route_engine,
                              stack_trees, stacked_adam_init, tree_gather,
                              tree_scatter, uniform_batch_shape, unstack_tree)
+from repro.fl.record import RoundRecord, RunResult, evals_of
 
 __all__ = ["Client", "make_local_step", "make_loss_fn", "run_local",
            "scaffold_correction", "CommModel", "run_flat_fl",
@@ -14,4 +15,5 @@ __all__ = ["Client", "make_local_step", "make_loss_fn", "run_local",
            "shared_fraction", "CTX_AXES", "ENGINES", "make_round_engine",
            "make_train_one", "resolve_engine", "route_engine", "stack_trees",
            "stacked_adam_init", "tree_gather", "tree_scatter",
-           "uniform_batch_shape", "unstack_tree"]
+           "uniform_batch_shape", "unstack_tree", "RoundRecord", "RunResult",
+           "evals_of"]

@@ -46,8 +46,9 @@ from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
 from repro.fl.engine import (make_round_engine, resolve_engine, route_engine,
                              stacked_adam_init, tree_gather, tree_scatter)
+from repro.fl.record import RoundRecord, RunResult, evals_of
 from repro.models import model
-from repro.optim import adam_init, adam_update
+from repro.optim import adam_from_tree, adam_init, adam_update
 
 FLAT_METHODS = ("fedavg", "fedprox", "feddiffuse", "moon", "scaffold")
 
@@ -87,7 +88,10 @@ def shared_fraction(params: Dict, cfg: ModelConfig) -> float:
 
 @dataclasses.dataclass
 class FlatFLResult:
-    history: List[Dict]
+    """Legacy ``run_flat_fl`` return shim.  ``history`` now holds the
+    shared :class:`repro.fl.record.RoundRecord` schema (dict-style
+    ``h["loss"]`` access still works)."""
+    history: List[RoundRecord]
     params: Dict
 
 
@@ -108,7 +112,8 @@ class FlatTrainer:
     def __init__(self, method: str, cfg: ModelConfig, fl: FLConfig,
                  clients: List[Client], *, lr: float = 2e-4,
                  rng_seed: int = 0, engine: Optional[str] = None,
-                 persistent_opt: bool = False):
+                 persistent_opt: bool = False,
+                 eval_fn: Optional[Callable] = None, eval_every: int = 0):
         assert method in FLAT_METHODS
         self.method = method
         self.cfg = cfg
@@ -117,6 +122,8 @@ class FlatTrainer:
         self.lr = lr
         self.engine, self._engine_strict = resolve_engine(engine)
         self.persistent_opt = persistent_opt
+        self.eval_fn = eval_fn
+        self.eval_every = eval_every
         self._warned_ragged = False
 
         self.np_rng = np.random.default_rng(rng_seed)
@@ -161,7 +168,7 @@ class FlatTrainer:
             if method == "feddiffuse" else None
         self._seen = np.zeros(n, bool)
 
-        self.history: List[Dict] = []
+        self.history: List[RoundRecord] = []
 
     # -- engine routing ------------------------------------------------------
     def _use_vectorized(self, round_clients) -> bool:
@@ -311,7 +318,7 @@ class FlatTrainer:
         return losses
 
     # -- one round -----------------------------------------------------------
-    def run_round(self, r: int) -> Dict:
+    def run_round(self, r: int) -> RoundRecord:
         fl, method = self.fl, self.method
         C = max(1, round(fl.participation * len(self.clients)))
         sel = self.np_rng.choice(len(self.clients), size=C, replace=False)
@@ -333,11 +340,75 @@ class FlatTrainer:
             vol = self.mbytes * 2  # model + control variate
         else:
             vol = self.mbytes
-        rec = {"round": r, "loss": float(np.mean(losses)),
-               "comm_gb": self.comm.flat_fl_round(vol, len(sel)) / 1e9,
-               "selected": [int(c) for c in sel]}
+        rec = RoundRecord(
+            round=r,
+            loss=float(np.mean(losses)),
+            comm_gb=self.comm.flat_fl_round(vol, len(sel)) / 1e9,
+            params_m=sum(x.size for x in jax.tree.leaves(self.params)) / 1e6,
+            selected=[int(c) for c in sel],
+        )
+        if self.eval_fn and self.eval_every and r % self.eval_every == 0:
+            rec.eval = self.eval_fn(self.params, self.cfg, r)
         self.history.append(rec)
         return rec
+
+    def run(self, rounds: Optional[int] = None, *,
+            eval_every: Optional[int] = None) -> RunResult:
+        """Run rounds ``len(history)+1 .. rounds`` (continues after a
+        restore) — the same ``Trainer`` contract as ``FedPhD.run``."""
+        rounds = rounds or self.fl.rounds
+        if eval_every is not None:
+            self.eval_every = eval_every
+        for r in range(len(self.history) + 1, rounds + 1):
+            self.run_round(r)
+        return RunResult(self.history, evals_of(self.history))
+
+    # -- checkpoint state (repro.experiment resume contract) -----------------
+    def state(self):
+        """``(arrays, meta)`` mirroring ``FedPhD.state``: the stacked
+        per-client method buffers (SCAFFOLD variates, MOON prev models,
+        FedDiffuse local subtrees, persistent Adam), global params, and
+        every RNG stream the trajectory consumes."""
+        arrays = {
+            "params": self.params,
+            "rng": self.rng,
+            "opt_stack": self._opt_stack,
+            "c_global": self.c_global,
+            "c_local_stack": self._c_local_stack,
+            "prev_stack": self._prev_stack,
+            "local_stack": self._local_stack,
+            "seen": self._seen,
+        }
+        meta = {
+            "trainer": "flat",
+            "method": self.method,
+            "np_rng": self.np_rng.bit_generator.state,
+            "client_rngs": [cl.data.rng_state() for cl in self.clients],
+            "history": [rec.to_dict() for rec in self.history],
+        }
+        return arrays, meta
+
+    def restore(self, arrays, meta) -> None:
+        """Inverse of ``state()`` on a trainer built with the same
+        constructor arguments."""
+        if meta.get("method", self.method) != self.method:
+            raise ValueError(f"checkpoint is for method "
+                             f"{meta['method']!r}, trainer is {self.method!r}")
+        to_dev = lambda t: None if t is None \
+            else jax.tree.map(jnp.asarray, t)
+        self.params = to_dev(arrays["params"])
+        self.rng = jnp.asarray(arrays["rng"])
+        self.c_global = to_dev(arrays["c_global"])
+        self._c_local_stack = to_dev(arrays["c_local_stack"])
+        self._prev_stack = to_dev(arrays["prev_stack"])
+        self._local_stack = to_dev(arrays["local_stack"])
+        self._seen = np.asarray(arrays["seen"], bool).copy()
+        if self.persistent_opt:
+            self._opt_stack = adam_from_tree(arrays["opt_stack"])
+        self.np_rng.bit_generator.state = meta["np_rng"]
+        for cl, st in zip(self.clients, meta["client_rngs"]):
+            cl.data.set_rng_state(st)
+        self.history = [RoundRecord.from_dict(d) for d in meta["history"]]
 
 
 def run_flat_fl(method: str, cfg: ModelConfig, fl: FLConfig,
@@ -346,21 +417,21 @@ def run_flat_fl(method: str, cfg: ModelConfig, fl: FLConfig,
                 eval_fn: Optional[Callable] = None,
                 eval_every: int = 0, engine: Optional[str] = None,
                 persistent_opt: bool = False) -> FlatFLResult:
-    """method in {fedavg, fedprox, feddiffuse, moon, scaffold}.
+    """Legacy front-end (prefer ``repro.experiment.run_spec``).
+
+    method in {fedavg, fedprox, feddiffuse, moon, scaffold}.
 
     engine: "vectorized" | "sequential" | "auto" (None = $FEDPHD_ENGINE
     or auto); persistent_opt carries per-client Adam moments across
     rounds (off by default — the paper's baselines restart Adam each
-    round).
+    round).  ``eval_fn(params, cfg, round)`` results land in
+    ``RoundRecord.eval`` (the unified hook contract).
     """
     trainer = FlatTrainer(method, cfg, fl, clients, lr=lr,
                           rng_seed=rng_seed, engine=engine,
-                          persistent_opt=persistent_opt)
-    rounds = rounds or fl.rounds
-    for r in range(1, rounds + 1):
-        rec = trainer.run_round(r)
-        if eval_fn and eval_every and r % eval_every == 0:
-            rec["eval"] = eval_fn(trainer.params, cfg, r)
+                          persistent_opt=persistent_opt,
+                          eval_fn=eval_fn, eval_every=eval_every)
+    trainer.run(rounds or fl.rounds)
     return FlatFLResult(history=trainer.history, params=trainer.params)
 
 

@@ -227,7 +227,15 @@ def _build_round_engine(cfg: ModelConfig, fl: FLConfig, *, method: str,
     ctx_axes = CTX_AXES[method]
     return_trained = method in ("moon", "feddiffuse")
 
-    @partial(jax.jit, static_argnames=("masked", "per_client_opt"))
+    # Donation (ROADMAP leftover from PR 1): the (E, ...) edge-model
+    # stack and the gathered persistent-Adam rows are freshly
+    # materialized by the callers every round, never reused after the
+    # call, and alias the "agg" / "opt" outputs shape-for-shape — so
+    # XLA writes the round's results in place instead of holding both
+    # copies live.  (The stacked_epochs batch buffer has no matching
+    # output to alias, so donating it would be a no-op plus a warning.)
+    @partial(jax.jit, static_argnames=("masked", "per_client_opt"),
+             donate_argnums=(0,), donate_argnames=("opt_states",))
     def engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
                ctx=None, opt_states=None, masked: bool = True,
                per_client_opt: bool = False):

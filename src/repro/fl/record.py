@@ -1,0 +1,74 @@
+"""The ONE round-history schema shared by every trainer.
+
+Before the experiment-API unification, FedPhD kept a dataclass history
+while the flat baselines appended raw dicts (``h["comm_gb"]`` vs
+``h.comm_gb``) and eval results lived in two different places.  Every
+trainer now appends :class:`RoundRecord` to ``trainer.history``; the
+record supports both attribute and ``rec["key"]`` access so pre-existing
+callers of either style keep working.
+
+``eval`` carries the unified eval-hook result: trainers call
+``eval_fn(params, cfg, round)`` at their ``eval_every`` cadence and
+store the return value here (it must be JSON-serializable for
+checkpointed histories).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    """One communication round, identical for flat and hierarchical runs.
+
+    ``edge_sh`` is only populated by hierarchical trainers (per-edge SH
+    scores); ``pruned`` marks the round whose cloud aggregation ran the
+    structured-pruning compaction.
+    """
+    round: int
+    loss: float
+    comm_gb: float
+    params_m: float = 0.0
+    selected: List[int] = dataclasses.field(default_factory=list)
+    eval: Any = None
+    edge_sh: Optional[List[float]] = None
+    pruned: bool = False
+
+    # -- dict-style compatibility (legacy flat histories were dicts) --------
+    def __getitem__(self, key: str):
+        if key not in self.__dataclass_fields__:
+            raise KeyError(key)
+        return getattr(self, key)
+
+    def get(self, key: str, default=None):
+        return getattr(self, key, default)
+
+    def keys(self):
+        return self.__dataclass_fields__.keys()
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RoundRecord":
+        known = {k: v for k, v in d.items() if k in cls.__dataclass_fields__}
+        return cls(**known)
+
+
+class RunResult(NamedTuple):
+    """Return value of ``Trainer.run``: unpacks as the legacy
+    ``history, evals = trainer.run(...)`` tuple, where ``evals`` is the
+    ``[(round, eval)]`` view of the records that carry an eval result.
+
+    ``RoundRecord.eval is None`` means "no result recorded", so an
+    eval_fn that returns None leaves no trace here (a deliberate
+    narrowing of the legacy contract, which appended every hook call);
+    side-effect-only hooks should return a marker value."""
+    history: List[RoundRecord]
+    evals: List[Tuple[int, Any]]
+
+
+def evals_of(history: List[RoundRecord]) -> List[Tuple[int, Any]]:
+    return [(r.round, r.eval) for r in history if r.eval is not None]

@@ -1,7 +1,9 @@
-from repro.optim.adam import AdamState, adam_init, adam_update
+from repro.optim.adam import (AdamState, adam_from_tree, adam_init,
+                              adam_update)
 from repro.optim.sgd import SGDState, sgd_init, sgd_update
 from repro.optim.ema import ema_init, ema_update
 from repro.optim.schedules import constant, cosine_decay
 
-__all__ = ["AdamState", "adam_init", "adam_update", "SGDState", "sgd_init",
-           "sgd_update", "ema_init", "ema_update", "constant", "cosine_decay"]
+__all__ = ["AdamState", "adam_from_tree", "adam_init", "adam_update",
+           "SGDState", "sgd_init", "sgd_update", "ema_init", "ema_update",
+           "constant", "cosine_decay"]

@@ -24,6 +24,20 @@ def adam_init(params, *, use_master: bool = False) -> AdamState:
                      master=master)
 
 
+def adam_from_tree(t) -> AdamState | None:
+    """Rebuild an ``AdamState`` from a plain ``(step, mu, nu[, master])``
+    tuple pytree — checkpoint loading flattens NamedTuples to tuples."""
+    if t is None:
+        return None
+    if isinstance(t, AdamState):
+        return t
+    step, mu, nu, *rest = tuple(t)
+    master = rest[0] if rest else None
+    to_dev = lambda x: jax.tree.map(jnp.asarray, x)
+    return AdamState(step=jnp.asarray(step), mu=to_dev(mu), nu=to_dev(nu),
+                     master=None if master is None else to_dev(master))
+
+
 def adam_update(grads, state: AdamState, params, *, lr, b1: float = 0.9,
                 b2: float = 0.999, eps: float = 1e-8,
                 weight_decay: float = 0.0, grad_clip: float = 0.0):

@@ -100,6 +100,41 @@ def test_checkpoint_roundtrip(tmp_path, rng):
                                       np.asarray(b, np.float32))
 
 
+def test_checkpoint_roundtrip_post_prune(tmp_path, rng):
+    """Post-prune state round-trips: the sparse->prune->plain transition
+    compacts parameter shapes and resets the stacked Adam moments, and
+    the checkpoint must reproduce exactly that — not the init shapes
+    (the pre-prune pytree case above)."""
+    import jax
+    from repro.configs import SMOKE_UNET
+    from repro.configs.base import config_from_dict, config_to_dict
+    from repro.core import pruning as P
+    from repro.fl.engine import stacked_adam_init
+    from repro.models import model
+
+    params = model.init(rng, SMOKE_UNET)
+    groups = P.build_groups(SMOKE_UNET, params)
+    masks = P.make_masks(P.l2_scores(params, groups), groups, 0.44)
+    pruned, pruned_cfg, _ = P.compact(params, SMOKE_UNET, groups, masks)
+    opt = stacked_adam_init(pruned, n=3)        # reset at the boundary
+
+    path = os.path.join(tmp_path, "ckpt.npz")
+    checkpoint.save(path, {"params": pruned, "opt": opt},
+                    {"round": 9, "cfg": config_to_dict(pruned_cfg)})
+    loaded, meta = checkpoint.load(path)
+    assert meta["round"] == 9
+    # the compacted ModelConfig (not the seed one) comes back intact
+    assert config_from_dict(meta["cfg"]) == pruned_cfg
+    for a, b in zip(jax.tree.leaves(pruned), jax.tree.leaves(loaded["params"])):
+        assert np.asarray(a).shape == np.asarray(b).shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # stacked per-client Adam rows: compacted shapes with the (N,) axis
+    for a, b in zip(jax.tree.leaves(pruned), jax.tree.leaves(loaded["opt"][1])):
+        assert np.asarray(b).shape == (3,) + np.asarray(a).shape
+        assert not np.asarray(b).any()          # freshly reset moments
+
+
 def test_full_config_param_counts_sane():
     """Full-size configs land near their nameplate sizes."""
     expected = {"deepseek-v3-671b": (600e9, 750e9),

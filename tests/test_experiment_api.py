@@ -1,0 +1,304 @@
+"""Unified experiment API: spec JSON round-trip, the method registry,
+the one-schema method grid, and kill-and-resume checkpointing
+(bitwise on the sequential engine, atol 1e-5 on the vectorized one,
+including the post-prune compacted state).
+
+Runs on a registered micro U-Net (8x8, 8 channels): the grid is six
+methods and MOON traces three model applications, so compile time
+dominates at any larger scale.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_UNET, register_config
+from repro.configs.base import FLConfig
+from repro.data.synthetic import DatasetSpec
+from repro.experiment import (DataSpec, Experiment, ExperimentSpec,
+                              RoundRecord, Trainer, make_clients,
+                              register_dataset, register_method,
+                              registered_methods, run_spec)
+from repro.experiment import runner as exp_runner
+from repro.fl.record import RunResult
+
+TINY_UNET = SMOKE_UNET.replace(name="ddpm-unet-tiny-exp", image_size=8,
+                               base_channels=8, channel_mults=(1,),
+                               num_res_blocks=1, attn_resolutions=())
+register_config("ddpm-unet-tiny-exp", TINY_UNET, overwrite=True)
+register_dataset("tiny-exp", DatasetSpec("tiny-exp", num_classes=4,
+                                         image_size=8, samples_per_class=32),
+                 overwrite=True)
+
+GRID_METHODS = ("fedphd", "fedavg", "fedprox", "moon", "scaffold",
+                "feddiffuse")
+
+SPEC = ExperimentSpec(
+    name="tiny", method="fedphd", model="ddpm-unet-tiny-exp",
+    fl=FLConfig(num_clients=4, num_edges=2, local_epochs=1,
+                edge_agg_every=1, cloud_agg_every=2, rounds=4,
+                sparse_rounds=2, prune_ratio=0.44, sh_a=1000.0),
+    data=DataSpec(dataset="tiny-exp", batch_size=8),
+    engine="sequential")
+
+
+def assert_trees_equal(a, b, *, bitwise=True, atol=1e-5):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if bitwise:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(np.asarray(x, np.float32),
+                                       np.asarray(y, np.float32), atol=atol)
+
+
+def run_broken(spec, *, path, split: int, total: int, clients=None):
+    """Run ``split`` rounds, checkpoint, then resume to ``total`` in a
+    freshly loaded experiment — the kill-and-resume trajectory."""
+    run_spec(spec, rounds=split, ckpt=path, clients=clients)
+    return run_spec(None, resume=True, ckpt=path, rounds=total)
+
+
+# ---------------------------------------------------------------------------
+# Spec + registry.
+# ---------------------------------------------------------------------------
+
+def test_spec_json_roundtrip():
+    spec = SPEC.replace(engine="vectorized", persistent_opt=True,
+                        eval_every=3, selection="random")
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    # JSON is pure data: nested configs come back as frozen dataclasses
+    loaded = ExperimentSpec.from_json(spec.to_json())
+    assert isinstance(loaded.fl, FLConfig) and loaded.fl == spec.fl
+    assert loaded.data == spec.data
+
+
+def test_registry_resolves_all_methods():
+    for m in ("fedphd", "fedphd-os", "fedavg", "fedprox", "moon",
+              "scaffold", "feddiffuse"):
+        assert m in registered_methods()
+    with pytest.raises(KeyError):
+        Experiment(SPEC.replace(method="nope"))
+    with pytest.raises(ValueError):   # topology consistency assertion
+        Experiment(SPEC.replace(method="fedavg", topology="hierarchical"))
+
+
+def test_register_custom_method():
+    calls = {}
+
+    class StubTrainer:
+        def __init__(self):
+            self.history, self.params, self.cfg = [], {}, TINY_UNET
+
+        def run_round(self, r):
+            rec = RoundRecord(round=r, loss=0.0, comm_gb=0.0)
+            self.history.append(rec)
+            return rec
+
+        def run(self, rounds):
+            for r in range(len(self.history) + 1, rounds + 1):
+                self.run_round(r)
+            return RunResult(self.history, [])
+
+        def state(self):
+            return {}, {"history": []}
+
+        def restore(self, arrays, meta):
+            pass
+
+    def factory(spec, cfg, clients, eval_fn):
+        calls["spec"] = spec
+        return StubTrainer()
+
+    with pytest.raises(ValueError):   # collision guard
+        register_method("fedavg", "flat", factory)
+    register_method("stub-method", "flat", factory, overwrite=True)
+    exp = run_spec(SPEC.replace(method="stub-method"), rounds=2)
+    assert isinstance(exp.trainer, Trainer)   # runtime protocol check
+    assert calls["spec"].method == "stub-method"
+    assert [r.round for r in exp.history] == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# The grid: six methods, one schema, one eval-hook contract.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", GRID_METHODS)
+def test_grid_one_schema(method):
+    evaluated = []
+
+    def eval_fn(params, cfg, r):
+        evaluated.append(r)
+        return float(sum(np.asarray(x, np.float32).sum()
+                         for x in jax.tree.leaves(params)))
+
+    spec = SPEC.replace(method=method, eval_every=2, prune=False)
+    exp = run_spec(spec, rounds=2, eval_fn=eval_fn)
+    assert len(exp.history) == 2
+    for rec in exp.history:
+        assert isinstance(rec, RoundRecord)
+        assert np.isfinite(rec.loss) and rec.comm_gb > 0
+        assert rec.params_m > 0 and rec.selected
+        # dict-style access (legacy flat-history consumers)
+        assert rec["loss"] == rec.loss
+    # unified eval contract: the hook ran once, at round 2, and its
+    # result landed in RoundRecord.eval for BOTH topologies
+    assert evaluated == [2]
+    assert exp.history[0].eval is None
+    assert isinstance(exp.history[1].eval, float)
+    # edge_sh only exists on the hierarchical topology
+    assert (exp.history[0].edge_sh is not None) == (method == "fedphd")
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume.
+# ---------------------------------------------------------------------------
+
+def test_resume_bitwise_sequential_through_prune(tmp_path):
+    """Checkpoint at the pruning round, resume, and match an unbroken
+    run bitwise: params AND history (incl. comm_gb and the post-prune
+    params_m)."""
+    unbroken = run_spec(SPEC)
+    resumed = run_broken(SPEC, path=str(tmp_path / "ck.npz"),
+                         split=2, total=4)
+    assert any(r.pruned for r in unbroken.history)
+    assert_trees_equal(unbroken.params, resumed.params, bitwise=True)
+    assert [r.to_dict() for r in unbroken.history] \
+        == [r.to_dict() for r in resumed.history]
+    assert resumed.cfg == unbroken.cfg          # compacted ModelConfig
+
+
+@pytest.mark.parametrize("method", ["scaffold", "moon", "feddiffuse"])
+def test_resume_bitwise_flat_state(method, tmp_path):
+    """Per-client ctx state (SCAFFOLD variates, MOON prev models,
+    FedDiffuse local subtrees) + stacked persistent-Adam buffers survive
+    the checkpoint bitwise; partial participation exercises the
+    seen-mask defaulting."""
+    spec = SPEC.replace(
+        method=method, persistent_opt=True,
+        fl=dataclasses.replace(SPEC.fl, num_edges=1, participation=0.5))
+    unbroken = run_spec(spec, rounds=3)
+    resumed = run_broken(spec, path=str(tmp_path / "ck.npz"),
+                         split=2, total=3)
+    assert_trees_equal(unbroken.params, resumed.params, bitwise=True)
+    assert [r.to_dict() for r in unbroken.history] \
+        == [r.to_dict() for r in resumed.history]
+
+
+def test_mid_run_checkpoint_cadence(tmp_path):
+    """``save_every`` writes resumable snapshots DURING the run, so a
+    killed process loses at most that many rounds (the final save
+    belongs to run_spec)."""
+    path = str(tmp_path / "ck.npz")
+    exp = Experiment(SPEC.replace(prune=False))
+    exp.run(2, ckpt=path, save_every=1)
+    # the on-disk state is the round-1 snapshot: a kill during round 2
+    # resumes from there
+    assert Experiment.load(path).next_round == 2
+
+
+def test_resume_rejects_conflicting_spec(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    run_spec(SPEC.replace(prune=False), rounds=1, ckpt=path)
+    with pytest.raises(ValueError):
+        run_spec(SPEC, resume=True, ckpt=path)
+
+
+def test_resume_vectorized_close(tmp_path):
+    """prune=False: the sparse engine is rebuilt per trainer (groups
+    aren't hashable, so it skips the engine memo) and three trainers'
+    worth of sparse compiles dominate the suite; the vectorized
+    prune transition is already equivalence-locked in
+    test_round_engine.py and resumed bitwise sequentially above."""
+    spec = SPEC.replace(engine="vectorized", prune=False)
+    unbroken = run_spec(spec)
+    resumed = run_broken(spec, path=str(tmp_path / "ck.npz"),
+                         split=2, total=4)
+    assert_trees_equal(unbroken.params, resumed.params,
+                       bitwise=False, atol=1e-5)
+    for a, b in zip(unbroken.history, resumed.history):
+        assert a.comm_gb == b.comm_gb and a.selected == b.selected
+
+
+def test_post_prune_checkpoint_state(tmp_path):
+    """Save AFTER the sparse->prune->plain transition: the reloaded
+    trainer carries the compacted shapes, the reset (then re-trained)
+    stacked Adam moments, the round counter, and the refreshed edge
+    distributions."""
+    spec = SPEC.replace(persistent_opt=True)
+    path = str(tmp_path / "ck.npz")
+    a = run_spec(spec, rounds=3, ckpt=path)     # prune fires at r=2
+    assert any(r.pruned for r in a.history)
+    b = Experiment.load(path)
+    assert b.next_round == 4
+    assert b.trainer.pruned and b.cfg == a.cfg
+    # compacted param shapes survive exactly
+    sa = [np.asarray(x).shape for x in jax.tree.leaves(a.params)]
+    sb = [np.asarray(x).shape for x in jax.tree.leaves(b.params)]
+    assert sa == sb
+    # stacked persistent-Adam buffers were rebuilt at the prune boundary
+    # to the compacted shapes and restored as such
+    n = spec.fl.num_clients
+    for p, m in zip(jax.tree.leaves(a.params),
+                    jax.tree.leaves(b.trainer._opt_stack.mu)):
+        assert m.shape == (n,) + np.asarray(p).shape
+    # edge AccumulatedDistributions round-trip exactly
+    for ea, eb in zip(a.trainer.edges, b.trainer.edges):
+        assert ea.n == eb.n
+        np.testing.assert_array_equal(ea.counts, eb.counts)
+
+
+# ---------------------------------------------------------------------------
+# CLI runner.
+# ---------------------------------------------------------------------------
+
+def test_runner_cli_run_then_resume(tmp_path):
+    spec_path = tmp_path / "spec.json"
+    out = str(tmp_path / "out")
+    spec_path.write_text(SPEC.to_json())
+    exp_runner.main(["--spec", str(spec_path), "--rounds", "1",
+                     "--out", out])
+    exp = exp_runner.main(["--out", out, "--resume", "--rounds", "2"])
+    assert exp.next_round == 3
+    with open(os.path.join(out, "history.json")) as f:
+        hist = json.load(f)
+    assert [h["round"] for h in hist["history"]] == [1, 2]
+    assert hist["spec"]["method"] == "fedphd"
+    # the resolved spec is materialized next to the checkpoint
+    with open(os.path.join(out, "spec.json")) as f:
+        assert ExperimentSpec.from_json(f.read()) == SPEC
+
+
+# ---------------------------------------------------------------------------
+# Legacy entry-point shims.
+# ---------------------------------------------------------------------------
+
+def test_legacy_entrypoints_still_work():
+    """`FedPhD(...).run()` still unpacks as (history, evals) and
+    `run_flat_fl` still returns FlatFLResult with dict-style history."""
+    from repro.core.hfl import FedPhD
+    from repro.fl.baselines import run_flat_fl
+
+    clients, _, _ = make_clients(SPEC)
+    evals_seen = []
+
+    def eval_fn(params, cfg, r):
+        evals_seen.append(r)
+        return 1.25
+
+    trainer = FedPhD(TINY_UNET, SPEC.fl, clients, rng_seed=0,
+                     engine="sequential", prune=False, eval_fn=eval_fn)
+    hist, evals = trainer.run(2, eval_every=2)
+    assert hist is trainer.history and len(hist) == 2
+    assert evals == [(2, 1.25)] and evals_seen == [2]
+    assert hist[1].eval == 1.25                 # unified hook contract
+
+    clients, _, _ = make_clients(SPEC)
+    res = run_flat_fl("fedavg", TINY_UNET, SPEC.fl, clients, rounds=1,
+                      rng_seed=0, engine="sequential")
+    assert res.history[0]["comm_gb"] == res.history[0].comm_gb
+    assert res.history[0]["round"] == 1
