@@ -95,6 +95,62 @@ def main() -> None:
     assert speedup >= 2.0, \
         f"vectorized round engine regressed: {speedup:.2f}x < 2x"
 
+    pipelined_ab()
+
+
+def pipelined_ab() -> None:
+    """Double-buffered ``run()`` vs stepping ``run_round`` one at a
+    time: the pipelined loop dispatches round r+1 (stacked_epochs
+    shuffle/stack on the host + H2D copy + round-program dispatch)
+    BEFORE syncing round r's losses, overlapping next-round data prep
+    with device compute — the remaining H2D item from ROADMAP "Open
+    items" (that buffer has no output to donate-alias into).  Identical
+    numerics; only the sync point moves.
+
+    Reading the rows: ``host_prep`` is the per-round data-prep cost the
+    pipeline hides; ``overlap`` is the measured stepped/pipelined
+    ratio.  On this CPU-only box host and "device" share the same
+    cores, so overlap sits at ~1.0 by construction (the hidden work
+    still occupies the cores) — the row exists to lock the pipelined
+    driver's trajectory identity and to report real gains on
+    accelerator-backed runs, where host prep is free wall-clock.
+    """
+    rounds = 2 * TIMED_ROUNDS
+
+    # the overlappable component, measured directly (fresh clients:
+    # stack_round consumes the shuffle RNG streams)
+    from repro.data.pipeline import stack_round
+    prep_clients = _clients()
+    t0 = time.perf_counter()
+    stack_round([cl.data for cl in prep_clients], _fl().local_epochs)
+    us_prep = (time.perf_counter() - t0) * 1e6
+    emit("round_engine/host_prep", us_prep,
+         f"C={NUM_CLIENTS};overlappable=1")
+    stepped = FedPhD(MICRO_UNET, _fl(), _clients(), rng_seed=0,
+                     engine="vectorized", prune=False)
+    piped = FedPhD(MICRO_UNET, _fl(), _clients(), rng_seed=0,
+                   engine="vectorized", prune=False)
+    stepped.run_round(1)                   # warmup: jit compile
+    piped.run_round(1)
+
+    t0 = time.perf_counter()
+    for r in range(2, rounds + 2):
+        stepped.run_round(r)
+    us_step = (time.perf_counter() - t0) / rounds * 1e6
+    t0 = time.perf_counter()
+    piped.run(rounds + 1)
+    us_pipe = (time.perf_counter() - t0) / rounds * 1e6
+
+    overlap = us_step / max(us_pipe, 1e-9)
+    shape = f"C={NUM_CLIENTS};E={NUM_EDGES};B={BATCH};R={rounds}"
+    emit("round_engine/run_round_stepped", us_step, shape)
+    emit("round_engine/run_pipelined", us_pipe,
+         f"{shape};overlap={overlap:.2f}x")
+    # both drivers must land on identical trajectories
+    for a, b in zip(stepped.history, piped.history):
+        assert a.comm_gb == b.comm_gb and abs(a.loss - b.loss) < 1e-6, \
+            "pipelined run() diverged from stepped run_round()"
+
 
 if __name__ == "__main__":
     main()

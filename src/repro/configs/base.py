@@ -112,6 +112,13 @@ class ModelConfig:
     # --- numerics ------------------------------------------------------------
     dtype: str = "bfloat16"              # activation dtype
     param_dtype: str = "bfloat16"        # parameter dtype (fp32 master in opt)
+    # --- compute backend -----------------------------------------------------
+    # repro.models.ops dispatch: "xla" | "pallas" | "ref"; "" resolves
+    # via $FEDPHD_BACKEND (trainers bake the resolved name in at
+    # construction, so jit caches and checkpoints pin a concrete
+    # backend).  Part of the frozen config on purpose: the backend is a
+    # static argument of every compiled step/round program.
+    backend: str = ""
 
     def __post_init__(self):
         if self.arch_type != "unet":

@@ -37,6 +37,7 @@ from repro.fl.engine import (make_round_engine, resolve_engine, route_engine,
 # repro.fl.record when the flat baselines adopted the same schema.
 from repro.fl.record import RoundRecord, RunResult, evals_of
 from repro.models import model
+from repro.models.ops import resolve_backend
 from repro.optim import adam_from_tree, adam_init
 
 
@@ -54,6 +55,10 @@ class FedPhD:
             "auto" — vectorized whenever the selected clients share a
             batch shape, sequential (with a one-time warning) otherwise;
             None (default) — $FEDPHD_ENGINE if set, else "auto".
+    cfg.backend: the compute backend every compiled program routes its
+            tensor-core ops through (repro.models.ops: "xla" | "pallas"
+            | "ref"; "" resolves via $FEDPHD_BACKEND at construction
+            and the concrete name is baked into self.cfg).
     persistent_opt: carry per-client Adam moments across rounds in a
             stacked (N, ...) device buffer, gathered/scattered by each
             round's participation selection.  Off by default (the paper
@@ -74,7 +79,10 @@ class FedPhD:
                  persistent_opt: bool = False,
                  mesh=None, client_axis: str = "data",
                  eval_fn: Optional[Callable] = None, eval_every: int = 0):
-        self.cfg = cfg
+        # bake the resolved compute backend into the frozen config so
+        # every compiled program (and the checkpoint manifest) pins a
+        # concrete backend even when it came from $FEDPHD_BACKEND
+        self.cfg = cfg = cfg.replace(backend=resolve_backend(cfg.backend))
         self.fl = fl
         self.clients = clients
         self.selection = selection
@@ -114,7 +122,8 @@ class FedPhD:
             self.rng, sub = jax.random.split(self.rng)
             scores = random_scores(sub, self.groups)
         else:  # group_norm or oneshot_l2
-            scores = l2_scores(self.params, self.groups)
+            scores = l2_scores(self.params, self.groups,
+                               backend=self.cfg.backend)
         masks = make_masks(scores, self.groups, self.fl.prune_ratio)
         self.params, self.cfg, report = compact(self.params, self.cfg,
                                                 self.groups, masks)
@@ -254,13 +263,15 @@ class FedPhD:
             self._opt_stack = tree_scatter(self._opt_stack, idx_arr,
                                            out["opt"])
         agg_stack = out["agg"]
-        losses = np.asarray(out["losses"])   # the round's ONE host sync
+        # NO host sync here: the (C,) loss array stays a device future
+        # until _finish_round — under the pipelined run() the next
+        # round's host-side data prep and H2D copy overlap this round's
+        # device compute before anything blocks on it
+        round_losses = out["losses"]
 
-        round_losses: List[float] = []
         comm_bytes = 0.0
-        for i, (e, cid) in enumerate(order):
+        for e, cid in order:
             cl = self.clients[cid]
-            round_losses.append(float(losses[i]))
             self.edges[e].update(cl.q_n, cl.n_samples)          # Eq. 19
             comm_bytes += self.comm.client_edge(mbytes)          # upload
         if r % fl.edge_agg_every == 0:
@@ -276,6 +287,20 @@ class FedPhD:
 
     # -- one communication round (Alg. 1 lines 3-32) -------------------------
     def run_round(self, r: int) -> RoundRecord:
+        return self._finish_round(self._start_round(r))
+
+    def _start_round(self, r: int) -> Dict:
+        """Dispatch one round: selection, host data prep + H2D, the
+        round program, edge/cloud aggregation and (at r = R_s) pruning
+        — everything except blocking on the device losses.  Returns the
+        pending-round dict ``_finish_round`` turns into a RoundRecord.
+
+        On the vectorized engine nothing here forces a host sync, so
+        ``run()`` double-buffers rounds: round r+1's ``stacked_epochs``
+        shuffle/stack and H2D copy (the one buffer donation could not
+        cover — ROADMAP "Open items") run while round r's program is
+        still executing.
+        """
         fl = self.fl
         C = max(1, round(fl.participation * len(self.clients)))
         sel_ids = self.np_rng.choice(len(self.clients), size=C, replace=False)
@@ -331,17 +356,32 @@ class FedPhD:
             for e in self.edges:
                 e.refresh()
 
+        # snapshot end-of-round state the record needs: edge SH and the
+        # params/cfg the eval hook sees must not leak mutations from a
+        # round dispatched before this one is finalized
+        return {"round": r, "losses": round_losses,
+                "comm_bytes": comm_bytes, "sel_ids": sel_ids,
+                "pruned": pruned_this_round, "params": self.params,
+                "cfg": self.cfg, "params_m": self._param_count_m(),
+                "edge_sh": [e.sh(self.q_u) for e in self.edges]}
+
+    def _finish_round(self, pend: Dict) -> RoundRecord:
+        """Sync the pending round's losses and append its RoundRecord."""
+        losses = pend["losses"]
+        if not isinstance(losses, list):          # device future -> host
+            losses = [float(x) for x in np.asarray(losses)]
+        r = pend["round"]
         rec = RoundRecord(
             round=r,
-            loss=float(np.mean(round_losses)) if round_losses else float("nan"),
-            comm_gb=comm_bytes / 1e9,
-            params_m=self._param_count_m(),
-            selected=[int(c) for c in sel_ids],
-            edge_sh=[e.sh(self.q_u) for e in self.edges],
-            pruned=pruned_this_round,
+            loss=float(np.mean(losses)) if losses else float("nan"),
+            comm_gb=pend["comm_bytes"] / 1e9,
+            params_m=pend["params_m"],
+            selected=[int(c) for c in pend["sel_ids"]],
+            edge_sh=pend["edge_sh"],
+            pruned=pend["pruned"],
         )
         if self.eval_fn and self.eval_every and r % self.eval_every == 0:
-            rec.eval = self.eval_fn(self.params, self.cfg, r)
+            rec.eval = self.eval_fn(pend["params"], pend["cfg"], r)
         self.history.append(rec)
         return rec
 
@@ -350,12 +390,35 @@ class FedPhD:
         """Run rounds ``len(history)+1 .. rounds`` (continues after a
         restore).  Returns ``RunResult`` — unpacks as the legacy
         ``history, evals`` tuple; eval results also land in
-        ``RoundRecord.eval`` (the unified hook contract)."""
+        ``RoundRecord.eval`` (the unified hook contract).
+
+        Rounds are double-buffered: round r+1 is dispatched
+        (``_start_round`` — selection, stacked_epochs shuffle/stack,
+        H2D copy, round-program dispatch) before round r's losses are
+        synced (``_finish_round``), so host-side data prep overlaps
+        device compute on the vectorized engine.  Records are
+        finalized in round order and the per-round numerics are
+        identical to stepping ``run_round`` directly — only the sync
+        point moves.
+        """
         rounds = rounds or self.fl.rounds
         if eval_every is not None:            # legacy per-call override
             self.eval_every = eval_every
-        for r in range(len(self.history) + 1, rounds + 1):
-            self.run_round(r)
+        pend = None
+        try:
+            for r in range(len(self.history) + 1, rounds + 1):
+                cur = self._start_round(r)
+                prev, pend = pend, None
+                if prev is not None:
+                    self._finish_round(prev)
+                pend = cur
+        finally:
+            # a raising _start_round (e.g. strict-vectorized hitting a
+            # ragged selection) must not orphan the already-executed
+            # previous round: finalize it so history matches the
+            # advanced trainer state
+            if pend is not None:
+                self._finish_round(pend)
         return RunResult(self.history, evals_of(self.history))
 
     # -- checkpoint state (repro.experiment resume contract) -----------------
@@ -391,7 +454,9 @@ class FedPhD:
         """Inverse of ``state()`` on a trainer built with the same
         constructor arguments (same cfg/fl/clients/seed)."""
         to_dev = lambda t: jax.tree.map(jnp.asarray, t)
-        self.cfg = config_from_dict(meta["cfg"])
+        cfg = config_from_dict(meta["cfg"])
+        # pre-backend checkpoints carry backend="" — resolve as at init
+        self.cfg = cfg.replace(backend=resolve_backend(cfg.backend))
         self.pruned = bool(meta["pruned"])
         self.params = to_dev(arrays["params"])
         self.rng = jnp.asarray(arrays["rng"])

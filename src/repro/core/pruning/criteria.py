@@ -1,4 +1,14 @@
-"""Pruning criteria: L2 group-norm (paper §IV-A) and random (FedPhD-OS)."""
+"""Pruning criteria: L2 group-norm (paper §IV-A) and random (FedPhD-OS).
+
+The per-unit sum-of-squares reduction (the Eq. 17 inner term, shared
+with the Omega regularizer) dispatches through
+:func:`repro.models.ops.group_sq_norms_2d`: any non-scan-stacked group
+member is a contiguous chunk-reshape — slice the owned span, move the
+group axis last, reshape to ``(K, size*chunk)`` — which is exactly the
+layout the ``group_l2_norms`` Pallas kernel reduces.  Scan-stacked
+members keep the jnp fallback (their leading cycle axis must survive
+the reduction).
+"""
 from __future__ import annotations
 
 from typing import Dict, List
@@ -7,9 +17,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.pruning.groups import PruneGroup, GroupMember, get_path
+from repro.models import ops
 
 
-def member_unit_sq(params, g: PruneGroup, m: GroupMember) -> jnp.ndarray:
+def member_unit_sq(params, g: PruneGroup, m: GroupMember,
+                   backend: str = "") -> jnp.ndarray:
     """Sum of squares per unit for one member.
 
     Returns (size,) or (stacked, size) float32.
@@ -18,6 +30,10 @@ def member_unit_sq(params, g: PruneGroup, m: GroupMember) -> jnp.ndarray:
     axis = m.axis + (1 if g.stacked else 0)
     sl = jax.lax.slice_in_dim(p, m.offset, m.offset + g.size * m.chunk,
                               axis=axis)
+    if ops.resolve_backend(backend) != "xla" and not g.stacked:
+        w2d = jnp.moveaxis(sl, axis, -1).reshape(
+            -1, g.size * m.chunk).astype(jnp.float32)
+        return ops.group_sq_norms_2d(w2d, g.size, backend=backend)
     shape = list(sl.shape)
     shape[axis:axis + 1] = [g.size, m.chunk]
     r = sl.reshape(shape).astype(jnp.float32)
@@ -26,18 +42,20 @@ def member_unit_sq(params, g: PruneGroup, m: GroupMember) -> jnp.ndarray:
     return jnp.sum(jnp.square(r), axis=reduce_axes)
 
 
-def group_sq_norms(params, g: PruneGroup) -> jnp.ndarray:
+def group_sq_norms(params, g: PruneGroup, backend: str = "") -> jnp.ndarray:
     """||theta^g[k]||_2^2 per unit k (Eq. 17 inner term)."""
     out = None
     for m in g.members:
-        s = member_unit_sq(params, g, m)
+        s = member_unit_sq(params, g, m, backend)
         out = s if out is None else out + s
     return out
 
 
-def l2_scores(params, groups: List[PruneGroup]) -> Dict[str, jnp.ndarray]:
+def l2_scores(params, groups: List[PruneGroup],
+              backend: str = "") -> Dict[str, jnp.ndarray]:
     """Group-norm importance scores (sqrt of summed squares)."""
-    return {g.name: jnp.sqrt(group_sq_norms(params, g)) for g in groups}
+    return {g.name: jnp.sqrt(group_sq_norms(params, g, backend))
+            for g in groups}
 
 
 def random_scores(rng, groups: List[PruneGroup]) -> Dict[str, jnp.ndarray]:

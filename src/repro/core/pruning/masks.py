@@ -40,9 +40,9 @@ def make_masks(scores: Dict[str, jnp.ndarray], groups: List[PruneGroup],
     for g in groups:
         s = scores[g.name]
         k = kept_count(g, ratio)
-        thresh = -jnp.sort(-s, axis=-1)[..., k - 1:k]       # k-th largest
-        mask = (s >= thresh).astype(jnp.float32)
-        # break ties deterministically: keep exactly k per row
+        # rank-based top-k: ties break deterministically (stable argsort)
+        # and exactly k units survive per row — a >=-threshold mask
+        # would keep extras on tied scores
         idx = jnp.argsort(-s, axis=-1, stable=True)
         rank = jnp.argsort(idx, axis=-1, stable=True)
         mask = (rank < k).astype(jnp.float32)

@@ -31,11 +31,14 @@ def depth_lambdas(groups: List[PruneGroup], lambda0: float) -> Dict[str, np.ndar
 
 
 def omega(params, groups: List[PruneGroup],
-          lambdas: Dict[str, np.ndarray]) -> jnp.ndarray:
-    """The regularization term added to the local loss during sparse rounds."""
+          lambdas: Dict[str, np.ndarray],
+          backend: str = "") -> jnp.ndarray:
+    """The regularization term added to the local loss during sparse
+    rounds.  ``backend`` routes the inner group reductions through
+    :func:`repro.models.ops.group_sq_norms_2d` (xla | pallas | ref)."""
     total = jnp.zeros((), jnp.float32)
     for g in groups:
-        sq = group_sq_norms(params, g)                       # (size,) or (C, size)
+        sq = group_sq_norms(params, g, backend)              # (size,) or (C, size)
         lam = jnp.asarray(lambdas[g.name])
         if g.stacked:
             total = total + jnp.sum(lam * jnp.sum(sq, axis=-1))

@@ -40,6 +40,10 @@ class Experiment:
                  eval_fn: Optional[Callable] = None):
         self.spec = spec
         self.model_cfg = get_config(spec.model)
+        if spec.backend:
+            # thread the spec's compute backend into the model config —
+            # the trainer resolves ""/$FEDPHD_BACKEND at construction
+            self.model_cfg = self.model_cfg.replace(backend=spec.backend)
         self.images = self.labels = None
         if clients is None:
             clients, self.images, self.labels = make_clients(spec)

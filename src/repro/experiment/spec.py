@@ -51,6 +51,9 @@ class ExperimentSpec:
     aggregation: str = "sh"         # fedphd ablation: "sh" | "fedavg"
     prune: bool = True              # fedphd only (flat methods ignore)
     engine: Optional[str] = None    # auto | vectorized | sequential
+    backend: Optional[str] = None   # xla | pallas | ref compute backend
+                                    # (None = $FEDPHD_BACKEND or xla);
+                                    # threaded into ModelConfig.backend
     persistent_opt: bool = False
     lr: float = 2e-4
     eval_every: int = 0             # 0 = never call the eval hook

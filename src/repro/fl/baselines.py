@@ -116,7 +116,11 @@ class FlatTrainer:
                  eval_fn: Optional[Callable] = None, eval_every: int = 0):
         assert method in FLAT_METHODS
         self.method = method
-        self.cfg = cfg
+        # pin the resolved compute backend (repro.models.ops) so every
+        # compiled step/round program and the memoized engine key carry
+        # a concrete backend — mirrors FedPhD
+        from repro.models.ops import resolve_backend
+        self.cfg = cfg = cfg.replace(backend=resolve_backend(cfg.backend))
         self.fl = fl
         self.clients = clients
         self.lr = lr

@@ -60,7 +60,7 @@ def _cosine(a, b):
 
 
 def make_loss_fn(cfg: ModelConfig, fl: FLConfig, *, method: str = "fedphd",
-                 sparse: bool = False, groups=None):
+                 sparse: bool = False, groups=None, prune_masks=None):
     """Method-parameterized local loss (the SINGLE definition both the
     sequential per-batch step and the vectorized round engine close
     over, so the two paths are equivalent by construction).
@@ -68,13 +68,18 @@ def make_loss_fn(cfg: ModelConfig, fl: FLConfig, *, method: str = "fedphd",
     Returns ``loss_fn(params, batch, rng, ctx)``; ctx carries the
     method's anchors ("global_params", "prev_params", "c_local",
     "c_global", ... — static structure per jit).
+
+    ``cfg.backend`` selects the compute backend for every tensor-core
+    op inside (repro.models.ops); ``prune_masks`` switches the U-Net
+    forward to the masked sparse-phase path (col/row-masked GEMMs
+    instead of training on pre-zeroed weights).
     """
     lambdas = depth_lambdas(groups, fl.lambda0) if (sparse and groups) else None
 
     def loss_fn(params, batch, rng, ctx):
-        loss = model.loss_fn(params, cfg, batch, rng)
+        loss = model.loss_fn(params, cfg, batch, rng, masks=prune_masks)
         if sparse and groups:
-            loss = loss + omega(params, groups, lambdas)
+            loss = loss + omega(params, groups, lambdas, backend=cfg.backend)
         if method == "fedprox":
             loss = loss + 0.5 * fl.fedprox_mu * tree_sq_dist(
                 params, ctx["global_params"])
@@ -99,14 +104,15 @@ def scaffold_correction(grads, ctx):
 
 
 def make_local_step(cfg: ModelConfig, fl: FLConfig, *, method: str = "fedphd",
-                    sparse: bool = False, groups=None, lr: float = 2e-4):
+                    sparse: bool = False, groups=None, lr: float = 2e-4,
+                    prune_masks=None):
     """Returns jitted step(params, opt_state, batch, rng, ctx) -> (...)
 
     ctx: dict with optional "global_params", "prev_params", "c_local",
     "c_global" (present per method; static structure per jit).
     """
     loss_fn = make_loss_fn(cfg, fl, method=method, sparse=sparse,
-                           groups=groups)
+                           groups=groups, prune_masks=prune_masks)
 
     @jax.jit
     def step(params, opt_state, batch, rng, ctx):

@@ -175,7 +175,8 @@ def make_train_one(loss_fn, *, method: str = "fedphd", lr: float = 2e-4,
 
 def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
                       method: str = "fedphd", sparse: bool = False,
-                      groups=None, lr: float = 2e-4, unroll: int = 8):
+                      groups=None, lr: float = 2e-4, unroll: int = 8,
+                      prune_masks=None):
     """Build the jitted vectorized round program for ``method``.
 
     Plain (non-sparse) engines are memoized on the hashable
@@ -183,6 +184,14 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
     same configs shares one engine function and therefore one XLA
     compile cache — constructing several trainers (equivalence tests,
     benches, sweeps) no longer recompiles the round program.
+
+    ``cfg.backend`` selects the compute backend (repro.models.ops:
+    xla | pallas | ref) for every tensor-core op the program traces —
+    it is part of the frozen config, so it participates in both the
+    memoization key and jit's own cache.  ``prune_masks`` (PruneGroup
+    name -> 0/1 row) switches the forward to the masked sparse-phase
+    path (block-masked GEMMs instead of pre-zeroed weights); masked
+    engines are never memoized.
 
     Returns ``engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
     ctx=None, opt_states=None, masked=True, per_client_opt=False)``
@@ -207,10 +216,11 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
                  which persist per-client state between rounds)
       "c_new", "dc_mean": SCAFFOLD c_i+ stack and mean control delta
     """
-    if not sparse and groups is None:
+    if not sparse and groups is None and prune_masks is None:
         return _plain_round_engine(cfg, fl, method, lr, unroll)
     return _build_round_engine(cfg, fl, method=method, sparse=sparse,
-                               groups=groups, lr=lr, unroll=unroll)
+                               groups=groups, lr=lr, unroll=unroll,
+                               prune_masks=prune_masks)
 
 
 @lru_cache(maxsize=64)
@@ -220,9 +230,10 @@ def _plain_round_engine(cfg, fl, method, lr, unroll):
 
 
 def _build_round_engine(cfg: ModelConfig, fl: FLConfig, *, method: str,
-                        sparse: bool, groups, lr: float, unroll: int):
+                        sparse: bool, groups, lr: float, unroll: int,
+                        prune_masks=None):
     loss_fn = make_loss_fn(cfg, fl, method=method, sparse=sparse,
-                           groups=groups)
+                           groups=groups, prune_masks=prune_masks)
     train_one = make_train_one(loss_fn, method=method, lr=lr, unroll=unroll)
     ctx_axes = CTX_AXES[method]
     return_trained = method in ("moon", "feddiffuse")

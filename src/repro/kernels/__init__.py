@@ -4,4 +4,17 @@
 - flash_attention:     streaming-softmax attention, causal + window
 - rglru_scan:          blocked linear recurrence (RG-LRU / SSM)
 - group_l2_norms:      pruning-criterion group reductions
+
+Training code does NOT import these directly: the compute-backend
+dispatch layer :mod:`repro.models.ops` is the front door —
+``ops.masked_matmul`` / ``ops.matmul`` / ``ops.conv`` route to
+``block_masked_matmul``, ``ops.attention`` to ``flash_attention``, and
+``ops.group_sq_norms_2d`` (via ``repro.core.pruning.criteria``) to
+``group_l2_norms``, each selected per-run by ``ModelConfig.backend``
+(``xla`` | ``pallas`` | ``ref``, env default ``$FEDPHD_BACKEND``) and
+wrapped in ``custom_vjp`` where the loss path needs gradients.  The
+per-kernel ``ops.py`` wrappers here stay the tile-alignment gate: off-
+spec shapes fall back to the ``ref.py`` oracles.  ``rglru_scan`` is
+reachable through the RG-LRU layer stack (``repro.models.rglru``), not
+the FedPhD U-Net path.
 """

@@ -13,8 +13,10 @@ import jax.numpy as jnp
 class ApplyOptions:
     """Runtime options for model application (not part of the model config)."""
     attn_chunk: int = 1024          # q-block size for chunked attention; 0 = dense
-    use_flash: bool = False         # use the Pallas flash-attention kernel
-    use_masked_matmul: bool = False # use the Pallas block-masked matmul for pruned nets
+    # compute backend for ops-routed tensor ops ("" = cfg.backend /
+    # $FEDPHD_BACKEND / "xla" — see repro.models.ops.resolve_backend)
+    backend: str = ""
+    use_flash: bool = False         # legacy alias: backend="pallas" for attention
     remat: bool = True              # activation checkpointing over layer blocks
     deterministic: bool = True      # disable dropout
     # activation-sharding constraints (mesh axis names; () = unconstrained).

@@ -33,10 +33,16 @@ def init(rng, cfg: ModelConfig) -> Params:
 # Loss
 # ---------------------------------------------------------------------------
 def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
-            rng, opts: ApplyOptions = DEFAULT_OPTS) -> jnp.ndarray:
+            rng, opts: ApplyOptions = DEFAULT_OPTS, *,
+            masks=None) -> jnp.ndarray:
+    """``masks``: optional sparse-phase prune masks (PruneGroup name ->
+    0/1 row); the U-Net forward then routes its GEMMs through the
+    backend's masked matmul instead of training on pre-zeroed weights
+    (transformer archs ignore it — their sparse phase is mask-free)."""
     if cfg.arch_type == "unet":
         schedule = linear_schedule(cfg.diffusion_steps)
-        eps_fn = lambda x_t, t: unet_lib.apply_unet(params, cfg, x_t, t)
+        eps_fn = lambda x_t, t: unet_lib.apply_unet(params, cfg, x_t, t,
+                                                    masks=masks)
         return ddpm_loss(eps_fn, schedule, batch["images"], rng)
     hidden, aux = tfm.forward(params, cfg, batch, opts)
     return tfm.chunked_xent(params, cfg, hidden, batch["labels"],

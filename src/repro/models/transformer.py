@@ -26,6 +26,7 @@ from repro.configs.base import (ModelConfig, ATTN_GLOBAL, ATTN_LOCAL,
                                 RECURRENT, RWKV)
 from repro.models import attention as attn_lib
 from repro.models import mla as mla_lib
+from repro.models import ops
 from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
 from repro.models import rwkv6 as rwkv_lib
@@ -203,9 +204,13 @@ def _self_attention(ap, h, positions, cfg: ModelConfig, *, window: int,
     v = constrain_heads(v, opts)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
-    if opts.use_flash and causal and cfg.attn_softcap == 0.0:
-        from repro.kernels.flash_attention import ops as flash_ops
-        out = flash_ops.flash_attention(q, k, v, causal=True, window=window)
+    backend = ops.resolve_backend(opts.backend or cfg.backend)
+    if ((opts.use_flash or backend == "pallas") and causal
+            and cfg.attn_softcap == 0.0):
+        # the one-off flash import now rides the shared dispatch layer:
+        # use_flash is a legacy alias for backend="pallas" on attention
+        out = ops.attention(q, k, v, causal=True, window=window,
+                            backend="pallas")
     else:
         out = attn_lib.attend(q, k, v, q_positions=positions,
                               kv_positions=positions, causal=causal,

@@ -6,15 +6,25 @@ U-Net.  Structured-pruning dependency groups: the *internal* channels of
 every ResBlock (conv1-out ∥ temb-proj-out ∥ norm2 ∥ conv2-in) and the
 per-head channels of every attention block — the DepGraph-consistent
 groups that do not touch the residual stream (DESIGN.md §3).
+
+Every tensor-core op (conv as im2col+GEMM, the temb denses, the
+attention blocks) routes through :mod:`repro.models.ops`, selected by
+``cfg.backend`` — xla einsums (default), the Pallas kernels, or the
+pure-jnp reference.  ``apply_unet(..., masks=)`` runs the sparse-phase
+masked forward: per-group 0/1 masks (keyed by PruneGroup name) are
+applied as col/row masks on each block's GEMMs instead of pre-zeroing
+the weights, so the pallas backend skips whole pruned MXU tiles —
+numerically identical to ``apply_masks`` + plain forward.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.models import ops
 from repro.models.common import group_norm, sinusoidal_embedding
 
 Params = Dict[str, Any]
@@ -29,40 +39,12 @@ def conv_init(key, kh, kw, cin, cout, scale=1.0):
     return {"w": w.astype(jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
 
 
-def _same_pads(size: int, k: int, stride: int):
-    out = -(-size // stride)
-    pad = max((out - 1) * stride + k - size, 0)
-    return out, (pad // 2, pad - pad // 2)
-
-
-def conv(p, x, stride=1, padding="SAME"):
-    """SAME conv lowered as im2col + einsum (matches lax.conv numerics
-    to fp32 tolerance).
-
-    The einsum formulation matters for the vectorized round engine
-    (repro/fl/engine.py): under vmap the conv WEIGHTS carry a client
-    axis, which XLA:CPU executes as a pathologically slow batched-
-    filter convolution — and conv thunks inside lax.scan additionally
-    lose the runtime thread pool.  As an einsum it batches into plain
-    GEMMs, which stay fast both vmapped and inside scan.
-    """
-    if padding != "SAME":
-        raise ValueError(f"im2col conv supports SAME padding only, "
-                         f"got {padding!r}")
-    w = p["w"]
-    kh, kw, cin, cout = w.shape
-    if kh == kw == 1 and stride == 1:
-        return jnp.einsum("bhwc,cd->bhwd", x, w[0, 0]) + p["b"]
-    H, W = x.shape[1], x.shape[2]
-    oh, (ph0, ph1) = _same_pads(H, kh, stride)
-    ow, (pw0, pw1) = _same_pads(W, kw, stride)
-    xp = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
-    cols = [xp[:, di:di + stride * (oh - 1) + 1:stride,
-               dj:dj + stride * (ow - 1) + 1:stride, :]
-            for di in range(kh) for dj in range(kw)]
-    patches = jnp.stack(cols, axis=3)            # (B, oh, ow, kh*kw, cin)
-    y = jnp.einsum("bhwkc,kcd->bhwd", patches, w.reshape(kh * kw, cin, cout))
-    return y + p["b"]
+def conv(p, x, stride=1, padding="SAME", *, backend: str = "",
+         col_mask=None, row_mask=None):
+    """SAME conv — see :func:`repro.models.ops.conv` for the im2col
+    lowering rationale and the masked sparse-phase contract."""
+    return ops.conv(p, x, stride=stride, padding=padding, backend=backend,
+                    col_mask=col_mask, row_mask=row_mask)
 
 
 def dense_p(key, cin, cout, scale=1.0):
@@ -70,8 +52,8 @@ def dense_p(key, cin, cout, scale=1.0):
     return {"w": w.astype(jnp.float32), "b": jnp.zeros((cout,), jnp.float32)}
 
 
-def dense(p, x):
-    return x @ p["w"] + p["b"]
+def dense(p, x, *, backend: str = "", col_mask=None):
+    return ops.dense(p, x, backend=backend, col_mask=col_mask)
 
 
 def norm_p(c):
@@ -96,16 +78,24 @@ def init_resblock(key, cin, cout, temb_dim):
     return p
 
 
-def apply_resblock(p, x, temb, *, dropout_rng=None, dropout=0.0):
+def apply_resblock(p, x, temb, *, dropout_rng=None, dropout=0.0,
+                   backend: str = "", mask=None):
+    """``mask`` (cout,): the block's PruneGroup mask over its internal
+    channels — conv1/temb output columns, norm2 affine, conv2 input
+    rows — exactly the members ``apply_masks`` would pre-zero."""
     h = jax.nn.silu(group_norm(x, p["norm1"]["scale"], p["norm1"]["bias"]))
-    h = conv(p["conv1"], h)
-    h = h + dense(p["temb"], jax.nn.silu(temb))[:, None, None, :]
-    h = jax.nn.silu(group_norm(h, p["norm2"]["scale"], p["norm2"]["bias"]))
+    h = conv(p["conv1"], h, backend=backend, col_mask=mask)
+    h = h + dense(p["temb"], jax.nn.silu(temb), backend=backend,
+                  col_mask=mask)[:, None, None, :]
+    n2s, n2b = p["norm2"]["scale"], p["norm2"]["bias"]
+    if mask is not None:
+        n2s, n2b = n2s * mask, n2b * mask
+    h = jax.nn.silu(group_norm(h, n2s, n2b))
     if dropout > 0.0 and dropout_rng is not None:
         keep = jax.random.bernoulli(dropout_rng, 1.0 - dropout, h.shape)
         h = h * keep / (1.0 - dropout)
-    h = conv(p["conv2"], h)
-    skip = conv(p["skip"], x) if "skip" in p else x
+    h = conv(p["conv2"], h, backend=backend, row_mask=mask)
+    skip = conv(p["skip"], x, backend=backend) if "skip" in p else x
     return skip + h
 
 
@@ -118,17 +108,21 @@ def init_attnblock(key, c):
     }
 
 
-def apply_attnblock(p, x):
+def apply_attnblock(p, x, *, backend: str = "", mask=None):
+    """``mask`` (c,): per-channel attention group mask — tiled over the
+    q/k/v thirds of the qkv projection and the proj input rows."""
     B, H, W, C = x.shape
     h = group_norm(x, p["norm"]["scale"], p["norm"]["bias"])
-    qkv = conv(p["qkv"], h)
+    qkv_mask = None if mask is None else jnp.concatenate([mask, mask, mask])
+    qkv = conv(p["qkv"], h, backend=backend, col_mask=qkv_mask)
     Ci = qkv.shape[-1] // 3          # may be < C after structured pruning
     qkv = qkv.reshape(B, H * W, 3, Ci)
     q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
-    logits = jnp.einsum("bqc,bkc->bqk", q, k) * (Ci ** -0.5)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bqk,bkc->bqc", probs, v).reshape(B, H, W, Ci)
-    return x + conv(p["proj"], out)
+    out = ops.attention(q[:, :, None, :], k[:, :, None, :],
+                        v[:, :, None, :], causal=False,
+                        backend=backend)[:, :, 0, :]
+    out = out.reshape(B, H, W, Ci)
+    return x + conv(p["proj"], out, backend=backend, row_mask=mask)
 
 
 # ---------------------------------------------------------------------------
@@ -197,47 +191,65 @@ def init_unet(key, cfg: ModelConfig) -> Params:
 
 
 def apply_unet(params: Params, cfg: ModelConfig, x, t, *,
-               dropout_rng=None, train: bool = False):
-    """Noise prediction eps_theta(x_t, t).  x: (B,H,W,C) NHWC; t: (B,)."""
+               dropout_rng=None, train: bool = False,
+               masks: Optional[Dict[str, jnp.ndarray]] = None):
+    """Noise prediction eps_theta(x_t, t).  x: (B,H,W,C) NHWC; t: (B,).
+
+    ``masks``: optional sparse-phase prune masks keyed by PruneGroup
+    name (``make_masks`` output for ``unet_groups``) — the forward then
+    equals ``apply_unet(apply_masks(params, groups, masks), ...)`` but
+    routes the masked GEMMs through the backend's masked matmul.
+    """
+    backend = cfg.backend
     drop = cfg.dropout if train else 0.0
     rngs = iter(jax.random.split(dropout_rng, 256)) if dropout_rng is not None \
         else iter([])
     nrng = (lambda: next(rngs)) if dropout_rng is not None else (lambda: None)
+    # PruneGroup names are "/".join(path) of the block prefix
+    mk = (lambda *path: None) if masks is None else \
+        (lambda *path: masks.get("/".join(map(str, path))))
 
     temb = sinusoidal_embedding(t, cfg.base_channels)
-    temb = dense(params["temb2"], jax.nn.silu(dense(params["temb1"], temb)))
+    temb = dense(params["temb2"], jax.nn.silu(
+        dense(params["temb1"], temb, backend=backend)), backend=backend)
 
-    h = conv(params["conv_in"], x)
+    h = conv(params["conv_in"], x, backend=backend)
     skips = [h]
     for lvl, lvl_p in enumerate(params["down"]):
-        for blk in lvl_p["blocks"]:
+        for bi, blk in enumerate(lvl_p["blocks"]):
             h = apply_resblock(blk["res"], h, temb, dropout_rng=nrng(),
-                               dropout=drop)
+                               dropout=drop, backend=backend,
+                               mask=mk("down", lvl, "blocks", bi, "res"))
             if "attn" in blk:
-                h = apply_attnblock(blk["attn"], h)
+                h = apply_attnblock(blk["attn"], h, backend=backend,
+                                    mask=mk("down", lvl, "blocks", bi,
+                                            "attn"))
             skips.append(h)
         if "down" in lvl_p:
-            h = conv(lvl_p["down"], h, stride=2)
+            h = conv(lvl_p["down"], h, stride=2, backend=backend)
             skips.append(h)
 
     h = apply_resblock(params["mid"]["res1"], h, temb, dropout_rng=nrng(),
-                       dropout=drop)
-    h = apply_attnblock(params["mid"]["attn"], h)
+                       dropout=drop, backend=backend, mask=mk("mid", "res1"))
+    h = apply_attnblock(params["mid"]["attn"], h, backend=backend,
+                        mask=mk("mid", "attn"))
     h = apply_resblock(params["mid"]["res2"], h, temb, dropout_rng=nrng(),
-                       dropout=drop)
+                       dropout=drop, backend=backend, mask=mk("mid", "res2"))
 
-    for lvl_p in params["up"]:
-        for blk in lvl_p["blocks"]:
+    for lvl, lvl_p in enumerate(params["up"]):
+        for bi, blk in enumerate(lvl_p["blocks"]):
             h = jnp.concatenate([h, skips.pop()], axis=-1)
             h = apply_resblock(blk["res"], h, temb, dropout_rng=nrng(),
-                               dropout=drop)
+                               dropout=drop, backend=backend,
+                               mask=mk("up", lvl, "blocks", bi, "res"))
             if "attn" in blk:
-                h = apply_attnblock(blk["attn"], h)
+                h = apply_attnblock(blk["attn"], h, backend=backend,
+                                    mask=mk("up", lvl, "blocks", bi, "attn"))
         if "up" in lvl_p:
             B, H, W, C = h.shape
             h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
-            h = conv(lvl_p["up"], h)
+            h = conv(lvl_p["up"], h, backend=backend)
 
     h = jax.nn.silu(group_norm(h, params["norm_out"]["scale"],
                                params["norm_out"]["bias"]))
-    return conv(params["conv_out"], h)
+    return conv(params["conv_out"], h, backend=backend)

@@ -29,3 +29,24 @@ def fedphd_engine_matrix():
     engine, strict = resolve_engine(None)
     assert not strict and engine == (env or "auto")
     return engine
+
+
+@pytest.fixture(scope="session", autouse=True)
+def fedphd_backend_matrix():
+    """CI matrix knob: FEDPHD_BACKEND=xla|pallas|ref pins the default
+    compute backend for every trainer/config that does not set
+    ``ModelConfig.backend`` explicitly (repro.models.ops.resolve_backend
+    reads the env; trainers bake the resolved value into their frozen
+    cfg at construction).  The backend-parity tests pass explicit
+    backends, so every leg still covers all three.  Fails fast on a
+    typo'd value instead of silently running xla thrice.
+    """
+    from repro.models.ops import BACKENDS, resolve_backend
+    env = os.environ.get("FEDPHD_BACKEND")
+    # "" behaves like unset (resolve_backend's `or` chain skips it)
+    if env and env not in BACKENDS:
+        raise RuntimeError(f"FEDPHD_BACKEND={env!r}; expected one of "
+                           f"{BACKENDS}")
+    backend = resolve_backend(None)
+    assert backend == (env or "xla")
+    return backend

@@ -83,6 +83,47 @@ def test_omega_decreases_when_weights_shrink(rng):
     assert om1 > 0
 
 
+def _group(size, unit="channel"):
+    return P.PruneGroup(name=f"g{size}{unit}", size=size, members=(),
+                        unit=unit)
+
+
+def test_alignment_for_128_boundary():
+    """align flips 8 -> 128 exactly when the group is >=1024 wide AND
+    divisible by 128 (DESIGN.md §3.1)."""
+    assert P.masks.alignment_for(_group(1024)) == 128
+    assert P.masks.alignment_for(_group(1152)) == 128
+    assert P.masks.alignment_for(_group(1016)) == 8     # <1024, %8==0
+    assert P.masks.alignment_for(_group(1040)) == 8     # >=1024, %128!=0
+    assert P.masks.alignment_for(_group(1023)) == 1     # divides neither
+    assert P.masks.alignment_for(_group(16)) == 8
+    assert P.masks.alignment_for(_group(12)) == 1       # <16 never rounded
+
+
+def test_kept_count_128_rounding_at_1024():
+    # 1024 * (1-0.44) = 573.44 -> nearest 128-multiple of round(573.44)
+    assert P.kept_count(_group(1024), 0.44) == 512
+    assert P.kept_count(_group(1024), 0.0) == 1024      # never exceeds size
+    # 1024 * 0.56 -> 573 -> but a hair under the .5 crossover rounds up
+    assert P.kept_count(_group(1024), 0.40) == 640      # 614.4 -> 5*128
+    assert P.kept_count(_group(1152), 0.44) == 640      # 645.1 -> 5*128
+
+
+def test_kept_count_clamps_to_alignment():
+    """Extreme ratios clamp to one full alignment unit, never zero."""
+    assert P.kept_count(_group(16), 0.99) == 8          # round(0.16)->1->8
+    assert P.kept_count(_group(1024), 0.999) == 128
+    assert P.kept_count(_group(64), 1.0) == 8
+    assert P.kept_count(_group(12), 1.0) == 1           # align=1: floor 1
+
+
+def test_kept_count_heads_and_experts_unrounded():
+    for unit in ("head", "expert"):
+        assert P.masks.alignment_for(_group(32, unit)) == 1
+        assert P.kept_count(_group(32, unit), 0.44) == 18   # round(17.92)
+        assert P.kept_count(_group(32, unit), 0.99) == 1
+
+
 def test_oneshot_random_prunes(rng):
     cfg = smoke_variant("qwen3-moe-235b-a22b")
     params = model.init(rng, cfg)
