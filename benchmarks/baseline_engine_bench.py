@@ -24,7 +24,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import dump_bench_json, emit
 from repro.configs import SMOKE_UNET
 from repro.configs.base import FLConfig
 from repro.data import ClientData, shards_per_client
@@ -86,6 +86,10 @@ def main() -> None:
         emit(f"baseline_engine/{method}/sequential", us_seq, shape)
         emit(f"baseline_engine/{method}/vectorized", us_vec,
              f"{shape};speedup={speedup:.2f}x")
+
+    # medians -> $BENCH_OUT_DIR/BENCH_baselines.json for the CI
+    # regression gate (benchmarks/regression_gate.py)
+    dump_bench_json("baselines")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,10 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, List
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -23,6 +25,69 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def dump_bench_json(bench: str) -> Optional[str]:
+    """Persist every row emitted so far as ``BENCH_<bench>.json`` under
+    ``$BENCH_OUT_DIR`` (no-op when unset) — the machine-readable medians
+    ``benchmarks/regression_gate.py`` compares against the committed
+    baselines in ``benchmarks/baselines/``.  Rows from other modules in
+    the same process (``run.py`` runs several) are harmless: the gate
+    only reads the names present in the committed baseline."""
+    out_dir = os.environ.get("BENCH_OUT_DIR")
+    if not out_dir:
+        return None
+    rows = {}
+    for row in ROWS:
+        name, us, derived = row.split(",", 2)
+        rows[name] = {"us": float(us), "derived": derived}
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "rows": rows}, f, indent=2,
+                  sort_keys=True)
+        f.write("\n")
+    print(f"[bench-json] wrote {path}", flush=True)
+    return path
+
+
+def run_sweep_timed_eval(sweep, eval_fn: Callable):
+    """Run a table bench's sweep with a self-timed eval hook.
+
+    Returns ``(manifest, report, train_s)`` where ``train_s[run_id]``
+    is the run's wall-clock minus its eval cost — so emitted per-round
+    latencies stay *training* numbers even though the FID/IS hook fires
+    inside the timed run.  Holds the pairing invariant in ONE place:
+    the sequential executor runs in manifest insertion order and each
+    bench spec fires its eval exactly once (``eval_every = rounds``),
+    asserted below.  ``save_every=0`` keeps per-round checkpoint I/O
+    out of the timed window (each run's single final save remains —
+    negligible next to the training rounds).
+    """
+    import tempfile
+    import time as _time
+
+    from repro.experiment import run_sweep, write_report
+
+    eval_s: List[float] = []
+
+    def timed(params, cfg, r):
+        t0 = _time.perf_counter()
+        out = eval_fn(params, cfg, r)
+        eval_s.append(_time.perf_counter() - t0)
+        return out
+
+    with tempfile.TemporaryDirectory(prefix=f"{sweep.name}-sweep-") as out:
+        res = run_sweep(sweep, out, eval_fn=timed, save_every=0,
+                        raise_on_error=True)
+        report = write_report(res.manifest, out)
+    runs = res.manifest["runs"]
+    assert len(eval_s) == len(runs), \
+        f"eval fired {len(eval_s)}x for {len(runs)} runs — set " \
+        "eval_every=rounds so the positional pairing below holds"
+    train_s = {rid: entry["wall_s"] - cost
+               for (rid, entry), cost in zip(runs.items(), eval_s)}
+    return res.manifest, report, train_s
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

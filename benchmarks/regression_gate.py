@@ -1,0 +1,133 @@
+"""Benchmark regression gate: fresh medians vs committed baselines.
+
+The engine benches (``round_engine_bench.py``, ``baseline_engine_bench
+.py``) dump their per-row medians as ``BENCH_<name>.json`` into
+``$BENCH_OUT_DIR``; this gate compares them against the committed
+baselines in ``benchmarks/baselines/`` and fails CI on a regression:
+
+- **latency rows**: fail when ``fresh_us > baseline_us * tolerance``
+  (default 3.0 — the 2-core CI box's run-to-run medians swing ~2x, so
+  only a real regression like per-batch dispatch creeping back into the
+  round hot path clears 3x);
+- **speedup rows** (a ``speedup=<x>x`` tag in the derived column): fail
+  when the fresh speedup drops under ``baseline / speedup_tolerance``
+  (default 3.0 — the round-engine speedup has been observed anywhere in
+  3.4-17.5x on that box); the in-bench absolute floors (>= 2x) still
+  apply first.  ``overlap=..x`` tags are informational (pinned ~1.0 on
+  the shared-core CI box by construction) and are not gated.
+
+Updating a baseline is an explicit, reviewed act: copy the fresh
+``BENCH_*.json`` over ``benchmarks/baselines/`` and append the new
+medians to ``benchmarks/baselines/trajectory.json`` (the per-PR bench
+trajectory) in the same commit as the change that moved them.
+
+Usage::
+
+    BENCH_OUT_DIR=out/bench python benchmarks/round_engine_bench.py
+    BENCH_OUT_DIR=out/bench python benchmarks/baseline_engine_bench.py
+    python benchmarks/regression_gate.py --fresh out/bench
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, List, Optional
+
+TOLERANCE = 3.0
+SPEEDUP_TOLERANCE = 3.0
+
+_SPEEDUP = re.compile(r"(?:^|;)speedup=([0-9.]+)x")
+
+
+def _load(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        return json.load(f)["rows"]
+
+
+def _speedup(row: dict) -> Optional[float]:
+    m = _SPEEDUP.search(row.get("derived", ""))
+    return float(m.group(1)) if m else None
+
+
+def compare(baseline: Dict[str, dict], fresh: Dict[str, dict], *,
+            tolerance: float = TOLERANCE,
+            speedup_tolerance: float = SPEEDUP_TOLERANCE
+            ) -> List[str]:
+    """Failure messages for every baseline row the fresh run regressed
+    on (or dropped — renamed rows must update the baseline file)."""
+    failures = []
+    for name, base in sorted(baseline.items()):
+        if name not in fresh:
+            failures.append(f"{name}: missing from the fresh run "
+                            "(renamed/dropped rows must update the "
+                            "committed baseline)")
+            continue
+        row = fresh[name]
+        limit = base["us"] * tolerance
+        verdict = "ok"
+        if row["us"] > limit:
+            verdict = "REGRESSED"
+            failures.append(f"{name}: {row['us']:.0f}us > "
+                            f"{limit:.0f}us (baseline {base['us']:.0f}us "
+                            f"* {tolerance}x)")
+        b_sp, f_sp = _speedup(base), _speedup(row)
+        if b_sp is not None and f_sp is not None \
+                and f_sp < b_sp / speedup_tolerance:
+            verdict = "REGRESSED"
+            failures.append(f"{name}: speedup {f_sp:.2f}x < "
+                            f"{b_sp:.2f}x / {speedup_tolerance}")
+        print(f"  {verdict:>9}  {name}: {row['us']:.0f}us "
+              f"(baseline {base['us']:.0f}us)"
+              + (f" speedup {f_sp:.2f}x (baseline {b_sp:.2f}x)"
+                 if b_sp is not None and f_sp is not None else ""))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default="out/bench",
+                    help="dir with this run's BENCH_*.json "
+                         "(written via $BENCH_OUT_DIR)")
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "baselines"),
+                    help="dir with the committed BENCH_*.json baselines")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    ap.add_argument("--speedup-tolerance", type=float,
+                    default=SPEEDUP_TOLERANCE)
+    args = ap.parse_args(argv)
+
+    baseline_files = sorted(glob.glob(os.path.join(args.baseline,
+                                                   "BENCH_*.json")))
+    if not baseline_files:
+        print(f"no committed baselines under {args.baseline}",
+              file=sys.stderr)
+        return 2
+    failures = []
+    for bpath in baseline_files:
+        fname = os.path.basename(bpath)
+        fpath = os.path.join(args.fresh, fname)
+        print(f"{fname}:")
+        if not os.path.exists(fpath):
+            failures.append(f"{fname}: no fresh medians at {fpath} "
+                            "(did the bench run with $BENCH_OUT_DIR?)")
+            print(f"  MISSING  {fpath}")
+            continue
+        failures += compare(_load(bpath), _load(fpath),
+                            tolerance=args.tolerance,
+                            speedup_tolerance=args.speedup_tolerance)
+    if failures:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,7 +24,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import dump_bench_json, emit
 from repro.configs import SMOKE_UNET
 from repro.configs.base import FLConfig
 from repro.core.hfl import FedPhD
@@ -96,6 +96,9 @@ def main() -> None:
         f"vectorized round engine regressed: {speedup:.2f}x < 2x"
 
     pipelined_ab()
+    # medians -> $BENCH_OUT_DIR/BENCH_round_engine.json for the CI
+    # regression gate (benchmarks/regression_gate.py)
+    dump_bench_json("round_engine")
 
 
 def pipelined_ab() -> None:

@@ -3,17 +3,20 @@
 Reduced scale (smoke U-Net, synthetic 4-class data, few rounds, 10-step
 DDIM, proxy-FID) — the paper's ordering claims, not its absolute values.
 
-The whole table is ONE spec grid over ``method`` through the unified
-experiment API: every row (hierarchical FedPhD variants and flat
-baselines alike) runs via ``repro.experiment.run_spec`` and reports from
-the same RoundRecord history schema.
+The whole table is ONE ``SweepSpec`` over the ``method`` axis through
+``repro.experiment.sweep``: every row (hierarchical FedPhD variants and
+flat baselines alike) runs via the sweep executor into a manifest, the
+per-row FID/IS land through the unified ``eval_fn`` hook at the final
+round, and the emitted numbers come out of ``sweep.report``'s
+aggregation (one seed here, so mean == the value).  Output schema is
+unchanged: ``table1/<method>,us_per_round,fid=..;is=..;params_m=..``.
 """
 from __future__ import annotations
 
-import time
-
-from benchmarks.common import emit, sample_images, smoke_spec
-from repro.experiment import run_spec
+from benchmarks.common import (emit, run_sweep_timed_eval, sample_images,
+                               smoke_spec)
+from repro.data import make_dataset
+from repro.experiment import SweepSpec, dataset_spec
 from repro.metrics import fid_proxy, inception_score_proxy
 
 METHODS = ("fedphd", "fedphd-os", "fedavg", "fedprox", "moon", "scaffold",
@@ -21,21 +24,34 @@ METHODS = ("fedphd", "fedphd-os", "fedavg", "fedprox", "moon", "scaffold",
 
 
 def main(rounds: int = 6) -> None:
-    real = None
+    # eval_every=rounds: the hook fires exactly once, at the final round
+    base = smoke_spec(rounds=rounds).replace(name="table1",
+                                             eval_every=rounds)
+    sweep = SweepSpec(name="table1", base=base,
+                      axes={"method": list(METHODS)},
+                      group_by=("method",))
+    # the FID reference: the spec's own dataset at the spec's seed
+    # (identical to what make_clients partitions across clients)
+    images, _ = make_dataset(dataset_spec(base.data.dataset),
+                             seed=base.seed)
+    real = images[:256]
+
+    def eval_fn(params, cfg, r):
+        fake = sample_images(params, cfg, n=128, steps=10)
+        return {"fid": float(fid_proxy(real, fake)),
+                "is": float(inception_score_proxy(fake))}
+
+    _, report, train_s = run_sweep_timed_eval(sweep, eval_fn)
+    by_method = {g["key"]["method"]: g for g in report["groups"]}
     for method in METHODS:
-        spec = smoke_spec(method, rounds=rounds)
-        t0 = time.perf_counter()
-        exp = run_spec(spec)
-        dt = (time.perf_counter() - t0) * 1e6 / rounds
-        if real is None:
-            real = exp.images[:256]
-        fake = sample_images(exp.params, exp.cfg, n=128, steps=10)
-        fid = fid_proxy(real, fake)
-        is_ = inception_score_proxy(fake)
-        tag = method.replace("-", "_")
-        emit(f"table1/{tag}", dt,
-             f"fid={fid:.2f};is={is_:.3f};"
-             f"params_m={exp.history[-1].params_m:.3f}")
+        g = by_method[method]
+        m = g["metrics"]
+        (rid,) = g["runs"]
+        emit(f"table1/{method.replace('-', '_')}",
+             train_s[rid] * 1e6 / rounds,
+             f"fid={m['eval.fid']['mean']:.2f};"
+             f"is={m['eval.is']['mean']:.3f};"
+             f"params_m={m['params_m']['mean']:.3f}")
 
 
 if __name__ == "__main__":

@@ -2,36 +2,51 @@
 
 FedPhD vs FedAvg at N = 6 and N = 12 clients (scaled-down analogue of the
 paper's 20/50/100); reports final-round training loss and proxy-FID.
-Both methods run as points of one spec grid through
-``repro.experiment.run_spec``.
+
+The 2×2 grid is ONE ``SweepSpec`` (``method`` × ``fl.num_clients``)
+through ``repro.experiment.sweep``, with FID landing through the unified
+``eval_fn`` hook and the emitted numbers read out of ``sweep.report``'s
+aggregation.  Output schema is unchanged:
+``table5/<method>_n<N>,us_per_round,loss=..;fid=..``.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-
-from benchmarks.common import emit, sample_images, smoke_spec
-from repro.experiment import run_spec
+from benchmarks.common import (emit, run_sweep_timed_eval, sample_images,
+                               smoke_spec)
+from repro.data import make_dataset
+from repro.experiment import SweepSpec, dataset_spec
 from repro.metrics import fid_proxy
 
 
 def main(rounds: int = 4) -> None:
+    base = smoke_spec(rounds=rounds).replace(name="table5", prune=False,
+                                             eval_every=rounds)
+    sweep = SweepSpec(name="table5", base=base,
+                      axes={"method": ["fedphd", "fedavg"],
+                            "fl.num_clients": [6, 12]},
+                      group_by=("method", "fl.num_clients"))
+    # the dataset (and so the FID reference) is num_clients-independent:
+    # only its partition across clients changes with N
+    images, _ = make_dataset(dataset_spec(base.data.dataset),
+                             seed=base.seed)
+    real = images[:256]
+
+    def eval_fn(params, cfg, r):
+        fake = sample_images(params, cfg, n=96, steps=10)
+        return {"fid": float(fid_proxy(real, fake))}
+
+    _, report, train_s = run_sweep_timed_eval(sweep, eval_fn)
+    by_key = {(g["key"]["method"], g["key"]["fl.num_clients"]): g
+              for g in report["groups"]}
     for n in (6, 12):
-        base = smoke_spec(rounds=rounds, num_clients=n)
-        real = None
         for method in ("fedphd", "fedavg"):
-            spec = dataclasses.replace(base, method=method,
-                                       name=f"table5-{method}-n{n}",
-                                       prune=False)
-            t0 = time.perf_counter()
-            exp = run_spec(spec)
-            us = (time.perf_counter() - t0) * 1e6 / rounds
-            if real is None:
-                real = exp.images[:256]
-            fid = fid_proxy(real, sample_images(exp.params, exp.cfg,
-                                                n=96, steps=10))
-            emit(f"table5/{method}_n{n}", us,
-                 f"loss={exp.history[-1].loss:.4f};fid={fid:.2f}")
+            g = by_key[(method, n)]
+            m = g["metrics"]
+            (rid,) = g["runs"]
+            emit(f"table5/{method}_n{n}",
+                 train_s[rid] * 1e6 / rounds,
+                 f"loss={m['loss']['mean']:.4f};"
+                 f"fid={m['eval.fid']['mean']:.2f}")
 
 
 if __name__ == "__main__":

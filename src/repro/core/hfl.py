@@ -380,9 +380,13 @@ class FedPhD:
             edge_sh=pend["edge_sh"],
             pruned=pend["pruned"],
         )
+        # append BEFORE the eval hook: the round executed (trainer state
+        # and RNG streams advanced), so a raising eval_fn must lose the
+        # eval, not the round — otherwise a later run()/resume would
+        # re-run an already-applied round and diverge
+        self.history.append(rec)
         if self.eval_fn and self.eval_every and r % self.eval_every == 0:
             rec.eval = self.eval_fn(pend["params"], pend["cfg"], r)
-        self.history.append(rec)
         return rec
 
     def run(self, rounds: Optional[int] = None, *,
@@ -408,16 +412,22 @@ class FedPhD:
         try:
             for r in range(len(self.history) + 1, rounds + 1):
                 cur = self._start_round(r)
-                prev, pend = pend, None
+                # hand cur to the guard BEFORE finishing prev: if
+                # _finish_round(prev) raises (eval hook), prev is
+                # already in history (append-before-eval) and the
+                # finally still finalizes the dispatched cur — no
+                # executed round is ever orphaned
+                prev, pend = pend, cur
                 if prev is not None:
                     self._finish_round(prev)
-                pend = cur
         finally:
             # a raising _start_round (e.g. strict-vectorized hitting a
             # ragged selection) must not orphan the already-executed
             # previous round: finalize it so history matches the
-            # advanced trainer state
-            if pend is not None:
+            # advanced trainer state.  Finalize only when it extends
+            # history contiguously — if prev's own finalize died before
+            # its append, recording cur would leave a round-number gap
+            if pend is not None and len(self.history) == pend["round"] - 1:
                 self._finish_round(pend)
         return RunResult(self.history, evals_of(self.history))
 

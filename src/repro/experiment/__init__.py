@@ -19,8 +19,14 @@ from repro.experiment.data import (DATASETS, dataset_spec, make_clients,
 from repro.experiment.registry import (MethodEntry, make_trainer,
                                        method_entry, register_method,
                                        registered_methods)
+from repro.experiment.report import (build_report, report_markdown,
+                                     run_scalars, write_report)
 from repro.experiment.run import (Experiment, checkpoint_exists, run_spec)
 from repro.experiment.spec import (TOPOLOGIES, DataSpec, ExperimentSpec)
+from repro.experiment.sweep import (SweepResult, SweepRun, SweepSpec,
+                                    load_manifest, manifest_path,
+                                    manifest_status, run_id_of, run_sweep,
+                                    spec_get, spec_with)
 from repro.experiment.trainer import Trainer
 from repro.fl.record import RoundRecord, RunResult, evals_of
 
@@ -29,4 +35,9 @@ __all__ = ["DATASETS", "dataset_spec", "make_clients", "register_dataset",
            "make_trainer", "method_entry", "register_method",
            "registered_methods", "Experiment", "checkpoint_exists",
            "run_spec", "TOPOLOGIES", "DataSpec", "ExperimentSpec",
-           "Trainer", "RoundRecord", "RunResult", "evals_of"]
+           "Trainer", "RoundRecord", "RunResult", "evals_of",
+           "SweepResult", "SweepRun", "SweepSpec", "load_manifest",
+           "manifest_path", "manifest_status", "run_id_of", "run_sweep",
+           "spec_get", "spec_with",
+           "build_report", "report_markdown", "run_scalars",
+           "write_report"]

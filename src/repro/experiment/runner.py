@@ -12,17 +12,33 @@ from its checkpoint::
 Outputs land in ``--out``: ``spec.json`` (the resolved spec),
 ``ckpt.npz`` + ``ckpt.npz.manifest.json`` (the resumable checkpoint),
 and ``history.json`` (the shared RoundRecord schema, one row per round).
+
+``--sweep grid.json`` switches to grid mode: the JSON is a
+:class:`repro.experiment.sweep.SweepSpec`, every expanded run executes
+(and checkpoints) under ``--out/runs/<run_id>/``, the resumable sweep
+manifest lands at ``--out/sweep.json``, and the aggregated report
+(mean±std across seeds, grouped by the sweep's axes) at
+``--out/report.json`` + ``report.md``.  Re-invoking the same command
+resumes a killed sweep — mid-grid from the manifest and mid-run from
+the interrupted run's checkpoint; ``--max-runs N`` stops after N runs
+(a deterministic "kill" for smoke tests)::
+
+    PYTHONPATH=src python -m repro.experiment.runner \
+        --sweep examples/sweep_smoke.json --out runs/sweep
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 from repro.configs.base import FLConfig
+from repro.experiment.report import report_markdown, write_report
 from repro.experiment.run import Experiment, checkpoint_exists, run_spec
 from repro.experiment.spec import DataSpec, ExperimentSpec
+from repro.experiment.sweep import (SweepResult, SweepSpec, manifest_status,
+                                    run_sweep)
 
 PRESETS = {
     # the CI smoke config: 6 clients / 2 edges on the 16x16 smoke U-Net,
@@ -52,6 +68,22 @@ def build_parser() -> argparse.ArgumentParser:
     src.add_argument("--spec", help="path to an ExperimentSpec JSON file")
     src.add_argument("--preset", choices=sorted(PRESETS), default="smoke",
                      help="named built-in spec (default: smoke)")
+    src.add_argument("--sweep", help="path to a SweepSpec JSON file: run "
+                                     "the whole grid with a resumable "
+                                     "manifest + aggregated report")
+    ap.add_argument("--executor", choices=("sequential", "process"),
+                    help="[--sweep] run the grid in-process (default) or "
+                         "over a spawn-context process pool")
+    ap.add_argument("--max-workers", type=int,
+                    help="[--sweep --executor process] pool size")
+    ap.add_argument("--max-runs", type=int,
+                    help="[--sweep] stop after this many run attempts "
+                         "in THIS invocation (failures count); the "
+                         "manifest stays resumable")
+    ap.add_argument("--group-by",
+                    help="[--sweep] comma-separated axes for the "
+                         "aggregated report (default: the sweep's "
+                         "group_by, else its non-seed axes)")
     ap.add_argument("--method", help="override spec.method (registry key)")
     ap.add_argument("--engine",
                     choices=("auto", "vectorized", "sequential"),
@@ -101,9 +133,66 @@ def _default_eval(params, cfg, r):
     return {"is_proxy": float(inception_score_proxy(fake))}
 
 
-def main(argv: Optional[Sequence[str]] = None) -> Experiment:
+def _main_sweep(args: argparse.Namespace) -> SweepResult:
+    # single-run flags have no meaning on a grid — reject rather than
+    # silently run something other than what the command line asked for
+    bad = [flag for flag, val in (("--method", args.method),
+                                  ("--engine", args.engine),
+                                  ("--seed", args.seed),
+                                  ("--eval-every", args.eval_every))
+           if val is not None]
+    if args.resume:
+        bad.append("--resume")
+    if bad:
+        raise SystemExit(
+            f"--sweep is incompatible with {', '.join(bad)}: declare "
+            "per-run fields in the sweep JSON (base/axes); sweep resume "
+            "is automatic from the manifest")
+    with open(args.sweep) as f:
+        sweep = SweepSpec.from_json(f.read())
+    if args.rounds is not None:
+        sweep = sweep.replace(rounds=args.rounds)
+    executor = args.executor or "sequential"
+    if args.max_workers is not None and executor != "process":
+        raise SystemExit("--max-workers requires --executor process "
+                         "(the sequential executor runs one grid point "
+                         "at a time)")
+    # the CLI's eval hook is live only on the sequential executor (a
+    # Python callable can't cross the spawn boundary) and only fires
+    # where a spec's eval_every says so
+    eval_fn = _default_eval if executor == "sequential" else None
+    res = run_sweep(sweep, args.out, executor=executor,
+                    max_workers=args.max_workers, limit=args.max_runs,
+                    eval_fn=eval_fn, save_every=args.save_every)
+    group_by = [g.strip() for g in (args.group_by or "").split(",")
+                if g.strip()] or None
+    report = write_report(res.manifest, args.out, group_by=group_by)
+    counts = manifest_status(res.manifest)
+    print(report_markdown(report))
+    print(f"[{sweep.name}] {counts['done']}/{len(res.manifest['runs'])} "
+          f"runs done ({counts['pending']} pending, "
+          f"{counts['failed']} failed) -> {args.out}")
+    if counts["failed"]:
+        raise SystemExit(f"--sweep: {counts['failed']} run(s) failed "
+                         f"(see {args.out}/sweep.json)")
+    return res
+
+
+def main(argv: Optional[Sequence[str]] = None
+         ) -> Union[Experiment, SweepResult]:
     args = build_parser().parse_args(argv)
     os.makedirs(args.out, exist_ok=True)
+    if args.sweep:
+        return _main_sweep(args)
+    # the mirror of _main_sweep's guard: sweep-only flags are
+    # meaningless on a single run — refuse rather than silently ignore
+    bad = [flag for flag, val in (("--executor", args.executor),
+                                  ("--max-workers", args.max_workers),
+                                  ("--max-runs", args.max_runs),
+                                  ("--group-by", args.group_by))
+           if val is not None]
+    if bad:
+        raise SystemExit(f"{', '.join(bad)} require --sweep")
     ckpt = os.path.join(args.out, "ckpt.npz")
 
     if args.resume:

@@ -1,0 +1,503 @@
+"""Spec-driven sweeps: axis grids over :class:`ExperimentSpec` with a
+resumable on-disk manifest and an aggregation-ready result layout.
+
+The paper's headline tables are *grids*, not single runs — Table I/II
+compare methods across datasets and Dirichlet splits, and the reported
+improvements are means over seeds.  A :class:`SweepSpec` declares those
+grids once: a base spec plus ``axes`` mapping any (possibly nested,
+dotted) ``ExperimentSpec`` field to a list of values —
+
+    SweepSpec(name="table2",
+              base=ExperimentSpec(model="ddpm-unet-smoke"),
+              axes={"method": ["fedphd", "fedavg"],
+                    "seed": [0, 1, 2],
+                    "fl.participation": [0.5, 1.0],
+                    "data.alpha": [0.1, 0.5]},
+              exclude=[{"method": "fedavg", "fl.participation": 0.5}],
+              include=[{"method": "fedphd", "backend": "pallas"}])
+
+``expand()`` produces the cartesian product (plus explicit ``include``
+points, minus ``exclude`` matches, deduplicated on the concrete spec)
+with **stable run-ids** derived from the sorted overrides, e.g.
+``fl.participation=0.5,method=fedphd,seed=2``.
+
+``run_sweep()`` executes the grid through the existing
+:func:`repro.experiment.run.run_spec` machinery and keeps a **sweep
+manifest** (``sweep.json``) up to date on disk after every run.  Each
+run checkpoints into its own ``runs/<run_id>/ckpt.npz`` at run_spec's
+``save_every`` cadence, so a killed sweep resumes **mid-grid** (done
+runs are skipped via the manifest) *and* **mid-run** (the partial
+checkpoint is picked up via ``run_spec(resume=True)``, reusing the
+bitwise kill-and-resume contract from the experiment API).  Executors:
+``sequential`` (in-process, supports a Python ``eval_fn``) or
+``process`` (a spawn-context process pool for grid-level parallelism).
+
+Aggregation lives in :mod:`repro.experiment.report`; the CLI front end
+is ``python -m repro.experiment.runner --sweep sweep.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import os
+import re
+import time
+from typing import (Any, Dict, List, Mapping, NamedTuple, Optional, Sequence,
+                    Tuple)
+
+from repro.experiment.run import checkpoint_exists, run_spec
+from repro.experiment.spec import ExperimentSpec
+
+MANIFEST_FORMAT = 1
+MANIFEST_NAME = "sweep.json"
+EXECUTORS = ("sequential", "process")
+STATUSES = ("pending", "running", "done", "failed")
+
+
+# ---------------------------------------------------------------------------
+# Dotted spec paths: one namespace over ExperimentSpec and its nested
+# frozen dataclasses (fl.*, data.*).
+# ---------------------------------------------------------------------------
+
+def spec_get(spec: Any, path: str) -> Any:
+    """Read a (possibly dotted) field: ``spec_get(s, "fl.rounds")``.
+    Works on ExperimentSpec objects and their ``to_dict()`` form."""
+    obj = spec
+    for part in path.split("."):
+        if isinstance(obj, Mapping):
+            if part not in obj:
+                raise ValueError(f"unknown sweep axis {path!r}")
+            obj = obj[part]
+        else:
+            if not hasattr(obj, part):
+                raise ValueError(f"unknown sweep axis {path!r}")
+            obj = getattr(obj, part)
+    return obj
+
+
+def spec_with(spec: ExperimentSpec,
+              overrides: Mapping[str, Any]) -> ExperimentSpec:
+    """Apply ``{dotted_path: value}`` overrides to a spec.  One level of
+    nesting is all the spec has (``fl.*`` / ``data.*``); unknown fields
+    raise ValueError naming the offending axis."""
+    top: Dict[str, Any] = {}
+    nested: Dict[str, Dict[str, Any]] = {}
+    for path, v in overrides.items():
+        head, _, rest = path.partition(".")
+        if rest:
+            if "." in rest:
+                raise ValueError(f"sweep axis {path!r} nests too deep")
+            nested.setdefault(head, {})[rest] = v
+        else:
+            top[head] = v
+    for head, kw in nested.items():
+        sub = getattr(spec, head, None)
+        if not dataclasses.is_dataclass(sub):
+            raise ValueError(f"unknown sweep axis {head!r} (not a nested "
+                             "spec field)")
+        try:
+            top[head] = dataclasses.replace(sub, **kw)
+        except TypeError:
+            bad = sorted(set(kw) - {f.name for f in dataclasses.fields(sub)})
+            raise ValueError(f"unknown sweep axis '{head}.{bad[0]}'")
+    unknown = sorted(set(top) - {f.name for f in dataclasses.fields(spec)})
+    if unknown:
+        raise ValueError(f"unknown sweep axis {unknown[0]!r}")
+    return spec.replace(**top)
+
+
+# run-ids must be filesystem-safe (they name the per-run checkpoint
+# directories) and stable across expansions: sorted axes, "k=v" pairs
+_ID_KEEP = re.compile(r"[^A-Za-z0-9._=,+-]+")
+
+
+def run_id_of(overrides: Mapping[str, Any]) -> str:
+    """Stable, filesystem-safe id of one grid point (sorted overrides)."""
+    if not overrides:
+        return "base"
+    parts = ",".join(f"{k}={overrides[k]}" for k in sorted(overrides))
+    return _ID_KEEP.sub("-", parts)
+
+
+class SweepRun(NamedTuple):
+    """One expanded grid point: its stable id, the axis overrides that
+    produced it, and the concrete spec."""
+    run_id: str
+    overrides: Dict[str, Any]
+    spec: ExperimentSpec
+
+
+# ---------------------------------------------------------------------------
+# SweepSpec.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A declarative grid over :class:`ExperimentSpec`.
+
+    ``axes`` maps dotted spec paths to value lists; ``include`` appends
+    explicit override points beyond the product; ``exclude`` drops any
+    expanded point whose *effective* values (override or base) match all
+    of an exclude entry's keys.  ``rounds`` optionally overrides the
+    absolute target round of every run (default: each spec's
+    ``fl.rounds``); ``group_by`` is the default report grouping
+    (default: every non-seed axis — seeds are what mean±std runs over).
+    """
+    name: str = "sweep"
+    base: ExperimentSpec = ExperimentSpec()
+    axes: Mapping[str, Sequence[Any]] = \
+        dataclasses.field(default_factory=dict)
+    include: Tuple[Mapping[str, Any], ...] = ()
+    exclude: Tuple[Mapping[str, Any], ...] = ()
+    rounds: Optional[int] = None
+    group_by: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        # canonicalize container types (lists are the natural JSON and
+        # call-site form) so equality and round-trips are type-agnostic
+        object.__setattr__(self, "axes",
+                           {k: list(v) for k, v in self.axes.items()})
+        object.__setattr__(self, "include",
+                           tuple(dict(p) for p in self.include))
+        object.__setattr__(self, "exclude",
+                           tuple(dict(p) for p in self.exclude))
+        object.__setattr__(self, "group_by", tuple(self.group_by))
+
+    def replace(self, **kw) -> "SweepSpec":
+        return dataclasses.replace(self, **kw)
+
+    def default_group_by(self) -> Tuple[str, ...]:
+        explicit = tuple(self.group_by)
+        if explicit:
+            return explicit
+        axes = tuple(k for k in sorted(self.axes) if k != "seed")
+        return axes or ("method",)
+
+    # -- expansion -----------------------------------------------------------
+    def expand(self) -> List[SweepRun]:
+        """Concrete (run_id, overrides, spec) points: cartesian product
+        over sorted axes, plus ``include``, minus ``exclude``, deduped
+        on the concrete spec.  Deterministic order; id collisions
+        between distinct specs are an error."""
+        keys = sorted(self.axes)
+        grid = [dict(zip(keys, combo))
+                for combo in itertools.product(*(tuple(self.axes[k])
+                                                 for k in keys))] \
+            if keys else [{}]
+        points = grid + [dict(inc) for inc in self.include]
+
+        runs: List[SweepRun] = []
+        seen_specs: Dict[str, str] = {}    # canonical spec json -> run_id
+        by_id: Dict[str, str] = {}         # run_id -> canonical spec json
+        for overrides in points:
+            if any(self._matches(overrides, exc) for exc in self.exclude):
+                continue
+            spec = spec_with(self.base, overrides)
+            canon = spec.to_json(indent=0)
+            if canon in seen_specs:        # include duplicating a grid point
+                continue
+            rid = run_id_of(overrides)
+            if rid in by_id:
+                raise ValueError(f"run-id collision: {rid!r} maps to two "
+                                 "distinct specs")
+            seen_specs[canon] = rid
+            by_id[rid] = canon
+            runs.append(SweepRun(
+                rid, dict(overrides),
+                spec.replace(name=f"{self.name}/{rid}")))
+        return runs
+
+    def _matches(self, overrides: Mapping[str, Any],
+                 exc: Mapping[str, Any]) -> bool:
+        return all(overrides.get(k, spec_get(self.base, k)) == v
+                   for k, v in exc.items())
+
+    # -- JSON round-trip -----------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "base": self.base.to_dict(),
+            "axes": {k: list(v) for k, v in self.axes.items()},
+            "include": [dict(p) for p in self.include],
+            "exclude": [dict(p) for p in self.exclude],
+            "rounds": self.rounds,
+            "group_by": list(self.group_by),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SweepSpec":
+        # strict: a typoed key ("axis", "excludes") must not silently
+        # run a different grid than the file declares
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown SweepSpec field(s): "
+                             f"{sorted(unknown)}")
+        return cls(
+            name=d.get("name", "sweep"),
+            base=ExperimentSpec.from_dict(d.get("base", {})),
+            axes={k: list(v) for k, v in d.get("axes", {}).items()},
+            include=tuple(dict(p) for p in d.get("include", ())),
+            exclude=tuple(dict(p) for p in d.get("exclude", ())),
+            rounds=d.get("rounds"),
+            group_by=tuple(d.get("group_by", ())),
+        )
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "SweepSpec":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Manifest: the sweep's single source of truth on disk.
+# ---------------------------------------------------------------------------
+
+def manifest_path(out: str) -> str:
+    return os.path.join(out, MANIFEST_NAME)
+
+
+def load_manifest(out: str) -> Optional[dict]:
+    path = manifest_path(out)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def write_manifest(out: str, man: dict) -> None:
+    """Atomic write (tmp + rename): a kill mid-write must not corrupt
+    the resume state."""
+    path = manifest_path(out)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(man, f, indent=2, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def _run_ckpt(rid: str) -> str:
+    # stored relative to the sweep dir so the whole tree is relocatable
+    return os.path.join("runs", rid, "ckpt.npz")
+
+
+def init_manifest(sweep: SweepSpec, out: str) -> dict:
+    """Create — or reconcile with — the on-disk manifest.
+
+    An existing manifest's per-run statuses are kept for every run-id
+    whose concrete spec is unchanged; runs whose spec changed (the sweep
+    definition was edited) reset to pending, and run-ids no longer in
+    the grid are dropped.  A fresh expansion therefore never loses
+    completed work it can still trust.
+    """
+    runs = sweep.expand()
+    prev = load_manifest(out) or {"runs": {}}
+    man = {
+        "format": MANIFEST_FORMAT,
+        "sweep": sweep.to_dict(),
+        "runs": {},
+    }
+    for run in runs:
+        old = prev["runs"].get(run.run_id)
+        spec_dict = run.spec.to_dict()
+        if old is not None and old.get("spec") == spec_dict:
+            man["runs"][run.run_id] = old
+            # a run left "running" by a kill resumes from its checkpoint
+            if old.get("status") == "running":
+                old["status"] = "pending"
+        else:
+            man["runs"][run.run_id] = {
+                "status": "pending",
+                "overrides": run.overrides,
+                "spec": spec_dict,
+                "ckpt": _run_ckpt(run.run_id),
+                "rounds_done": 0,
+                "wall_s": 0.0,
+                "history": [],
+                "error": None,
+            }
+    os.makedirs(out, exist_ok=True)
+    write_manifest(out, man)
+    return man
+
+
+def manifest_status(man: dict) -> Dict[str, int]:
+    counts = {s: 0 for s in STATUSES}
+    for entry in man["runs"].values():
+        counts[entry["status"]] = counts.get(entry["status"], 0) + 1
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# Execution.
+# ---------------------------------------------------------------------------
+
+class SweepResult(NamedTuple):
+    """``run_sweep``'s return: the final manifest (also on disk at
+    ``manifest_path(out)``) and the sweep dir."""
+    manifest: dict
+    out: str
+
+    @property
+    def complete(self) -> bool:
+        return all(e["status"] == "done" for e in self.manifest["runs"].values())
+
+
+def _ckpt_spec_matches(ckpt: str, spec_dict: dict) -> bool:
+    """Cheap pre-resume check: the per-run checkpoint manifest records
+    the spec it trained under; a stale checkpoint left by an EDITED
+    sweep (different spec at the same run-id path) must be rerun, not
+    resumed — otherwise the manifest would silently record the old
+    spec's trajectory as the new run."""
+    try:
+        with open(ckpt + ".manifest.json") as f:
+            meta = json.load(f).get("metadata", {})
+    except (OSError, ValueError):
+        return False
+    return meta.get("spec") == spec_dict
+
+
+def _finish_entry(entry: dict, history: List[dict],
+                  wall_s: float) -> None:
+    entry["status"] = "done"
+    entry["error"] = None
+    entry["wall_s"] = float(entry.get("wall_s") or 0.0) + wall_s
+    entry["history"] = history
+    entry["rounds_done"] = len(history)
+
+
+def _target_rounds(sweep: SweepSpec, entry: Mapping[str, Any]) -> int:
+    """The absolute round a run must reach: the sweep-level override,
+    else the run's own ``fl.rounds`` — so re-invoking a finished sweep
+    with a larger ``rounds`` EXTENDS every run instead of silently
+    reporting the old, shorter histories as complete."""
+    return sweep.rounds or spec_get(entry["spec"], "fl.rounds")
+
+
+def _exec_one(spec_dict: dict, ckpt: str, rounds: Optional[int],
+              save_every: int):
+    """Process-pool worker: run (or resume) ONE grid point.  Module-level
+    for picklability under the spawn context."""
+    t0 = time.perf_counter()
+    if checkpoint_exists(ckpt) and _ckpt_spec_matches(ckpt, spec_dict):
+        exp = run_spec(None, resume=True, ckpt=ckpt, rounds=rounds,
+                       save_every=save_every)
+    else:
+        exp = run_spec(ExperimentSpec.from_dict(spec_dict), ckpt=ckpt,
+                       rounds=rounds, save_every=save_every)
+    return ([r.to_dict() for r in exp.history],
+            time.perf_counter() - t0)
+
+
+def run_sweep(sweep: SweepSpec, out: str, *,
+              executor: str = "sequential",
+              max_workers: Optional[int] = None,
+              limit: Optional[int] = None,
+              eval_fn=None,
+              save_every: int = 1,
+              raise_on_error: bool = False) -> SweepResult:
+    """Execute (or resume) a sweep into ``out``.
+
+    The manifest at ``<out>/sweep.json`` is written before and after
+    every run, and each run checkpoints through ``run_spec(ckpt=...)``,
+    so a kill at ANY point resumes: completed runs are skipped, the
+    interrupted run continues from its last per-round checkpoint, and
+    the rest of the grid follows.  ``limit`` stops this invocation after
+    that many run *attempts* — failures count, so a failing grid cannot
+    spin — and the manifest stays resumable (the CI smoke job uses it
+    as a deterministic "kill").
+
+    ``executor="process"`` fans runs out over a spawn-context process
+    pool; a Python ``eval_fn`` cannot cross that boundary (use the
+    sequential executor, or bake evals into a registered method).
+    Failed runs are recorded in the manifest (status + error) and the
+    sweep moves on, unless ``raise_on_error``.
+    """
+    if executor not in EXECUTORS:
+        raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
+    man = init_manifest(sweep, out)
+    # a "done" run re-enters the queue when the target round count grew
+    # (sweep.rounds raised, or the base fl.rounds edited in place)
+    order = [rid for rid, e in man["runs"].items()
+             if e["status"] != "done"
+             or e["rounds_done"] < _target_rounds(sweep, e)]
+    if limit is not None:
+        order = order[:max(limit, 0)]
+
+    if executor == "process":
+        if eval_fn is not None:
+            raise ValueError("eval_fn cannot cross the process boundary; "
+                             "use executor='sequential'")
+        _run_pool(man, out, order, sweep.rounds, max_workers, save_every,
+                  raise_on_error)
+        return SweepResult(man, out)
+
+    for rid in order:
+        entry = man["runs"][rid]
+        entry["status"] = "running"
+        write_manifest(out, man)
+        ckpt = os.path.join(out, entry["ckpt"])
+        os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+        t0 = time.perf_counter()
+        try:
+            if checkpoint_exists(ckpt) \
+                    and _ckpt_spec_matches(ckpt, entry["spec"]):
+                # mid-run resume: the partial per-round checkpoint of a
+                # killed (or pre-seeded) run continues, not restarts; a
+                # stale checkpoint under an edited spec reruns fresh
+                exp = run_spec(None, resume=True, ckpt=ckpt,
+                               rounds=sweep.rounds, eval_fn=eval_fn,
+                               save_every=save_every)
+            else:
+                exp = run_spec(ExperimentSpec.from_dict(entry["spec"]),
+                               ckpt=ckpt, rounds=sweep.rounds,
+                               eval_fn=eval_fn, save_every=save_every)
+        except Exception as e:  # noqa: BLE001 — recorded, surfaced by caller
+            entry["status"] = "failed"
+            entry["error"] = f"{type(e).__name__}: {e}"
+            write_manifest(out, man)
+            if raise_on_error:
+                raise
+            continue
+        _finish_entry(entry, [r.to_dict() for r in exp.history],
+                      time.perf_counter() - t0)
+        write_manifest(out, man)
+    return SweepResult(man, out)
+
+
+def _run_pool(man: dict, out: str, order: List[str],
+              rounds: Optional[int], max_workers: Optional[int],
+              save_every: int, raise_on_error: bool) -> None:
+    import multiprocessing as mp
+    from concurrent.futures import ProcessPoolExecutor, as_completed
+
+    # spawn, not fork: forking a process with a live JAX runtime
+    # deadlocks; spawn re-imports repro in each worker from PYTHONPATH
+    ctx = mp.get_context("spawn")
+    futures = {}
+    with ProcessPoolExecutor(max_workers=max_workers or min(len(order), 4),
+                             mp_context=ctx) as pool:
+        for rid in order:
+            entry = man["runs"][rid]
+            entry["status"] = "running"
+            ckpt = os.path.join(out, entry["ckpt"])
+            os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+            futures[pool.submit(_exec_one, entry["spec"], ckpt, rounds,
+                                save_every)] = rid
+        write_manifest(out, man)
+        for fut in as_completed(futures):
+            rid = futures[fut]
+            entry = man["runs"][rid]
+            try:
+                history, wall_s = fut.result()
+            except Exception as e:  # noqa: BLE001
+                entry["status"] = "failed"
+                entry["error"] = f"{type(e).__name__}: {e}"
+                write_manifest(out, man)
+                if raise_on_error:
+                    raise
+                continue
+            _finish_entry(entry, history, wall_s)
+            write_manifest(out, man)

@@ -292,7 +292,10 @@ class FlatTrainer:
             opt_states=(tree_gather(self._opt_stack, sel_arr)
                         if self.persistent_opt else None),
             masked=padded, per_client_opt=self.persistent_opt)
-        losses = [float(x) for x in np.asarray(out["losses"])]  # ONE sync
+        # NO host sync here: the (C,) loss array stays a device future
+        # until _finish_round — under the pipelined run() the next
+        # round's host data prep + H2D overlap this round's compute
+        losses = out["losses"]
         agg = jax.tree.map(lambda leaf: leaf[0], out["agg"])
 
         if self.persistent_opt:
@@ -323,6 +326,20 @@ class FlatTrainer:
 
     # -- one round -----------------------------------------------------------
     def run_round(self, r: int) -> RoundRecord:
+        return self._finish_round(self._start_round(r))
+
+    def _start_round(self, r: int) -> Dict:
+        """Dispatch one round — selection, RNG folding, the round
+        program, method-state scatter, aggregation — everything except
+        blocking on the device losses.  Returns the pending-round dict
+        ``_finish_round`` turns into a RoundRecord (the FedPhD
+        ``_start_round``/``_finish_round`` split, on the flat topology).
+
+        On the vectorized engine nothing here forces a host sync, so
+        ``run()`` double-buffers rounds: round r+1's ``stack_round``
+        shuffle/stack and H2D copy run while round r's program is still
+        executing.
+        """
         fl, method = self.fl, self.method
         C = max(1, round(fl.participation * len(self.clients)))
         sel = self.np_rng.choice(len(self.clients), size=C, replace=False)
@@ -334,9 +351,9 @@ class FlatTrainer:
             subs.append(sub)
 
         if self._use_vectorized([self.clients[int(c)] for c in sel]):
-            losses = self._round_vectorized(sel, subs)
+            losses = self._round_vectorized(sel, subs)   # device future
         else:
-            losses = self._round_sequential(sel, subs)
+            losses = self._round_sequential(sel, subs)   # host floats
 
         if method == "feddiffuse":
             vol = self.mbytes * shared_fraction(self.params, self.cfg)
@@ -344,27 +361,73 @@ class FlatTrainer:
             vol = self.mbytes * 2  # model + control variate
         else:
             vol = self.mbytes
+        # snapshot end-of-round state the record needs: the params the
+        # eval hook sees must not leak mutations from a round
+        # dispatched before this one is finalized
+        return {
+            "round": r, "losses": losses, "sel_ids": sel,
+            "comm_gb": self.comm.flat_fl_round(vol, len(sel)) / 1e9,
+            "params_m": sum(x.size
+                            for x in jax.tree.leaves(self.params)) / 1e6,
+            "params": self.params, "cfg": self.cfg,
+        }
+
+    def _finish_round(self, pend: Dict) -> RoundRecord:
+        """Sync the pending round's losses and append its RoundRecord."""
+        losses = pend["losses"]
+        if not isinstance(losses, list):          # device future -> host
+            losses = [float(x) for x in np.asarray(losses)]
+        r = pend["round"]
         rec = RoundRecord(
             round=r,
             loss=float(np.mean(losses)),
-            comm_gb=self.comm.flat_fl_round(vol, len(sel)) / 1e9,
-            params_m=sum(x.size for x in jax.tree.leaves(self.params)) / 1e6,
-            selected=[int(c) for c in sel],
+            comm_gb=pend["comm_gb"],
+            params_m=pend["params_m"],
+            selected=[int(c) for c in pend["sel_ids"]],
         )
-        if self.eval_fn and self.eval_every and r % self.eval_every == 0:
-            rec.eval = self.eval_fn(self.params, self.cfg, r)
+        # append BEFORE the eval hook: the round executed (trainer state
+        # and RNG streams advanced), so a raising eval_fn must lose the
+        # eval, not the round — otherwise a later run()/resume would
+        # re-run an already-applied round and diverge
         self.history.append(rec)
+        if self.eval_fn and self.eval_every and r % self.eval_every == 0:
+            rec.eval = self.eval_fn(pend["params"], pend["cfg"], r)
         return rec
 
     def run(self, rounds: Optional[int] = None, *,
             eval_every: Optional[int] = None) -> RunResult:
         """Run rounds ``len(history)+1 .. rounds`` (continues after a
-        restore) — the same ``Trainer`` contract as ``FedPhD.run``."""
+        restore) — the same ``Trainer`` contract as ``FedPhD.run``.
+
+        Rounds are double-buffered exactly like ``FedPhD.run``: round
+        r+1 is dispatched (``_start_round``) before round r's losses are
+        synced (``_finish_round``); records finalize in round order and
+        the numerics are identical to stepping ``run_round`` — only the
+        sync point moves."""
         rounds = rounds or self.fl.rounds
         if eval_every is not None:
             self.eval_every = eval_every
-        for r in range(len(self.history) + 1, rounds + 1):
-            self.run_round(r)
+        pend = None
+        try:
+            for r in range(len(self.history) + 1, rounds + 1):
+                cur = self._start_round(r)
+                # hand cur to the guard BEFORE finishing prev: if
+                # _finish_round(prev) raises (eval hook), prev is
+                # already in history (append-before-eval) and the
+                # finally still finalizes the dispatched cur — no
+                # executed round is ever orphaned
+                prev, pend = pend, cur
+                if prev is not None:
+                    self._finish_round(prev)
+        finally:
+            # a raising _start_round (e.g. strict-vectorized hitting a
+            # ragged selection) must not orphan the already-executed
+            # previous round: finalize it so history matches the
+            # advanced trainer state.  Finalize only when it extends
+            # history contiguously — if prev's own finalize died before
+            # its append, recording cur would leave a round-number gap
+            if pend is not None and len(self.history) == pend["round"] - 1:
+                self._finish_round(pend)
         return RunResult(self.history, evals_of(self.history))
 
     # -- checkpoint state (repro.experiment resume contract) -----------------

@@ -128,6 +128,81 @@ def test_flat_auto_ragged_single_warning():
     assert all(np.isfinite(h["loss"]) for h in res.history)
 
 
+def test_flat_run_pipelined_equals_stepped():
+    """``run()`` double-buffers rounds (the FedPhD
+    ``_start_round``/``_finish_round`` split, adopted by the flat
+    trainers): round r+1 is dispatched before round r's losses sync.
+    Trajectories — loss, comm_gb, selections, eval snapshots — must be
+    identical to stepping ``run_round`` directly."""
+    for method in ("fedavg", "scaffold"):
+        evals = {"stepped": [], "piped": []}
+
+        def eval_fn(tag):
+            return lambda params, cfg, r: (
+                evals[tag].append(float(np.asarray(
+                    jax.tree.leaves(params)[0]).sum())) or r)
+
+        stepped = FlatTrainer(method, MICRO_UNET, FL, make_clients(),
+                              rng_seed=0, engine="vectorized",
+                              eval_fn=eval_fn("stepped"), eval_every=2)
+        piped = FlatTrainer(method, MICRO_UNET, FL, make_clients(),
+                            rng_seed=0, engine="vectorized",
+                            eval_fn=eval_fn("piped"), eval_every=2)
+        for r in range(1, 4):
+            stepped.run_round(r)
+        piped.run(3)
+        for a, b in zip(stepped.history, piped.history):
+            assert a.loss == b.loss and a.comm_gb == b.comm_gb
+            assert a.selected == b.selected and a.eval == b.eval
+        # the eval hook saw the same (snapshotted) params in both modes
+        assert evals["stepped"] == evals["piped"]
+
+
+def test_flat_run_finalizes_pending_on_raise():
+    """The try/finally orphan-round guard: a ``_start_round`` that
+    raises mid-``run()`` (strict vectorized hitting a ragged selection)
+    must not orphan the already-dispatched previous round — its record
+    lands in history before the exception propagates."""
+    tr = FlatTrainer("fedavg", MICRO_UNET, FL, make_clients(),
+                     rng_seed=0, engine="vectorized")
+    orig = tr._start_round
+
+    def raise_on_round_2(r):
+        if r == 2:
+            raise ValueError("boom")
+        return orig(r)
+
+    tr._start_round = raise_on_round_2
+    with pytest.raises(ValueError, match="boom"):
+        tr.run(3)
+    # round 1 executed and was finalized by the guard
+    assert [rec.round for rec in tr.history] == [1]
+    assert np.isfinite(tr.history[0].loss)
+
+
+def test_flat_run_eval_failure_loses_eval_not_round():
+    """A raising eval_fn mid-pipelined-``run()`` must not orphan
+    executed rounds: the failing round is recorded (without its eval),
+    the already-dispatched next round is finalized by the guard, and
+    history stays contiguous — so a later run()/resume does not re-run
+    applied rounds."""
+    def eval_fn(params, cfg, r):
+        if r == 2:
+            raise RuntimeError("eval boom")
+        return r
+
+    tr = FlatTrainer("fedavg", MICRO_UNET, FL, make_clients(),
+                     rng_seed=0, engine="vectorized",
+                     eval_fn=eval_fn, eval_every=1)
+    with pytest.raises(RuntimeError, match="eval boom"):
+        tr.run(3)
+    assert [rec.round for rec in tr.history] == [1, 2, 3]
+    assert tr.history[0].eval == 1
+    assert tr.history[1].eval is None       # the eval was lost...
+    assert np.isfinite(tr.history[1].loss)  # ...the round was not
+    assert tr.history[2].eval == 3
+
+
 def test_flat_trainer_interleaves_engines():
     """FlatTrainer steps round-by-round (the bench substrate), and both
     engines share one state store: a trainer can switch paths in either

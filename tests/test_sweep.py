@@ -1,0 +1,432 @@
+"""Sweep subsystem: grid expansion (cartesian + include/exclude +
+dedup + stable run-ids), the resumable manifest (kill mid-grid AND
+mid-run, resume, match an unbroken sweep), aggregation math against
+hand-computed values, and the CLI ``--sweep`` round-trip.
+
+Runs on the same micro U-Net scale as test_experiment_api.py: sweeps
+multiply whole experiment runs, so everything here is 2 rounds on an
+8x8 model (except the process-pool smoke, which must use a *built-in*
+model config — spawned workers re-import repro and never see this
+module's registrations).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_UNET, register_config
+from repro.configs.base import FLConfig
+from repro.data.synthetic import DatasetSpec
+from repro.experiment import (DataSpec, ExperimentSpec, SweepResult,
+                              SweepSpec, build_report, load_manifest,
+                              register_dataset, report_markdown, run_id_of,
+                              run_spec, run_sweep, spec_get, spec_with)
+from repro.experiment import runner as exp_runner
+from repro.experiment.sweep import manifest_status
+
+TINY_UNET = SMOKE_UNET.replace(name="ddpm-unet-tiny-sweep", image_size=8,
+                               base_channels=8, channel_mults=(1,),
+                               num_res_blocks=1, attn_resolutions=())
+register_config("ddpm-unet-tiny-sweep", TINY_UNET, overwrite=True)
+register_dataset("tiny-sweep", DatasetSpec("tiny-sweep", num_classes=4,
+                                           image_size=8,
+                                           samples_per_class=32),
+                 overwrite=True)
+
+BASE = ExperimentSpec(
+    name="sweep-base", method="fedavg", model="ddpm-unet-tiny-sweep",
+    fl=FLConfig(num_clients=4, num_edges=1, local_epochs=1,
+                edge_agg_every=1, cloud_agg_every=2, rounds=2,
+                sparse_rounds=2, sh_a=1000.0),
+    data=DataSpec(dataset="tiny-sweep", batch_size=8),
+    engine="sequential", prune=False)
+
+
+# ---------------------------------------------------------------------------
+# Expansion.
+# ---------------------------------------------------------------------------
+
+def test_sweep_json_roundtrip():
+    sweep = SweepSpec(name="t", base=BASE,
+                      axes={"seed": [0, 1], "fl.participation": [0.5, 1.0]},
+                      include=[{"seed": 7}],
+                      exclude=[{"seed": 1, "fl.participation": 0.5}],
+                      rounds=3, group_by=("fl.participation",))
+    assert SweepSpec.from_json(sweep.to_json()) == sweep
+    loaded = SweepSpec.from_json(sweep.to_json())
+    assert isinstance(loaded.base, ExperimentSpec) and loaded.base == BASE
+
+
+def test_expand_cartesian_order_and_ids():
+    sweep = SweepSpec(name="t", base=BASE,
+                      axes={"seed": [0, 1],
+                            "method": ["fedavg", "fedprox"]})
+    runs = sweep.expand()
+    # deterministic: sorted axis names, values in declared order
+    assert [r.run_id for r in runs] == [
+        "method=fedavg,seed=0", "method=fedavg,seed=1",
+        "method=fedprox,seed=0", "method=fedprox,seed=1"]
+    # overrides are applied and everything else inherits the base
+    assert runs[2].spec.method == "fedprox" and runs[2].spec.seed == 0
+    assert runs[2].spec.fl == BASE.fl
+    # specs are named by the grid point
+    assert runs[0].spec.name == "t/method=fedavg,seed=0"
+    # re-expansion is stable
+    assert [r.run_id for r in sweep.expand()] == [r.run_id for r in runs]
+
+
+def test_expand_nested_axes_include_exclude_dedup():
+    sweep = SweepSpec(
+        name="t", base=BASE,
+        axes={"fl.participation": [0.5, 1.0], "seed": [0, 1]},
+        # exclude matches on EFFECTIVE values (override or base field)
+        exclude=[{"fl.participation": 0.5, "seed": 1},
+                 {"method": "fedprox"}],        # base is fedavg: no hit
+        include=[{"data.batch_size": 4},
+                 # duplicates the (1.0, seed=0) grid point's concrete
+                 # spec exactly -> deduped
+                 {"fl.participation": 1.0, "seed": 0}])
+    runs = sweep.expand()
+    ids = [r.run_id for r in runs]
+    assert "fl.participation=0.5,seed=1" not in ids        # excluded
+    assert ids.count("fl.participation=1.0,seed=0") == 1   # deduped
+    assert "data.batch_size=4" in ids                      # included
+    by_id = {r.run_id: r for r in runs}
+    assert by_id["data.batch_size=4"].spec.data.batch_size == 4
+    assert by_id["fl.participation=0.5,seed=0"].spec.fl.participation == 0.5
+    assert len(runs) == 4    # 4 grid - 1 excluded - 0 + 2 incl - 1 dedup
+
+
+def test_expand_unknown_axis_raises():
+    for axes in ({"nope": [1]}, {"fl.nope": [1]}, {"fl.rounds.x": [1]}):
+        with pytest.raises(ValueError, match="axis"):
+            SweepSpec(base=BASE, axes=axes).expand()
+
+
+def test_from_dict_rejects_unknown_fields():
+    """A typoed sweep JSON ("axis", "excludes") must fail loudly, not
+    silently run a different grid."""
+    good = SweepSpec(name="s", base=BASE).to_dict()
+    for typo in ("axis", "excludes", "includ"):
+        with pytest.raises(ValueError, match="unknown SweepSpec"):
+            SweepSpec.from_dict({**good, typo: []})
+
+
+def test_spec_paths_and_run_ids():
+    assert spec_get(BASE, "fl.rounds") == 2
+    assert spec_get(BASE.to_dict(), "data.batch_size") == 8
+    s = spec_with(BASE, {"fl.rounds": 5, "method": "moon"})
+    assert s.fl.rounds == 5 and s.method == "moon"
+    assert s.data == BASE.data                   # untouched nested spec
+    # ids are stable under dict ordering and filesystem-safe
+    assert run_id_of({"seed": 0, "method": "fedavg"}) \
+        == run_id_of({"method": "fedavg", "seed": 0}) \
+        == "method=fedavg,seed=0"
+    assert run_id_of({}) == "base"
+    assert "/" not in run_id_of({"model": "a/b c"})
+
+
+# ---------------------------------------------------------------------------
+# Aggregation math (hand-computed; no training).
+# ---------------------------------------------------------------------------
+
+def _hist(rows):
+    return [{"round": i + 1, "loss": l, "comm_gb": c, "params_m": p,
+             "selected": [0], "eval": e, "edge_sh": None, "pruned": False}
+            for i, (l, c, p, e) in enumerate(rows)]
+
+
+def _manifest(sweep, entries):
+    return {"format": 1, "sweep": sweep.to_dict(),
+            "runs": {rid: e for rid, e in entries}}
+
+
+def _entry(overrides, hist, wall=None, status="done"):
+    return {"status": status, "overrides": overrides,
+            "spec": spec_with(BASE, overrides).to_dict(), "ckpt": "x",
+            "rounds_done": len(hist), "wall_s": wall, "history": hist,
+            "error": None}
+
+
+def test_aggregation_mean_std_group_by():
+    sweep = SweepSpec(name="agg", base=BASE,
+                      axes={"method": ["fedavg", "moon"], "seed": [0, 1]})
+    man = _manifest(sweep, [
+        ("method=fedavg,seed=0", _entry(
+            {"method": "fedavg", "seed": 0},
+            _hist([(0.5, 0.25, 1.0, None),
+                   (1.0, 0.25, 1.0, {"fid": 10.0, "tag": "x"})]))),
+        ("method=fedavg,seed=1", _entry(
+            {"method": "fedavg", "seed": 1},
+            _hist([(3.0, 0.5, 1.0, None),
+                   (2.0, 0.5, 1.0, {"fid": 20.0, "ok": True})]))),
+        ("method=moon,seed=0", _entry(
+            {"method": "moon", "seed": 0},
+            _hist([(4.0, 1.0, 2.0, None)]))),
+        ("method=moon,seed=1", _entry(
+            {"method": "moon", "seed": 1}, [], status="pending")),
+    ])
+    rep = build_report(man)                 # default group_by: ("method",)
+    assert rep["group_by"] == ["method"]
+    assert rep["total_runs"] == 4 and rep["done"] == 3
+    assert not rep["complete"]
+
+    g = {grp["key"]["method"]: grp for grp in rep["groups"]}
+    fa = g["fedavg"]
+    assert fa["n"] == 2
+    # loss: final-round values 1.0 and 2.0 -> mean 1.5, population std 0.5
+    assert fa["metrics"]["loss"] == {"mean": 1.5, "std": 0.5, "min": 1.0,
+                                     "max": 2.0, "n": 2}
+    # comm_gb: per-run TOTALS 0.5 and 1.0 -> mean 0.75, std 0.25
+    assert fa["metrics"]["comm_gb"]["mean"] == pytest.approx(0.75)
+    assert fa["metrics"]["comm_gb"]["std"] == pytest.approx(0.25)
+    # eval.fid from the last recorded eval; non-numeric/bool keys dropped
+    assert fa["metrics"]["eval.fid"]["mean"] == pytest.approx(15.0)
+    assert fa["metrics"]["eval.fid"]["std"] == pytest.approx(5.0)
+    assert "eval.tag" not in fa["metrics"]
+    assert "eval.ok" not in fa["metrics"]
+    # the pending moon seed=1 run is excluded: n=1, std collapses to 0
+    mo = g["moon"]
+    assert mo["n"] == 1
+    assert mo["metrics"]["loss"] == {"mean": 4.0, "std": 0.0, "min": 4.0,
+                                     "max": 4.0, "n": 1}
+
+    # explicit group-by on a non-axis field groups everything together
+    rep2 = build_report(man, group_by=("model",))
+    assert len(rep2["groups"]) == 1
+    assert rep2["groups"][0]["n"] == 3
+    assert rep2["groups"][0]["metrics"]["loss"]["mean"] \
+        == pytest.approx((1.0 + 2.0 + 4.0) / 3)
+
+
+def test_report_markdown_table():
+    sweep = SweepSpec(name="md", base=BASE, axes={"seed": [0, 1]},
+                      group_by=("method",))
+    man = _manifest(sweep, [
+        ("seed=0", _entry({"seed": 0},
+                          _hist([(1.0, 0.5, 1.0, None)]), wall=2.0)),
+        ("seed=1", _entry({"seed": 1},
+                          _hist([(2.0, 0.5, 1.0, None)]), wall=4.0)),
+    ])
+    md = report_markdown(build_report(man))
+    lines = md.splitlines()
+    assert lines[0].startswith("# sweep `md` — 2/2 runs")
+    assert "| method | n | loss | comm_gb | params_m | wall_s |" in md
+    # one data row: both seeds aggregate into the single fedavg group
+    assert "| fedavg | 2 | 1.5 ± 0.5 |" in md
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-resume: broken == unbroken (acceptance criterion).
+# ---------------------------------------------------------------------------
+
+def test_sweep_kill_and_resume_equals_unbroken(tmp_path):
+    """Stop a sweep mid-grid (limit as the deterministic kill), pre-seed
+    a second run's checkpoint to simulate a mid-run kill, resume, and
+    match an unbroken sweep: identical run-id set, per-run histories,
+    and aggregated report metrics (atol 1e-5)."""
+    sweep = SweepSpec(name="kr", base=BASE,
+                      axes={"method": ["fedavg", "fedphd"],
+                            "seed": [0, 1]})
+    runs = sweep.expand()
+    assert len(runs) == 4
+
+    unbroken = run_sweep(sweep, str(tmp_path / "unbroken"),
+                         raise_on_error=True)
+    assert unbroken.complete
+
+    out = str(tmp_path / "broken")
+    # kill #1: mid-grid after one run
+    res1 = run_sweep(sweep, out, limit=1, raise_on_error=True)
+    counts = manifest_status(res1.manifest)
+    assert counts["done"] == 1 and counts["pending"] == 3
+    # kill #2: one of the remaining runs dies mid-run — simulate by
+    # running its spec to round 1 of 2 against the sweep's own ckpt path
+    victim = runs[2]
+    ckpt = os.path.join(out, "runs", victim.run_id, "ckpt.npz")
+    os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+    run_spec(victim.spec, rounds=1, ckpt=ckpt)
+    # resume: the manifest skips the done run, the victim continues from
+    # its round-1 checkpoint, the rest run fresh
+    res2 = run_sweep(sweep, out, raise_on_error=True)
+    assert res2.complete
+    assert res2.manifest["runs"][victim.run_id]["rounds_done"] == 2
+
+    assert set(res2.manifest["runs"]) == set(unbroken.manifest["runs"])
+    for rid in unbroken.manifest["runs"]:
+        ha = unbroken.manifest["runs"][rid]["history"]
+        hb = res2.manifest["runs"][rid]["history"]
+        assert len(ha) == len(hb) == 2
+        for ra, rb in zip(ha, hb):
+            assert rb["loss"] == pytest.approx(ra["loss"], abs=1e-5)
+            assert ra["comm_gb"] == rb["comm_gb"]
+            assert ra["selected"] == rb["selected"]
+
+    rep_a = build_report(unbroken.manifest)
+    rep_b = build_report(res2.manifest)
+    assert rep_a["complete"] and rep_b["complete"]
+    for ga, gb in zip(rep_a["groups"], rep_b["groups"]):
+        assert ga["key"] == gb["key"] and ga["n"] == gb["n"]
+        for m in ("loss", "comm_gb", "params_m"):
+            assert gb["metrics"][m]["mean"] \
+                == pytest.approx(ga["metrics"][m]["mean"], abs=1e-5)
+            assert gb["metrics"][m]["std"] \
+                == pytest.approx(ga["metrics"][m]["std"], abs=1e-5)
+
+
+def test_manifest_reconciles_edited_sweep(tmp_path):
+    """Editing the sweep keeps completed runs whose spec is unchanged,
+    resets changed ones, and drops stale run-ids."""
+    out = str(tmp_path / "sw")
+    s1 = SweepSpec(name="e", base=BASE, axes={"seed": [0, 1]})
+    run_sweep(s1, out, raise_on_error=True)
+    # grow the grid: seed 0/1 stay done, seed 2 is pending
+    s2 = s1.replace(axes={"seed": [0, 1, 2]})
+    from repro.experiment.sweep import init_manifest
+    man = init_manifest(s2, out)
+    assert man["runs"]["seed=0"]["status"] == "done"
+    assert man["runs"]["seed=2"]["status"] == "pending"
+    # change the base: every run's spec changed -> everything resets
+    s3 = s1.replace(base=BASE.replace(lr=1e-3))
+    man = init_manifest(s3, out)
+    assert all(e["status"] == "pending" for e in man["runs"].values())
+    assert "seed=2" not in man["runs"]           # stale id dropped
+    # the reset runs must RERUN under the edited spec, not resume the
+    # stale old-lr checkpoints sitting at the same run-id paths
+    res = run_sweep(s3, out, raise_on_error=True)
+    assert res.complete
+    ckpt = os.path.join(out, res.manifest["runs"]["seed=0"]["ckpt"])
+    with open(ckpt + ".manifest.json") as f:
+        saved_spec = json.load(f)["metadata"]["spec"]
+    assert saved_spec["lr"] == pytest.approx(1e-3)
+
+
+def test_sweep_rounds_extension_reruns_done_runs(tmp_path):
+    """Raising the sweep-level round target re-enters 'done' runs and
+    EXTENDS them from their checkpoints — a finished sweep re-invoked
+    with more rounds must not report the old short histories as
+    complete."""
+    out = str(tmp_path / "ext")
+    sweep = SweepSpec(name="ext", base=BASE, axes={"seed": [0, 1]},
+                      rounds=1)
+    res = run_sweep(sweep, out, raise_on_error=True)
+    assert all(e["rounds_done"] == 1
+               for e in res.manifest["runs"].values())
+    res = run_sweep(sweep.replace(rounds=2), out, raise_on_error=True)
+    assert res.complete
+    for e in res.manifest["runs"].values():
+        assert e["rounds_done"] == 2
+        assert [r["round"] for r in e["history"]] == [1, 2]
+    # and an unchanged re-invocation is a no-op (nothing re-runs)
+    before = json.dumps(res.manifest["runs"], sort_keys=True)
+    res = run_sweep(sweep.replace(rounds=2), out, raise_on_error=True)
+    assert json.dumps(res.manifest["runs"], sort_keys=True) == before
+
+
+def test_failed_run_recorded_and_sweep_continues(tmp_path):
+    sweep = SweepSpec(name="f", base=BASE,
+                      axes={"model": ["ddpm-unet-tiny-sweep", "nope"]})
+    res = run_sweep(sweep, str(tmp_path / "f"))
+    sts = {rid: e["status"] for rid, e in res.manifest["runs"].items()}
+    assert sts["model=nope"] == "failed"
+    assert sts["model=ddpm-unet-tiny-sweep"] == "done"
+    assert "nope" in res.manifest["runs"]["model=nope"]["error"]
+    rep = build_report(res.manifest)
+    assert not rep["complete"] and rep["done"] == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI --sweep round-trip.
+# ---------------------------------------------------------------------------
+
+def test_runner_cli_sweep_roundtrip(tmp_path):
+    sweep = SweepSpec(name="cli", base=BASE, axes={"seed": [0, 1]},
+                      group_by=("method",))
+    sweep_path = tmp_path / "grid.json"
+    sweep_path.write_text(sweep.to_json())
+    out = str(tmp_path / "out")
+
+    # "kill" after one run, then resume with the SAME command line
+    res = exp_runner.main(["--sweep", str(sweep_path), "--out", out,
+                           "--max-runs", "1"])
+    assert isinstance(res, SweepResult)
+    assert manifest_status(res.manifest)["done"] == 1
+    res = exp_runner.main(["--sweep", str(sweep_path), "--out", out])
+    assert res.complete
+
+    man = load_manifest(out)
+    assert sorted(man["runs"]) == ["seed=0", "seed=1"]
+    with open(os.path.join(out, "report.json")) as f:
+        rep = json.load(f)
+    assert rep["complete"] and rep["done"] == 2
+    assert rep["groups"][0]["key"] == {"method": "fedavg"}
+    assert rep["groups"][0]["metrics"]["loss"]["n"] == 2
+    with open(os.path.join(out, "report.md")) as f:
+        assert "| method | n |" in f.read()
+
+
+def test_runner_cli_sweep_fails_on_failed_runs(tmp_path):
+    sweep = SweepSpec(name="clif", base=BASE, axes={"model": ["nope"]})
+    sweep_path = tmp_path / "grid.json"
+    sweep_path.write_text(sweep.to_json())
+    with pytest.raises(SystemExit):
+        exp_runner.main(["--sweep", str(sweep_path),
+                         "--out", str(tmp_path / "out")])
+
+
+def test_runner_cli_sweep_rejects_single_run_flags(tmp_path):
+    """Single-run overrides would be silently meaningless on a grid —
+    the CLI refuses them instead of running something else."""
+    sweep_path = tmp_path / "grid.json"
+    sweep_path.write_text(SweepSpec(name="x", base=BASE).to_json())
+    for flags in (["--method", "fedavg"], ["--seed", "3"],
+                  ["--eval-every", "1"], ["--resume"]):
+        with pytest.raises(SystemExit, match="incompatible"):
+            exp_runner.main(["--sweep", str(sweep_path),
+                             "--out", str(tmp_path / "out"), *flags])
+    # and the mirror: sweep-only flags require --sweep
+    for flags in (["--max-runs", "1"], ["--executor", "process"],
+                  ["--group-by", "method"]):
+        with pytest.raises(SystemExit, match="--sweep"):
+            exp_runner.main(["--preset", "smoke",
+                             "--out", str(tmp_path / "out"), *flags])
+    # --max-workers only makes sense fanning out over a pool
+    with pytest.raises(SystemExit, match="--executor process"):
+        exp_runner.main(["--sweep", str(sweep_path),
+                         "--out", str(tmp_path / "out"),
+                         "--max-workers", "2"])
+
+
+# ---------------------------------------------------------------------------
+# Process-pool executor.
+# ---------------------------------------------------------------------------
+
+def test_process_executor_rejects_eval_fn(tmp_path):
+    sweep = SweepSpec(name="p", base=BASE, axes={"seed": [0]})
+    with pytest.raises(ValueError, match="eval_fn"):
+        run_sweep(sweep, str(tmp_path / "p"), executor="process",
+                  eval_fn=lambda *a: 0)
+
+
+def test_process_executor_smoke(tmp_path):
+    """One tiny run through the spawn-context pool.  Must use a BUILT-IN
+    model/dataset: the worker re-imports repro and never sees this
+    module's registrations."""
+    base = ExperimentSpec(
+        name="pool", method="fedavg", model="ddpm-unet-smoke",
+        fl=FLConfig(num_clients=2, num_edges=1, local_epochs=1,
+                    edge_agg_every=1, cloud_agg_every=2, rounds=1,
+                    sparse_rounds=2, sh_a=1000.0),
+        data=DataSpec(dataset="smoke", batch_size=32),
+        engine="sequential", prune=False)
+    sweep = SweepSpec(name="pool", base=base, axes={"seed": [0]})
+    res = run_sweep(sweep, str(tmp_path / "pool"), executor="process",
+                    max_workers=1, raise_on_error=True)
+    assert res.complete
+    (entry,) = res.manifest["runs"].values()
+    assert entry["rounds_done"] == 1
+    assert np.isfinite(entry["history"][0]["loss"])
+    # the worker's checkpoints landed in the sweep layout on disk
+    assert os.path.exists(os.path.join(str(tmp_path / "pool"),
+                                       entry["ckpt"] + ".manifest.json"))
