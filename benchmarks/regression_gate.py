@@ -21,6 +21,15 @@ Updating a baseline is an explicit, reviewed act: copy the fresh
 medians to ``benchmarks/baselines/trajectory.json`` (the per-PR bench
 trajectory) in the same commit as the change that moved them.
 
+To make that act cheap, the gate AUTO-DRAFTS the trajectory entry:
+when any matched median moves more than ``--draft-threshold`` (25%
+either way — far inside the 3x failure tolerance), it prints the
+per-row diff and writes the fully-formed proposed entry to
+``<fresh>/trajectory_draft.json``.  CI uploads the fresh-medians dir as
+an artifact, so the draft rides along; review it, fill in ``pr``/
+``note``, and append it to ``trajectory.json``.  Drafting never fails
+the gate.
+
 Usage::
 
     BENCH_OUT_DIR=out/bench python benchmarks/round_engine_bench.py
@@ -39,6 +48,7 @@ from typing import Dict, List, Optional
 
 TOLERANCE = 3.0
 SPEEDUP_TOLERANCE = 3.0
+DRAFT_THRESHOLD = 0.25
 
 _SPEEDUP = re.compile(r"(?:^|;)speedup=([0-9.]+)x")
 
@@ -87,6 +97,61 @@ def compare(baseline: Dict[str, dict], fresh: Dict[str, dict], *,
     return failures
 
 
+def trajectory_rows(fresh: Dict[str, dict]) -> Dict[str, float]:
+    """Flatten fresh bench rows into trajectory.json's row schema:
+    ``<row>_us`` per latency, ``<bench...>/speedup`` per tagged row."""
+    rows: Dict[str, float] = {}
+    for name, row in sorted(fresh.items()):
+        rows[f"{name}_us"] = float(row["us"])
+        sp = _speedup(row)
+        if sp is not None:
+            rows[name.rsplit("/", 1)[0] + "/speedup"] = sp
+    return rows
+
+
+def maybe_draft(baseline: Dict[str, dict], fresh: Dict[str, dict],
+                out_dir: str, threshold: float = DRAFT_THRESHOLD
+                ) -> Optional[str]:
+    """Compare matched medians; when any moved more than ``threshold``
+    (relative, either direction), print the diff and write a proposed
+    trajectory entry to ``<out_dir>/trajectory_draft.json``.  Returns
+    the draft path, or None when nothing moved enough."""
+    base_rows = trajectory_rows(baseline)
+    fresh_rows = trajectory_rows(fresh)
+    moved = []
+    for key in sorted(base_rows):
+        if key not in fresh_rows or base_rows[key] == 0:
+            continue
+        pct = (fresh_rows[key] - base_rows[key]) / base_rows[key]
+        if abs(pct) > threshold:
+            moved.append((key, base_rows[key], fresh_rows[key], pct))
+    if not moved:
+        return None
+
+    print(f"\nmedians moved > {threshold:.0%} vs the committed "
+          "baselines (NOT a gate failure — propose a trajectory "
+          "update):")
+    for key, b, f, pct in moved:
+        print(f"  {key}: {b:g} -> {f:g} ({pct:+.0%})")
+    import datetime
+    draft = {
+        "pr": None,
+        "date": datetime.date.today().isoformat(),
+        "note": "AUTO-DRAFT by regression_gate.py: fresh medians moved "
+                f"past the {threshold:.0%} draft threshold. Review, fill "
+                "in pr/note, and append to "
+                "benchmarks/baselines/trajectory.json in the commit "
+                "that moved them.",
+        "rows": fresh_rows,
+    }
+    path = os.path.join(out_dir, "trajectory_draft.json")
+    with open(path, "w") as fh:
+        json.dump(draft, fh, indent=2)
+        fh.write("\n")
+    print(f"proposed trajectory entry -> {path}")
+    return path
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", default="out/bench",
@@ -99,6 +164,11 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=TOLERANCE)
     ap.add_argument("--speedup-tolerance", type=float,
                     default=SPEEDUP_TOLERANCE)
+    ap.add_argument("--draft-threshold", type=float,
+                    default=DRAFT_THRESHOLD,
+                    help="relative median move (either direction) that "
+                         "triggers a proposed trajectory.json entry in "
+                         "the fresh dir (never fails the gate)")
     args = ap.parse_args(argv)
 
     baseline_files = sorted(glob.glob(os.path.join(args.baseline,
@@ -108,6 +178,8 @@ def main(argv=None) -> int:
               file=sys.stderr)
         return 2
     failures = []
+    all_base: Dict[str, dict] = {}
+    all_fresh: Dict[str, dict] = {}
     for bpath in baseline_files:
         fname = os.path.basename(bpath)
         fpath = os.path.join(args.fresh, fname)
@@ -117,9 +189,14 @@ def main(argv=None) -> int:
                             "(did the bench run with $BENCH_OUT_DIR?)")
             print(f"  MISSING  {fpath}")
             continue
-        failures += compare(_load(bpath), _load(fpath),
+        base, fresh = _load(bpath), _load(fpath)
+        all_base.update(base)
+        all_fresh.update(fresh)
+        failures += compare(base, fresh,
                             tolerance=args.tolerance,
                             speedup_tolerance=args.speedup_tolerance)
+    maybe_draft(all_base, all_fresh, args.fresh,
+                threshold=args.draft_threshold)
     if failures:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
         for msg in failures:

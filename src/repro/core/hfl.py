@@ -33,6 +33,8 @@ from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
 from repro.fl.engine import (make_round_engine, resolve_engine, route_engine,
                              stacked_adam_init, tree_gather, tree_scatter)
+from repro.fl.faults import (FaultSpec, apply_late, late_delta,
+                             make_fault_model)
 # RoundRecord is re-exported here for compatibility: it moved to
 # repro.fl.record when the flat baselines adopted the same schema.
 from repro.fl.record import RoundRecord, RunResult, evals_of
@@ -78,7 +80,8 @@ class FedPhD:
                  lr: float = 2e-4, engine: Optional[str] = None,
                  persistent_opt: bool = False,
                  mesh=None, client_axis: str = "data",
-                 eval_fn: Optional[Callable] = None, eval_every: int = 0):
+                 eval_fn: Optional[Callable] = None, eval_every: int = 0,
+                 fault: Optional[FaultSpec] = None):
         # bake the resolved compute backend into the frozen config so
         # every compiled program (and the checkpoint manifest) pins a
         # concrete backend even when it came from $FEDPHD_BACKEND
@@ -98,6 +101,14 @@ class FedPhD:
         self.eval_every = eval_every
         self.np_rng = np.random.default_rng(rng_seed)
         self.rng = jax.random.PRNGKey(rng_seed)
+        # fault injection: a disabled (or absent) spec yields no model
+        # and every fault branch below collapses to the fault-free path
+        self.fault = fault if (fault is not None and fault.enabled) else None
+        self._faults = make_fault_model(self.fault, len(clients), rng_seed)
+        # staleness aggregation: per-edge buffered late-delta sums,
+        # merged into that edge's NEXT aggregate (dropped at the prune
+        # boundary — parameter shapes change)
+        self._late_buf: Dict[int, Dict] = {}
 
         num_classes = clients[0].num_classes
         self.q_u = uniform_target(num_classes)
@@ -166,51 +177,99 @@ class FedPhD:
     def _use_vectorized(self, round_clients) -> bool:
         use, self._warned_ragged = route_engine(
             self.engine, self._engine_strict, round_clients,
-            self._warned_ragged, "FedPhD")
+            self._warned_ragged, "FedPhD", method="fedphd")
         return use
 
-    def _local_and_edge_sequential(self, r, assignment, sparse_round, mbytes):
-        """Reference path: one jitted step per batch, Python aggregation."""
+    def _local_and_edge_sequential(self, r, assignment, sparse_round, mbytes,
+                                   faults=None):
+        """Reference path: one jitted step per batch, Python aggregation.
+
+        Under an active fault schedule (``faults``): non-arrived clients
+        run zero steps (their RNG streams still advance in lockstep with
+        the stacked path), dropped/straggling clients truncate at their
+        step budget, only reporting clients enter the edge aggregate
+        (weights renormalized among them) and count uplink, and LATE
+        clients' deltas buffer into ``_late_buf`` for the staleness
+        merge at the edge's next aggregation.
+        """
         fl = self.fl
         step_fn = self.step_sparse if sparse_round else self.step_plain
         round_losses: List[float] = []
+        loss_mask: List[bool] = []
         comm_bytes = 0.0
         for e, cids in assignment.items():
             if not cids:
                 continue
             edge_model = getattr(self, "_edge_models", {}).get(e, self.params)
             client_models, counts, mus = [], [], []
+            late_models, late_counts = [], []
+            n_arrived = 0
             for cid in cids:
                 cl = self.clients[cid]
                 self.rng, sub = jax.random.split(self.rng)
+                budget = faults.budget_of(cid) if faults else None
                 opt_in = tree_gather(self._opt_stack, int(cid)) \
                     if self.persistent_opt else self._opt_zero
                 p, opt_out, loss = run_local(step_fn, edge_model, cl,
                                              epochs=fl.local_epochs, rng=sub,
-                                             opt_state=opt_in)
-                if self.persistent_opt:
+                                             opt_state=opt_in,
+                                             max_steps=budget)
+                completed = faults is None or faults.completed_of(cid)
+                if self.persistent_opt and completed:
                     self._opt_stack = tree_scatter(self._opt_stack,
                                                    int(cid), opt_out)
-                client_models.append(p)
-                counts.append(cl.n_samples)
-                mus.append(sh_score(cl.q_n, self.q_u))
                 round_losses.append(loss)
-                self.edges[e].update(cl.q_n, cl.n_samples)     # Eq. 19
-                comm_bytes += self.comm.client_edge(mbytes)     # upload
+                loss_mask.append(budget is None or budget > 0)
+                if faults is not None and faults.arrived_of(cid):
+                    n_arrived += 1
+                if completed:
+                    self.edges[e].update(cl.q_n, cl.n_samples)     # Eq. 19
+                    comm_bytes += self.comm.client_edge(mbytes)     # upload
+                if faults is not None and faults.late_of(cid):
+                    late_models.append(p)
+                    late_counts.append(cl.n_samples)
+                elif completed:                       # reporting on time
+                    client_models.append(p)
+                    counts.append(cl.n_samples)
+                    mus.append(sh_score(cl.q_n, self.q_u))
             if r % fl.edge_agg_every == 0:
-                if self.aggregation == "sh":
-                    agg = aggregate_sh(client_models, counts, mus,
-                                       fl.sh_a, fl.sh_b)        # Eq. 23/24
+                if client_models:
+                    if self.aggregation == "sh":
+                        agg = aggregate_sh(client_models, counts, mus,
+                                           fl.sh_a, fl.sh_b)    # Eq. 23/24
+                    else:
+                        agg = aggregate_fedavg(client_models, counts)
                 else:
-                    agg = aggregate_fedavg(client_models, counts)
+                    # no client reported: the edge keeps its model
+                    agg = edge_model
+                if self.aggregation == "staleness":
+                    buf = self._late_buf.pop(e, None)
+                    if buf is not None:     # merge last round's stragglers
+                        agg = apply_late(agg, buf, self.fault.staleness
+                                         if self.fault else 0.0)
+                    if late_models:
+                        tot = max(sum(counts) + sum(late_counts), 1)
+                        w = [n / tot for n in late_counts]
+                        self._late_buf[e] = late_delta(late_models,
+                                                       edge_model, w)
                 if not hasattr(self, "_edge_models"):
                     self._edge_models = {}
                 self._edge_models[e] = agg
-                comm_bytes += self.comm.client_edge(mbytes) * len(cids)  # down
-        return round_losses, comm_bytes
+                n_down = len(cids) if faults is None else n_arrived
+                comm_bytes += self.comm.client_edge(mbytes) * n_down  # down
+        return round_losses, comm_bytes, loss_mask
 
-    def _local_and_edge_vectorized(self, r, assignment, sparse_round, mbytes):
-        """Device-resident path: one program for all clients + edge agg."""
+    def _local_and_edge_vectorized(self, r, assignment, sparse_round, mbytes,
+                                   faults=None):
+        """Device-resident path: one program for all clients + edge agg.
+
+        Fault injection stays shape-static: straggler/dropout budgets
+        truncate the (C, S) valid mask as a data-only prefix AND (no
+        recompilation), non-reporting clients are zeroed out of the
+        (E, C) aggregation einsum with weights renormalized among the
+        reporters, and late clients' staleness deltas come back via the
+        ``w_late`` operand's in-engine einsum.
+        """
         fl = self.fl
         order = [(e, cid) for e, cids in assignment.items() for cid in cids]
         # identical RNG folding to the sequential loop: one split per
@@ -224,6 +283,13 @@ class FedPhD:
         # per-step select ops at trace time in that (common) case
         batches, valid, masked = stack_round([cl.data for cl in clients],
                                              fl.local_epochs)
+        if faults is not None:
+            # prefix truncation: client i executes only its first
+            # budget_i steps.  Same shapes as the fault-free round.
+            budgets = np.asarray([faults.budget_of(cid) for _, cid in order])
+            prefix = np.arange(valid.shape[1])[None, :] < budgets[:, None]
+            masked = masked or not bool(prefix.all())
+            valid = valid & prefix
         batches = {k: jnp.asarray(v) for k, v in batches.items()}
         valid = jnp.asarray(valid)
         rngs = jnp.stack(subs)
@@ -234,17 +300,37 @@ class FedPhD:
         edge_idx = jnp.asarray(np.asarray([e for e, _ in order], np.int32))
 
         # fused aggregation rows: W[e] = normalized Eq. 22/24 weights of
-        # edge e's clients, zero elsewhere
+        # edge e's REPORTING clients, zero elsewhere (graceful
+        # degradation: dropped/late clients never enter the einsum)
+        staleness = self.aggregation == "staleness"
         w_mat = np.zeros((fl.num_edges, len(order)), np.float32)
+        w_late = np.zeros((fl.num_edges, len(order)), np.float32) \
+            if staleness else None
+        any_late = False
         for e, cids in assignment.items():
             if not cids:
                 continue
-            counts = [self.clients[cid].n_samples for cid in cids]
-            mus = [sh_score(self.clients[cid].q_n, self.q_u) for cid in cids]
-            w = sh_weights(counts, mus, fl.sh_a, fl.sh_b) \
-                if self.aggregation == "sh" else fedavg_weights(counts)
-            idxs = [i for i, (ee, _) in enumerate(order) if ee == e]
-            w_mat[e, idxs] = normalize_weights(w)
+            rep = [cid for cid in cids
+                   if faults is None or faults.reporting_of(cid)]
+            if rep:
+                counts = [self.clients[cid].n_samples for cid in rep]
+                mus = [sh_score(self.clients[cid].q_n, self.q_u)
+                       for cid in rep]
+                w = sh_weights(counts, mus, fl.sh_a, fl.sh_b) \
+                    if self.aggregation == "sh" else fedavg_weights(counts)
+                idxs = [i for i, (ee, cid) in enumerate(order)
+                        if ee == e and cid in rep]
+                w_mat[e, idxs] = normalize_weights(w)
+            if staleness and faults is not None:
+                late = [cid for cid in cids if faults.late_of(cid)]
+                if late:
+                    any_late = True
+                    tot = max(sum(self.clients[cid].n_samples for cid in rep)
+                              + sum(self.clients[cid].n_samples
+                                    for cid in late), 1)
+                    for i, (ee, cid) in enumerate(order):
+                        if ee == e and cid in late:
+                            w_late[e, i] = self.clients[cid].n_samples / tot
 
         if self.mesh is not None:
             from repro.launch.federated import shard_clients
@@ -258,32 +344,62 @@ class FedPhD:
                      jnp.asarray(w_mat),
                      opt_states=(tree_gather(self._opt_stack, idx_arr)
                                  if self.persistent_opt else None),
+                     w_late=(jnp.asarray(w_late) if any_late else None),
                      masked=masked, per_client_opt=self.persistent_opt)
         if self.persistent_opt:
-            self._opt_stack = tree_scatter(self._opt_stack, idx_arr,
-                                           out["opt"])
+            if faults is None:
+                self._opt_stack = tree_scatter(self._opt_stack, idx_arr,
+                                               out["opt"])
+            else:
+                # only COMPLETED clients keep their updated moments
+                comp = np.asarray([i for i, (_, cid) in enumerate(order)
+                                   if faults.completed_of(cid)])
+                if len(comp):
+                    self._opt_stack = tree_scatter(
+                        self._opt_stack, idx_arr[comp],
+                        tree_gather(out["opt"], comp))
         agg_stack = out["agg"]
         # NO host sync here: the (C,) loss array stays a device future
         # until _finish_round — under the pipelined run() the next
         # round's host-side data prep and H2D copy overlap this round's
         # device compute before anything blocks on it
         round_losses = out["losses"]
+        loss_mask = [faults is None or faults.budget_of(cid) > 0
+                     for _, cid in order]
 
         comm_bytes = 0.0
+        n_arrived = {e: 0 for e in assignment}
         for e, cid in order:
             cl = self.clients[cid]
-            self.edges[e].update(cl.q_n, cl.n_samples)          # Eq. 19
-            comm_bytes += self.comm.client_edge(mbytes)          # upload
+            if faults is not None and faults.arrived_of(cid):
+                n_arrived[e] += 1
+            if faults is None or faults.completed_of(cid):
+                self.edges[e].update(cl.q_n, cl.n_samples)      # Eq. 19
+                comm_bytes += self.comm.client_edge(mbytes)      # upload
         if r % fl.edge_agg_every == 0:
             if not hasattr(self, "_edge_models"):
                 self._edge_models = {}
             for e, cids in assignment.items():
                 if not cids:
                     continue
-                self._edge_models[e] = jax.tree.map(
-                    lambda leaf, _e=e: leaf[_e], agg_stack)
-                comm_bytes += self.comm.client_edge(mbytes) * len(cids)
-        return round_losses, comm_bytes
+                if np.any(w_mat[e] > 0):
+                    agg = jax.tree.map(lambda leaf, _e=e: leaf[_e], agg_stack)
+                else:
+                    # no client reported: a zero w_mat row makes the
+                    # einsum row a zero tree — the edge keeps its model
+                    agg = edge_models.get(e, self.params)
+                if staleness:
+                    buf = self._late_buf.pop(e, None)
+                    if buf is not None:     # merge last round's stragglers
+                        agg = apply_late(agg, buf, self.fault.staleness
+                                         if self.fault else 0.0)
+                    if w_late is not None and np.any(w_late[e] > 0):
+                        self._late_buf[e] = jax.tree.map(
+                            lambda leaf, _e=e: leaf[_e], out["late"])
+                self._edge_models[e] = agg
+                n_down = len(cids) if faults is None else n_arrived[e]
+                comm_bytes += self.comm.client_edge(mbytes) * n_down
+        return round_losses, comm_bytes, loss_mask
 
     # -- one communication round (Alg. 1 lines 3-32) -------------------------
     def run_round(self, r: int) -> RoundRecord:
@@ -302,8 +418,20 @@ class FedPhD:
         still executing.
         """
         fl = self.fl
-        C = max(1, round(fl.participation * len(self.clients)))
-        sel_ids = self.np_rng.choice(len(self.clients), size=C, replace=False)
+        if self._faults is not None:
+            # churn first (its own RNG stream), then sample participants
+            # from the online pool only — with churn=0 the np_rng
+            # consumption is identical to the fault-free path
+            online = self._faults.begin_round()
+            pool = np.flatnonzero(online)
+            C = min(max(1, round(fl.participation * len(self.clients))),
+                    len(pool))
+            sel_ids = pool[self.np_rng.choice(len(pool), size=C,
+                                              replace=False)]
+        else:
+            C = max(1, round(fl.participation * len(self.clients)))
+            sel_ids = self.np_rng.choice(len(self.clients), size=C,
+                                         replace=False)
 
         # line 4-5: clients select edge servers
         assignment: Dict[int, List[int]] = {e: [] for e in range(fl.num_edges)}
@@ -319,14 +447,23 @@ class FedPhD:
         sparse_round = (self.prune and not self.pruned
                         and fl.prune_mode == "group_norm" and r < fl.sparse_rounds)
 
+        faults = None
+        if self._faults is not None:
+            steps = [fl.local_epochs * self.clients[c].data.steps_per_epoch
+                     for c in sel_ids]
+            faults = self._faults.draw_round(
+                sel_ids, steps, self.aggregation == "staleness")
+
         mbytes = self._model_bytes()
         # lines 7-21: per-edge local training + edge aggregation
         if self._use_vectorized([self.clients[c] for c in sel_ids]):
-            round_losses, comm_bytes = self._local_and_edge_vectorized(
-                r, assignment, sparse_round, mbytes)
+            round_losses, comm_bytes, loss_mask = \
+                self._local_and_edge_vectorized(
+                    r, assignment, sparse_round, mbytes, faults)
         else:
-            round_losses, comm_bytes = self._local_and_edge_sequential(
-                r, assignment, sparse_round, mbytes)
+            round_losses, comm_bytes, loss_mask = \
+                self._local_and_edge_sequential(
+                    r, assignment, sparse_round, mbytes, faults)
 
         pruned_this_round = False
         # lines 23-31: cloud aggregation every r_g rounds
@@ -350,6 +487,8 @@ class FedPhD:
                 self._rebuild_steps()
                 pruned_this_round = True
                 mbytes = self._model_bytes()
+                # buffered late deltas have pre-prune shapes: drop them
+                self._late_buf = {}
             # broadcast + refresh (lines 29-31)
             comm_bytes += self.comm.edge_cloud(mbytes) * fl.num_edges
             self._edge_models = {e: self.params for e in range(fl.num_edges)}
@@ -363,7 +502,9 @@ class FedPhD:
                 "comm_bytes": comm_bytes, "sel_ids": sel_ids,
                 "pruned": pruned_this_round, "params": self.params,
                 "cfg": self.cfg, "params_m": self._param_count_m(),
-                "edge_sh": [e.sh(self.q_u) for e in self.edges]}
+                "edge_sh": [e.sh(self.q_u) for e in self.edges],
+                "loss_mask": loss_mask,
+                "availability": faults.availability() if faults else None}
 
     def _finish_round(self, pend: Dict) -> RoundRecord:
         """Sync the pending round's losses and append its RoundRecord."""
@@ -371,14 +512,19 @@ class FedPhD:
         if not isinstance(losses, list):          # device future -> host
             losses = [float(x) for x in np.asarray(losses)]
         r = pend["round"]
+        mask = pend.get("loss_mask")
+        if mask is not None:        # faults: average over executed clients
+            losses = [l for l, m in zip(losses, mask) if m]
         rec = RoundRecord(
             round=r,
-            loss=float(np.mean(losses)) if losses else float("nan"),
+            loss=float(np.mean(losses)) if losses
+            else (0.0 if mask is not None else float("nan")),
             comm_gb=pend["comm_bytes"] / 1e9,
             params_m=pend["params_m"],
             selected=[int(c) for c in pend["sel_ids"]],
             edge_sh=pend["edge_sh"],
             pruned=pend["pruned"],
+            availability=pend.get("availability"),
         )
         # append BEFORE the eval hook: the round executed (trainer state
         # and RNG streams advanced), so a raising eval_fn must lose the
@@ -449,6 +595,8 @@ class FedPhD:
                             if hasattr(self, "_edge_models") else None),
             "edge_counts": np.stack([e.counts for e in self.edges]),
             "edge_n": np.asarray([e.n for e in self.edges], np.int64),
+            "late_buf": ({str(e): t for e, t in self._late_buf.items()}
+                         or None),
         }
         meta = {
             "trainer": "fedphd",
@@ -457,6 +605,7 @@ class FedPhD:
             "np_rng": self.np_rng.bit_generator.state,
             "client_rngs": [cl.data.rng_state() for cl in self.clients],
             "history": [rec.to_dict() for rec in self.history],
+            "fault": self._faults.state() if self._faults else None,
         }
         return arrays, meta
 
@@ -480,9 +629,14 @@ class FedPhD:
             e.counts = np.asarray(arrays["edge_counts"][i],
                                   np.float64).copy()
             e.n = int(arrays["edge_n"][i])
+        self._late_buf = ({int(e): to_dev(t)
+                           for e, t in arrays["late_buf"].items()}
+                          if arrays.get("late_buf") else {})
         self.np_rng.bit_generator.state = meta["np_rng"]
         for cl, st in zip(self.clients, meta["client_rngs"]):
             cl.data.set_rng_state(st)
+        if self._faults is not None and meta.get("fault"):
+            self._faults.set_state(meta["fault"])
         self.history = [RoundRecord.from_dict(d) for d in meta["history"]]
         self._rebuild_steps()
         if self.persistent_opt:

@@ -28,6 +28,7 @@ from repro.experiment.sweep import (SweepResult, SweepRun, SweepSpec,
                                     manifest_status, run_id_of, run_sweep,
                                     spec_get, spec_with)
 from repro.experiment.trainer import Trainer
+from repro.fl.faults import FaultModel, FaultSpec
 from repro.fl.record import RoundRecord, RunResult, evals_of
 
 __all__ = ["DATASETS", "dataset_spec", "make_clients", "register_dataset",
@@ -35,6 +36,7 @@ __all__ = ["DATASETS", "dataset_spec", "make_clients", "register_dataset",
            "make_trainer", "method_entry", "register_method",
            "registered_methods", "Experiment", "checkpoint_exists",
            "run_spec", "TOPOLOGIES", "DataSpec", "ExperimentSpec",
+           "FaultModel", "FaultSpec",
            "Trainer", "RoundRecord", "RunResult", "evals_of",
            "SweepResult", "SweepRun", "SweepSpec", "load_manifest",
            "manifest_path", "manifest_status", "run_id_of", "run_sweep",

@@ -74,31 +74,42 @@ def make_trainer(spec: ExperimentSpec, cfg: ModelConfig,
 # Built-in methods.
 # ---------------------------------------------------------------------------
 
-def _fedphd_factory(prune_mode: str = "") -> TrainerFactory:
+def _fedphd_factory(prune_mode: str = "",
+                    aggregation: str = "") -> TrainerFactory:
     def make(spec: ExperimentSpec, cfg, clients, eval_fn):
         from repro.core.hfl import FedPhD   # lazy: core.hfl imports repro.fl
         fl = spec.fl
         if prune_mode:
             fl = dataclasses.replace(fl, prune_mode=prune_mode)
         return FedPhD(cfg, fl, clients, rng_seed=spec.seed,
-                      selection=spec.selection, aggregation=spec.aggregation,
+                      selection=spec.selection,
+                      aggregation=aggregation or spec.aggregation,
                       prune=spec.prune, lr=spec.lr, engine=spec.engine,
                       persistent_opt=spec.persistent_opt,
-                      eval_fn=eval_fn, eval_every=spec.eval_every)
+                      eval_fn=eval_fn, eval_every=spec.eval_every,
+                      fault=spec.fault)
     return make
 
 
-def _flat_factory(method: str) -> TrainerFactory:
+def _flat_factory(method: str, aggregation: str = "fedavg") -> TrainerFactory:
     def make(spec: ExperimentSpec, cfg, clients, eval_fn):
         return FlatTrainer(method, cfg, spec.fl, clients, lr=spec.lr,
                            rng_seed=spec.seed, engine=spec.engine,
                            persistent_opt=spec.persistent_opt,
-                           eval_fn=eval_fn, eval_every=spec.eval_every)
+                           eval_fn=eval_fn, eval_every=spec.eval_every,
+                           aggregation=aggregation, fault=spec.fault)
     return make
 
 
 register_method("fedphd", "hierarchical", _fedphd_factory())
 # FedPhD-OS: one-shot L2 pruning at r = 0 instead of sparse-train rounds
 register_method("fedphd-os", "hierarchical", _fedphd_factory("oneshot_l2"))
+# staleness-aware aggregation ablations: on-time FedAvg merge + buffered
+# late-delta decay (repro.fl.faults) — only meaningful with an enabled
+# spec.fault that produces stragglers; equal to fedavg otherwise
+register_method("fedphd-stale", "hierarchical",
+                _fedphd_factory(aggregation="staleness"))
+register_method("fedavg-stale", "flat",
+                _flat_factory("fedavg", aggregation="staleness"))
 for _m in FLAT_METHODS:
     register_method(_m, "flat", _flat_factory(_m))

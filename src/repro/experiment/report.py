@@ -96,15 +96,22 @@ def build_report(man: Mapping[str, Any],
     group_by = tuple(group_by) if group_by else sweep.default_group_by()
 
     groups: Dict[Tuple, Dict[str, Any]] = {}
-    done = 0
+    done = failed = 0
     for rid, entry in man["runs"].items():
-        if entry["status"] != "done":
+        # failed (quarantined) runs surface in the report instead of
+        # silently shrinking a group's n; pending/running stay invisible
+        if entry["status"] not in ("done", "failed"):
             continue
-        done += 1
         key = _group_key(entry, group_by)
-        g = groups.setdefault(key, {"runs": [], "scalars": []})
-        g["runs"].append(rid)
-        g["scalars"].append(run_scalars(entry))
+        g = groups.setdefault(key, {"runs": [], "scalars": [],
+                                    "failed": []})
+        if entry["status"] == "done":
+            done += 1
+            g["runs"].append(rid)
+            g["scalars"].append(run_scalars(entry))
+        else:
+            failed += 1
+            g["failed"].append(rid)
 
     out_groups = []
     for key, g in groups.items():          # insertion = manifest order
@@ -118,6 +125,8 @@ def build_report(man: Mapping[str, Any],
             "key": dict(zip(group_by, key)),
             "n": len(g["runs"]),
             "runs": g["runs"],
+            "failed": len(g["failed"]),
+            "failed_runs": g["failed"],
             "metrics": metrics,
         })
     total = len(man["runs"])
@@ -127,6 +136,7 @@ def build_report(man: Mapping[str, Any],
         "group_by": list(group_by),
         "total_runs": total,
         "done": done,
+        "failed": failed,
         "complete": done == total,
         "groups": out_groups,
     }
@@ -145,18 +155,25 @@ def _fmt(x: Any) -> str:
 
 
 def report_markdown(report: Mapping[str, Any]) -> str:
-    """The report as one GitHub-flavored markdown table (mean ± std)."""
+    """The report as one GitHub-flavored markdown table (mean ± std).
+
+    A ``failed`` column appears only when the sweep has quarantined
+    runs, so clean sweeps render exactly as before."""
     group_by = report["group_by"]
     metrics = _metric_columns(report)
+    n_failed = report.get("failed", 0)
     lines = [f"# sweep `{report['sweep']}` — {report['done']}/"
              f"{report['total_runs']} runs"
+             + (f", {n_failed} FAILED" if n_failed else "")
              + ("" if report["complete"] else " (INCOMPLETE)"),
              ""]
-    header = [*group_by, "n", *metrics]
+    header = [*group_by, "n", *(["failed"] if n_failed else []), *metrics]
     lines.append("| " + " | ".join(header) + " |")
     lines.append("|" + "---|" * len(header))
     for g in report["groups"]:
         cells = [_fmt(g["key"][a]) for a in group_by] + [str(g["n"])]
+        if n_failed:
+            cells.append(str(g.get("failed", 0)))
         for m in metrics:
             st = g["metrics"].get(m)
             cells.append(f"{st['mean']:.4g} ± {st['std']:.2g}"

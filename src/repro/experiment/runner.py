@@ -84,6 +84,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="[--sweep] comma-separated axes for the "
                          "aggregated report (default: the sweep's "
                          "group_by, else its non-seed axes)")
+    ap.add_argument("--timeout-s", type=float,
+                    help="[--sweep --executor process] wall-clock budget "
+                         "per run attempt; a run exceeding it is killed "
+                         "and retried/quarantined")
+    ap.add_argument("--max-retries", type=int,
+                    help="[--sweep] retry a crashed/hung run this many "
+                         "times (exponential backoff, resuming from its "
+                         "checkpoint) before quarantining it as failed "
+                         "(default 0)")
     ap.add_argument("--method", help="override spec.method (registry key)")
     ap.add_argument("--engine",
                     choices=("auto", "vectorized", "sequential"),
@@ -163,7 +172,9 @@ def _main_sweep(args: argparse.Namespace) -> SweepResult:
     eval_fn = _default_eval if executor == "sequential" else None
     res = run_sweep(sweep, args.out, executor=executor,
                     max_workers=args.max_workers, limit=args.max_runs,
-                    eval_fn=eval_fn, save_every=args.save_every)
+                    eval_fn=eval_fn, save_every=args.save_every,
+                    timeout_s=args.timeout_s,
+                    max_retries=args.max_retries or 0)
     group_by = [g.strip() for g in (args.group_by or "").split(",")
                 if g.strip()] or None
     report = write_report(res.manifest, args.out, group_by=group_by)
@@ -189,7 +200,9 @@ def main(argv: Optional[Sequence[str]] = None
     bad = [flag for flag, val in (("--executor", args.executor),
                                   ("--max-workers", args.max_workers),
                                   ("--max-runs", args.max_runs),
-                                  ("--group-by", args.group_by))
+                                  ("--group-by", args.group_by),
+                                  ("--timeout-s", args.timeout_s),
+                                  ("--max-retries", args.max_retries))
            if val is not None]
     if bad:
         raise SystemExit(f"{', '.join(bad)} require --sweep")

@@ -21,6 +21,7 @@ import json
 from typing import Optional
 
 from repro.configs.base import FLConfig, fl_from_dict
+from repro.fl.faults import FaultSpec
 
 TOPOLOGIES = ("hierarchical", "flat")
 
@@ -58,6 +59,10 @@ class ExperimentSpec:
     lr: float = 2e-4
     eval_every: int = 0             # 0 = never call the eval hook
     seed: int = 0
+    fault: FaultSpec = FaultSpec()  # client availability / fault model
+                                    # (default: disabled — bitwise
+                                    # identical to the fault-free path);
+                                    # sweepable as fault.* axes
 
     def replace(self, **kw) -> "ExperimentSpec":
         return dataclasses.replace(self, **kw)
@@ -74,6 +79,8 @@ class ExperimentSpec:
             d["fl"] = fl_from_dict(d["fl"])
         if isinstance(d.get("data"), dict):
             d["data"] = DataSpec(**d["data"])
+        if isinstance(d.get("fault"), dict):
+            d["fault"] = FaultSpec.from_dict(d["fault"])
         known = {k: v for k, v in d.items()
                  if k in {f.name for f in dataclasses.fields(cls)}}
         return cls(**known)

@@ -43,6 +43,7 @@ import json
 import os
 import re
 import time
+import traceback
 from typing import (Any, Dict, List, Mapping, NamedTuple, Optional, Sequence,
                     Tuple)
 
@@ -317,6 +318,7 @@ def init_manifest(sweep: SweepSpec, out: str) -> dict:
                 "wall_s": 0.0,
                 "history": [],
                 "error": None,
+                "attempts": 0,
             }
     os.makedirs(out, exist_ok=True)
     write_manifest(out, man)
@@ -376,17 +378,23 @@ def _target_rounds(sweep: SweepSpec, entry: Mapping[str, Any]) -> int:
     return sweep.rounds or spec_get(entry["spec"], "fl.rounds")
 
 
-def _exec_one(spec_dict: dict, ckpt: str, rounds: Optional[int],
-              save_every: int):
-    """Process-pool worker: run (or resume) ONE grid point.  Module-level
-    for picklability under the spawn context."""
+def _attempt(spec_dict: dict, ckpt: str, rounds: Optional[int],
+             eval_fn, save_every: int):
+    """Run (or resume) ONE grid point — the shared resume-or-fresh core
+    of both executors.  A retried run re-enters here and picks up the
+    previous attempt's last per-round checkpoint, so a transient crash
+    costs only the rounds since the last save.
+
+    A stale checkpoint left by an EDITED sweep (different spec at the
+    same run-id path) reruns fresh, not resumes."""
     t0 = time.perf_counter()
     if checkpoint_exists(ckpt) and _ckpt_spec_matches(ckpt, spec_dict):
         exp = run_spec(None, resume=True, ckpt=ckpt, rounds=rounds,
-                       save_every=save_every)
+                       eval_fn=eval_fn, save_every=save_every)
     else:
         exp = run_spec(ExperimentSpec.from_dict(spec_dict), ckpt=ckpt,
-                       rounds=rounds, save_every=save_every)
+                       rounds=rounds, eval_fn=eval_fn,
+                       save_every=save_every)
     return ([r.to_dict() for r in exp.history],
             time.perf_counter() - t0)
 
@@ -397,7 +405,10 @@ def run_sweep(sweep: SweepSpec, out: str, *,
               limit: Optional[int] = None,
               eval_fn=None,
               save_every: int = 1,
-              raise_on_error: bool = False) -> SweepResult:
+              raise_on_error: bool = False,
+              timeout_s: Optional[float] = None,
+              max_retries: int = 0,
+              backoff_s: float = 1.0) -> SweepResult:
     """Execute (or resume) a sweep into ``out``.
 
     The manifest at ``<out>/sweep.json`` is written before and after
@@ -409,14 +420,25 @@ def run_sweep(sweep: SweepSpec, out: str, *,
     spin — and the manifest stays resumable (the CI smoke job uses it
     as a deterministic "kill").
 
-    ``executor="process"`` fans runs out over a spawn-context process
-    pool; a Python ``eval_fn`` cannot cross that boundary (use the
-    sequential executor, or bake evals into a registered method).
-    Failed runs are recorded in the manifest (status + error) and the
-    sweep moves on, unless ``raise_on_error``.
+    ``executor="process"`` fans runs out over spawn-context worker
+    processes (one per in-flight run); a Python ``eval_fn`` cannot
+    cross that boundary (use the sequential executor, or bake evals
+    into a registered method).
+
+    Fault tolerance: a crashed run is retried up to ``max_retries``
+    times with exponential backoff (``backoff_s * 2**(attempt-1)``),
+    resuming from its last checkpoint each time; exhausted retries
+    quarantine the run as ``status="failed"`` with the LAST attempt's
+    full traceback in ``entry["error"]`` while the rest of the grid
+    completes (unless ``raise_on_error``).  ``timeout_s`` (process
+    executor only) kills any single attempt exceeding the wall-clock
+    budget — a hung run cannot stall the grid.
     """
     if executor not in EXECUTORS:
         raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
+    if timeout_s is not None and executor != "process":
+        raise ValueError("timeout_s needs executor='process' (a hung "
+                         "in-process run cannot be interrupted)")
     man = init_manifest(sweep, out)
     # a "done" run re-enters the queue when the target round count grew
     # (sweep.rounds raised, or the base fl.rounds edited in place)
@@ -430,74 +452,178 @@ def run_sweep(sweep: SweepSpec, out: str, *,
         if eval_fn is not None:
             raise ValueError("eval_fn cannot cross the process boundary; "
                              "use executor='sequential'")
-        _run_pool(man, out, order, sweep.rounds, max_workers, save_every,
-                  raise_on_error)
+        _run_procs(man, out, order, sweep.rounds, max_workers, save_every,
+                   raise_on_error, timeout_s, max_retries, backoff_s)
         return SweepResult(man, out)
 
     for rid in order:
         entry = man["runs"][rid]
-        entry["status"] = "running"
-        write_manifest(out, man)
         ckpt = os.path.join(out, entry["ckpt"])
         os.makedirs(os.path.dirname(ckpt), exist_ok=True)
-        t0 = time.perf_counter()
-        try:
-            if checkpoint_exists(ckpt) \
-                    and _ckpt_spec_matches(ckpt, entry["spec"]):
-                # mid-run resume: the partial per-round checkpoint of a
-                # killed (or pre-seeded) run continues, not restarts; a
-                # stale checkpoint under an edited spec reruns fresh
-                exp = run_spec(None, resume=True, ckpt=ckpt,
-                               rounds=sweep.rounds, eval_fn=eval_fn,
-                               save_every=save_every)
-            else:
-                exp = run_spec(ExperimentSpec.from_dict(entry["spec"]),
-                               ckpt=ckpt, rounds=sweep.rounds,
-                               eval_fn=eval_fn, save_every=save_every)
-        except Exception as e:  # noqa: BLE001 — recorded, surfaced by caller
-            entry["status"] = "failed"
-            entry["error"] = f"{type(e).__name__}: {e}"
-            write_manifest(out, man)
-            if raise_on_error:
-                raise
-            continue
-        _finish_entry(entry, [r.to_dict() for r in exp.history],
-                      time.perf_counter() - t0)
-        write_manifest(out, man)
-    return SweepResult(man, out)
-
-
-def _run_pool(man: dict, out: str, order: List[str],
-              rounds: Optional[int], max_workers: Optional[int],
-              save_every: int, raise_on_error: bool) -> None:
-    import multiprocessing as mp
-    from concurrent.futures import ProcessPoolExecutor, as_completed
-
-    # spawn, not fork: forking a process with a live JAX runtime
-    # deadlocks; spawn re-imports repro in each worker from PYTHONPATH
-    ctx = mp.get_context("spawn")
-    futures = {}
-    with ProcessPoolExecutor(max_workers=max_workers or min(len(order), 4),
-                             mp_context=ctx) as pool:
-        for rid in order:
-            entry = man["runs"][rid]
+        last_exc = None
+        for attempt in range(1, max_retries + 2):
+            if attempt > 1:
+                time.sleep(backoff_s * 2 ** (attempt - 2))
             entry["status"] = "running"
-            ckpt = os.path.join(out, entry["ckpt"])
-            os.makedirs(os.path.dirname(ckpt), exist_ok=True)
-            futures[pool.submit(_exec_one, entry["spec"], ckpt, rounds,
-                                save_every)] = rid
-        write_manifest(out, man)
-        for fut in as_completed(futures):
-            rid = futures[fut]
-            entry = man["runs"][rid]
+            entry["attempts"] = int(entry.get("attempts") or 0) + 1
+            write_manifest(out, man)
             try:
-                history, wall_s = fut.result()
-            except Exception as e:  # noqa: BLE001
-                entry["status"] = "failed"
-                entry["error"] = f"{type(e).__name__}: {e}"
-                write_manifest(out, man)
-                if raise_on_error:
-                    raise
+                history, wall_s = _attempt(entry["spec"], ckpt,
+                                           sweep.rounds, eval_fn,
+                                           save_every)
+            except Exception as e:  # noqa: BLE001 — recorded + retried
+                last_exc = e
+                entry["error"] = traceback.format_exc()
+                entry["status"] = "pending"   # retry-eligible until the
+                write_manifest(out, man)      # loop below quarantines it
                 continue
             _finish_entry(entry, history, wall_s)
             write_manifest(out, man)
+            break
+        else:
+            entry["status"] = "failed"        # retries exhausted
+            write_manifest(out, man)
+            if raise_on_error:
+                raise last_exc
+    return SweepResult(man, out)
+
+
+def _proc_worker(conn, spec_dict: dict, ckpt: str, rounds: Optional[int],
+                 save_every: int) -> None:
+    """Process-executor child: run ONE grid point, report the result (or
+    the full traceback) back over the pipe.  Module-level for spawn
+    picklability."""
+    try:
+        history, wall_s = _attempt(spec_dict, ckpt, rounds, None,
+                                   save_every)
+        conn.send(("done", history, wall_s))
+    except Exception:  # noqa: BLE001 — shipped to the parent verbatim
+        conn.send(("error", traceback.format_exc()))
+    finally:
+        conn.close()
+
+
+def _run_procs(man: dict, out: str, order: List[str],
+               rounds: Optional[int], max_workers: Optional[int],
+               save_every: int, raise_on_error: bool,
+               timeout_s: Optional[float], max_retries: int,
+               backoff_s: float) -> None:
+    """Process-per-run scheduler with wall-clock timeouts and retry.
+
+    One spawn-context process per in-flight run (spawn, not fork:
+    forking a process with a live JAX runtime deadlocks; spawn
+    re-imports repro in each worker from PYTHONPATH), results returned
+    over a Pipe.  A run whose attempt exceeds ``timeout_s`` is
+    terminated (then killed) and treated like a crash; crashes requeue
+    with exponential backoff until ``max_retries`` attempts are
+    exhausted, then quarantine as ``failed`` without stopping the grid.
+    """
+    import multiprocessing as mp
+
+    ctx = mp.get_context("spawn")
+    workers = max(max_workers or min(len(order), 4), 1)
+    # (rid, attempt, not_before): retries wait out their backoff here
+    ready: List[Tuple[str, int, float]] = [(rid, 1, 0.0) for rid in order]
+    running: Dict[str, dict] = {}
+
+    def _launch(rid: str, attempt: int) -> None:
+        entry = man["runs"][rid]
+        entry["status"] = "running"
+        entry["attempts"] = int(entry.get("attempts") or 0) + 1
+        ckpt = os.path.join(out, entry["ckpt"])
+        os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+        recv, send = ctx.Pipe(duplex=False)
+        proc = ctx.Process(target=_proc_worker,
+                           args=(send, entry["spec"], ckpt, rounds,
+                                 save_every))
+        proc.start()
+        send.close()    # parent's copy of the child end must not keep
+        running[rid] = {"proc": proc, "conn": recv,     # the pipe open
+                        "attempt": attempt,
+                        "deadline": (time.monotonic() + timeout_s)
+                        if timeout_s else None}
+        write_manifest(out, man)
+
+    def _fail_or_retry(rid: str, attempt: int, err: str) -> bool:
+        """Record the attempt's error; requeue with backoff or
+        quarantine.  Returns True when the run is terminally failed."""
+        entry = man["runs"][rid]
+        entry["error"] = err
+        if attempt <= max_retries:
+            entry["status"] = "pending"
+            ready.append((rid, attempt + 1,
+                          time.monotonic() + backoff_s * 2 ** (attempt - 1)))
+        else:
+            entry["status"] = "failed"
+        write_manifest(out, man)
+        return entry["status"] == "failed"
+
+    def _reap(rid: str) -> dict:
+        st = running.pop(rid)
+        st["conn"].close()
+        return st
+
+    failed_rid = None
+    while (ready or running) and failed_rid is None:
+        while ready and len(running) < workers:
+            i = next((j for j, (_, _, nb) in enumerate(ready)
+                      if nb <= time.monotonic()), None)
+            if i is None:
+                break
+            rid, attempt, _ = ready.pop(i)
+            _launch(rid, attempt)
+        progressed = False
+        for rid in list(running):
+            st = running[rid]
+            proc = st["proc"]
+            if st["conn"].poll():
+                msg = st["conn"].recv()
+                _reap(rid)
+                proc.join()
+                progressed = True
+                if msg[0] == "done":
+                    _finish_entry(man["runs"][rid], msg[1], msg[2])
+                    write_manifest(out, man)
+                elif _fail_or_retry(rid, st["attempt"], msg[1]) \
+                        and raise_on_error:
+                    failed_rid = rid
+                    break
+            elif st["deadline"] is not None \
+                    and time.monotonic() > st["deadline"]:
+                # hung (or just slow past the budget): terminate, then
+                # kill if it ignores SIGTERM — the grid must not stall
+                proc.terminate()
+                proc.join(5)
+                if proc.is_alive():
+                    proc.kill()
+                    proc.join()
+                _reap(rid)
+                progressed = True
+                err = (f"TimeoutError: run exceeded "
+                       f"timeout_s={timeout_s} (terminated)")
+                if _fail_or_retry(rid, st["attempt"], err) \
+                        and raise_on_error:
+                    failed_rid = rid
+                    break
+            elif not proc.is_alive():
+                # dead with no message: segfault / OOM-kill / external
+                _reap(rid)
+                progressed = True
+                err = f"WorkerDied: exitcode={proc.exitcode}"
+                if _fail_or_retry(rid, st["attempt"], err) \
+                        and raise_on_error:
+                    failed_rid = rid
+                    break
+        if not progressed:
+            time.sleep(0.05)
+
+    if failed_rid is not None:
+        for st in running.values():    # raise_on_error: stop the grid
+            st["proc"].terminate()
+            st["proc"].join()
+            st["conn"].close()
+        write_manifest(out, man)
+        raise RuntimeError(
+            f"sweep run {failed_rid!r} failed after "
+            f"{man['runs'][failed_rid].get('attempts')} attempt(s):\n"
+            f"{man['runs'][failed_rid]['error']}")

@@ -40,12 +40,15 @@ import numpy as np
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.aggregation import (aggregate_fedavg, fedavg_weights,
                                     normalize_weights, uniform_weights,
-                                    weighted_average)
+                                    weighted_average,
+                                    weighted_average_stacked)
 from repro.data.pipeline import stack_round
 from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
 from repro.fl.engine import (make_round_engine, resolve_engine, route_engine,
                              stacked_adam_init, tree_gather, tree_scatter)
+from repro.fl.faults import (FaultSpec, apply_late, late_delta,
+                             make_fault_model)
 from repro.fl.record import RoundRecord, RunResult, evals_of
 from repro.models import model
 from repro.optim import adam_from_tree, adam_init, adam_update
@@ -113,9 +116,19 @@ class FlatTrainer:
                  clients: List[Client], *, lr: float = 2e-4,
                  rng_seed: int = 0, engine: Optional[str] = None,
                  persistent_opt: bool = False,
-                 eval_fn: Optional[Callable] = None, eval_every: int = 0):
+                 eval_fn: Optional[Callable] = None, eval_every: int = 0,
+                 aggregation: str = "fedavg",
+                 fault: Optional[FaultSpec] = None):
         assert method in FLAT_METHODS
         self.method = method
+        if aggregation not in ("fedavg", "staleness"):
+            raise ValueError(f"unknown flat aggregation {aggregation!r}")
+        if aggregation == "staleness" and method != "fedavg":
+            raise ValueError("staleness aggregation is a FedAvg variant "
+                             f"(got method={method!r})")
+        # "staleness" == FedAvg over on-time reporters + the buffered
+        # late-delta merge; with no stragglers it IS FedAvg exactly
+        self.aggregation = aggregation
         # pin the resolved compute backend (repro.models.ops) so every
         # compiled step/round program and the memoized engine key carry
         # a concrete backend — mirrors FedPhD
@@ -129,6 +142,12 @@ class FlatTrainer:
         self.eval_fn = eval_fn
         self.eval_every = eval_every
         self._warned_ragged = False
+
+        # fault injection (mirrors FedPhD): disabled spec -> no model,
+        # every fault branch collapses to the fault-free path
+        self.fault = fault if (fault is not None and fault.enabled) else None
+        self._faults = make_fault_model(self.fault, len(clients), rng_seed)
+        self._late_buf = None   # flat topology: one edge, one buffer
 
         self.np_rng = np.random.default_rng(rng_seed)
         self.rng = jax.random.PRNGKey(rng_seed)
@@ -178,16 +197,25 @@ class FlatTrainer:
     def _use_vectorized(self, round_clients) -> bool:
         use, self._warned_ragged = route_engine(
             self.engine, self._engine_strict, round_clients,
-            self._warned_ragged, "run_flat_fl")
+            self._warned_ragged, "run_flat_fl", method=self.method)
         return use
 
     # -- reference path ------------------------------------------------------
-    def _round_sequential(self, sel, subs):
+    def _round_sequential(self, sel, subs, faults=None):
+        """Per-client reference loop.  Under an active fault schedule:
+        non-arrived clients run zero steps (RNG lockstep preserved),
+        budgets truncate local training, only on-time reporters enter
+        the FedAvg einsum (renormalized) or update client-local state,
+        and late clients feed the staleness buffer."""
         method, fl, cfg, params = self.method, self.fl, self.cfg, self.params
         client_models, counts, losses, c_deltas = [], [], [], []
+        late_models, late_counts = [], []
         for i, cid in enumerate(sel):
             cid = int(cid)
             cl = self.clients[cid]
+            budget = faults.budget_of(cid) if faults else None
+            completed = faults is None or faults.completed_of(cid)
+            reporting = faults is None or faults.reporting_of(cid)
             start = params
             if method == "feddiffuse" and self._seen[cid]:
                 shared, _ = _split_shared(params, cfg)
@@ -206,26 +234,33 @@ class FlatTrainer:
             new_p, opt_out, loss = run_local(self.step_fn, start, cl,
                                              epochs=fl.local_epochs,
                                              rng=subs[i], ctx=ctx,
-                                             opt_state=opt_in)
+                                             opt_state=opt_in,
+                                             max_steps=budget)
             losses.append(loss)
-            counts.append(cl.n_samples)
-            if self.persistent_opt:
+            if self.persistent_opt and completed:
                 self._opt_stack = tree_scatter(self._opt_stack, cid, opt_out)
-            if method == "moon":
+            if method == "moon" and completed:
                 self._prev_stack = tree_scatter(self._prev_stack, cid, new_p)
                 self._seen[cid] = True
-            if method == "feddiffuse":
+            if method == "feddiffuse" and completed:
                 shared, local = _split_shared(new_p, cfg)
                 self._local_stack = tree_scatter(self._local_stack, cid,
                                                  local)
                 self._seen[cid] = True
-                client_models.append(shared)
-            else:
-                client_models.append(new_p)
-            if method == "scaffold":
-                # c_i+ = c_i - c + (x - y_i) / (K * lr)
-                steps = fl.local_epochs * cl.data.steps_per_epoch
-                scale = 1.0 / (steps * self.lr)
+            if reporting:
+                counts.append(cl.n_samples)
+                client_models.append(_split_shared(new_p, cfg)[0]
+                                     if method == "feddiffuse" else new_p)
+            elif faults is not None and faults.late_of(cid):
+                late_models.append(new_p)
+                late_counts.append(cl.n_samples)
+            if method == "scaffold" and completed:
+                # c_i+ = c_i - c + (x - y_i) / (K * lr); K = executed
+                # steps (the fault budget when truncated; clamp dodges
+                # a 0-step inf that the zero delta would NaN-multiply)
+                steps = budget if faults else \
+                    fl.local_epochs * cl.data.steps_per_epoch
+                scale = 1.0 / (max(steps, 1) * self.lr)
                 ci = ctx["c_local"]
                 new_ci = jax.tree.map(
                     lambda ci_, c, x, y: ci_ - c + scale
@@ -235,37 +270,74 @@ class FlatTrainer:
                 self._c_local_stack = tree_scatter(self._c_local_stack, cid,
                                                    new_ci)
 
-        agg = aggregate_fedavg(client_models, counts)
+        # graceful degradation: no reporter -> the server keeps params
+        agg = aggregate_fedavg(client_models, counts) \
+            if client_models else (_split_shared(params, cfg)[0]
+                                   if method == "feddiffuse" else params)
+        if self.aggregation == "staleness":
+            buf, self._late_buf = self._late_buf, None
+            if buf is not None:         # merge last round's stragglers
+                agg = apply_late(agg, buf, self.fault.staleness
+                                 if self.fault else 0.0)
+            if late_models:
+                tot = max(sum(counts) + sum(late_counts), 1)
+                self._late_buf = late_delta(
+                    late_models, params, [n / tot for n in late_counts])
         if method == "feddiffuse":
             _, local = _split_shared(params, cfg)
             self.params = _merge(agg, local)
         else:
             self.params = agg
-        if method == "scaffold":
+        if method == "scaffold" and c_deltas:
             mean_dc = weighted_average(c_deltas,
                                        uniform_weights(len(c_deltas)))
-            frac = len(sel) / len(self.clients)
+            frac = len(c_deltas) / len(self.clients)
             self.c_global = jax.tree.map(lambda c, d: c + frac * d,
                                          self.c_global, mean_dc)
         return losses
 
     # -- device-resident path ------------------------------------------------
-    def _round_vectorized(self, sel, subs):
+    def _round_vectorized(self, sel, subs, faults=None):
+        """E=1 engine round.  Faults stay shape-static: budgets AND a
+        prefix into the (C, S) valid mask, non-reporting clients get a
+        zero aggregation weight (renormalized among reporters), and
+        late deltas return via the ``w_late`` einsum."""
         method, fl, cfg, params = self.method, self.fl, self.cfg, self.params
         sel_arr = np.asarray(sel)
         sel_clients = [self.clients[int(cid)] for cid in sel]
         counts = [cl.n_samples for cl in sel_clients]
+        rep = np.asarray([faults is None or faults.reporting_of(int(c))
+                          for c in sel], bool)
+        comp = np.asarray([faults is None or faults.completed_of(int(c))
+                           for c in sel], bool)
 
         batches, valid, padded = stack_round([cl.data for cl in sel_clients],
                                              fl.local_epochs)
+        if faults is not None:
+            budgets = np.asarray([faults.budget_of(int(c)) for c in sel])
+            prefix = np.arange(valid.shape[1])[None, :] < budgets[:, None]
+            padded = padded or not bool(prefix.all())
+            valid = valid & prefix
         batches = {k: jnp.asarray(v) for k, v in batches.items()}
         valid = jnp.asarray(valid)
         rngs = jnp.stack(subs)
         # the flat topology is the E=1 special case of the edge engine
         server = jax.tree.map(lambda leaf: leaf[None], params)
         edge_idx = jnp.zeros((len(sel),), jnp.int32)
-        w_row = jnp.asarray(np.asarray(
-            normalize_weights(fedavg_weights(counts))[None], np.float32))
+        w = np.zeros(len(sel), np.float32)
+        if rep.any():
+            w[rep] = normalize_weights(
+                fedavg_weights([c for c, m in zip(counts, rep) if m]))
+        w_row = jnp.asarray(w[None])
+        w_late = None
+        if self.aggregation == "staleness" and faults is not None:
+            late = np.asarray([faults.late_of(int(c)) for c in sel], bool)
+            if late.any():
+                tot = max(int(np.sum(np.asarray(counts)[rep]))
+                          + int(np.sum(np.asarray(counts)[late])), 1)
+                wl = np.zeros(len(sel), np.float32)
+                wl[late] = np.asarray(counts, np.float32)[late] / tot
+                w_late = jnp.asarray(wl[None])
 
         ctx = None
         if method in ("fedprox", "moon"):
@@ -280,48 +352,88 @@ class FlatTrainer:
             ctx = {"local_params": _rows_or_default(rows, local_g,
                                                     self._seen[sel_arr])}
         if method == "scaffold":
-            steps = np.asarray([fl.local_epochs * cl.data.steps_per_epoch
-                                for cl in sel_clients], np.float64)
+            steps = np.asarray(budgets, np.float64) if faults is not None \
+                else np.asarray([fl.local_epochs * cl.data.steps_per_epoch
+                                 for cl in sel_clients], np.float64)
+            # clamp: a 0-step budget would make scale inf and the zero
+            # (x - y) delta NaN under inf*0
+            scale = 1.0 / (np.maximum(steps, 1) * self.lr)
             ctx = {"c_local": tree_gather(self._c_local_stack, sel_arr),
                    "c_global": self.c_global,
-                   "scale": jnp.asarray(1.0 / (steps * self.lr),
-                                        jnp.float32)}
+                   "scale": jnp.asarray(scale, jnp.float32)}
 
         out = self._round_engine(
             server, edge_idx, batches, valid, rngs, w_row, ctx=ctx,
             opt_states=(tree_gather(self._opt_stack, sel_arr)
                         if self.persistent_opt else None),
+            w_late=w_late,
             masked=padded, per_client_opt=self.persistent_opt)
         # NO host sync here: the (C,) loss array stays a device future
         # until _finish_round — under the pipelined run() the next
         # round's host data prep + H2D overlap this round's compute
         losses = out["losses"]
-        agg = jax.tree.map(lambda leaf: leaf[0], out["agg"])
+        if rep.any():
+            agg = jax.tree.map(lambda leaf: leaf[0], out["agg"])
+        else:
+            # a zero w_row makes the einsum a zero tree: keep params
+            agg = _split_shared(params, cfg)[0] \
+                if method == "feddiffuse" else params
+        if self.aggregation == "staleness":
+            buf, self._late_buf = self._late_buf, None
+            if buf is not None:         # merge last round's stragglers
+                agg = apply_late(agg, buf, self.fault.staleness
+                                 if self.fault else 0.0)
+            if w_late is not None:
+                self._late_buf = jax.tree.map(lambda leaf: leaf[0],
+                                              out["late"])
+        comp_rel = np.flatnonzero(comp)
 
-        if self.persistent_opt:
-            self._opt_stack = tree_scatter(self._opt_stack, sel_arr,
-                                           out["opt"])
-        if method == "moon":
-            self._prev_stack = tree_scatter(self._prev_stack, sel_arr,
-                                            out["trained"])
-            self._seen[sel_arr] = True
+        if self.persistent_opt and len(comp_rel):
+            if faults is None:
+                self._opt_stack = tree_scatter(self._opt_stack, sel_arr,
+                                               out["opt"])
+            else:   # only COMPLETED clients keep their updated moments
+                self._opt_stack = tree_scatter(
+                    self._opt_stack, sel_arr[comp_rel],
+                    tree_gather(out["opt"], comp_rel))
+        if method == "moon" and len(comp_rel):
+            self._prev_stack = tree_scatter(
+                self._prev_stack, sel_arr[comp_rel],
+                tree_gather(out["trained"], comp_rel))
+            self._seen[sel_arr[comp_rel]] = True
         if method == "feddiffuse":
             shared_g, local_g = _split_shared(params, cfg)
-            trained_local = {k: out["trained"][k] for k in local_g}
-            self._local_stack = tree_scatter(self._local_stack, sel_arr,
-                                             trained_local)
-            self._seen[sel_arr] = True
+            if len(comp_rel):
+                trained_local = {k: out["trained"][k] for k in local_g}
+                self._local_stack = tree_scatter(
+                    self._local_stack, sel_arr[comp_rel],
+                    tree_gather(trained_local, comp_rel))
+                self._seen[sel_arr[comp_rel]] = True
             # only the shared half of the fused aggregate is used; the
             # server keeps its own local subtree (never communicated)
             self.params = _merge({k: agg[k] for k in shared_g}, local_g)
         else:
             self.params = agg
         if method == "scaffold":
-            self._c_local_stack = tree_scatter(self._c_local_stack, sel_arr,
-                                               out["c_new"])
-            frac = len(sel) / len(self.clients)
-            self.c_global = jax.tree.map(lambda c, d: c + frac * d,
-                                         self.c_global, out["dc_mean"])
+            if faults is None:
+                self._c_local_stack = tree_scatter(
+                    self._c_local_stack, sel_arr, out["c_new"])
+                frac = len(sel) / len(self.clients)
+                self.c_global = jax.tree.map(lambda c, d: c + frac * d,
+                                             self.c_global, out["dc_mean"])
+            elif len(comp_rel):
+                # the engine's dc_mean averages every lane uniformly —
+                # under faults recompute it over completed lanes only
+                self._c_local_stack = tree_scatter(
+                    self._c_local_stack, sel_arr[comp_rel],
+                    tree_gather(out["c_new"], comp_rel))
+                dc = jax.tree.map(lambda a, b: a - b, out["c_new"],
+                                  ctx["c_local"])
+                w_dc = comp.astype(np.float64) / len(comp_rel)
+                mean_dc = weighted_average_stacked(dc, w_dc)
+                frac = len(comp_rel) / len(self.clients)
+                self.c_global = jax.tree.map(lambda c, d: c + frac * d,
+                                             self.c_global, mean_dc)
         return losses
 
     # -- one round -----------------------------------------------------------
@@ -341,8 +453,19 @@ class FlatTrainer:
         executing.
         """
         fl, method = self.fl, self.method
-        C = max(1, round(fl.participation * len(self.clients)))
-        sel = self.np_rng.choice(len(self.clients), size=C, replace=False)
+        if self._faults is not None:
+            # churn first (its own RNG stream), then sample participants
+            # from the online pool only — with churn=0 the np_rng
+            # consumption is identical to the fault-free path
+            online = self._faults.begin_round()
+            pool = np.flatnonzero(online)
+            C = min(max(1, round(fl.participation * len(self.clients))),
+                    len(pool))
+            sel = pool[self.np_rng.choice(len(pool), size=C, replace=False)]
+        else:
+            C = max(1, round(fl.participation * len(self.clients)))
+            sel = self.np_rng.choice(len(self.clients), size=C,
+                                     replace=False)
         # identical RNG folding on both paths: one split per selected
         # client, in selection order
         subs = []
@@ -350,10 +473,17 @@ class FlatTrainer:
             self.rng, sub = jax.random.split(self.rng)
             subs.append(sub)
 
+        faults = None
+        if self._faults is not None:
+            steps = [fl.local_epochs * self.clients[int(c)].data.steps_per_epoch
+                     for c in sel]
+            faults = self._faults.draw_round(
+                sel, steps, self.aggregation == "staleness")
+
         if self._use_vectorized([self.clients[int(c)] for c in sel]):
-            losses = self._round_vectorized(sel, subs)   # device future
+            losses = self._round_vectorized(sel, subs, faults)  # dev future
         else:
-            losses = self._round_sequential(sel, subs)   # host floats
+            losses = self._round_sequential(sel, subs, faults)  # host floats
 
         if method == "feddiffuse":
             vol = self.mbytes * shared_fraction(self.params, self.cfg)
@@ -361,15 +491,26 @@ class FlatTrainer:
             vol = self.mbytes * 2  # model + control variate
         else:
             vol = self.mbytes
+        if faults is None:
+            comm_gb = self.comm.flat_fl_round(vol, len(sel)) / 1e9
+        else:
+            # downloads to every arrived client, uploads only from the
+            # clients that finished (dropped clients = zero uplink)
+            n_arr = int(np.sum(faults.arrived))
+            n_comp = int(np.sum(faults.completed))
+            comm_gb = (n_arr + n_comp) * self.comm.edge_cloud(vol) / 1e9
         # snapshot end-of-round state the record needs: the params the
         # eval hook sees must not leak mutations from a round
         # dispatched before this one is finalized
         return {
             "round": r, "losses": losses, "sel_ids": sel,
-            "comm_gb": self.comm.flat_fl_round(vol, len(sel)) / 1e9,
+            "comm_gb": comm_gb,
             "params_m": sum(x.size
                             for x in jax.tree.leaves(self.params)) / 1e6,
             "params": self.params, "cfg": self.cfg,
+            "loss_mask": ([faults.budget_of(int(c)) > 0 for c in sel]
+                          if faults else None),
+            "availability": faults.availability() if faults else None,
         }
 
     def _finish_round(self, pend: Dict) -> RoundRecord:
@@ -378,12 +519,16 @@ class FlatTrainer:
         if not isinstance(losses, list):          # device future -> host
             losses = [float(x) for x in np.asarray(losses)]
         r = pend["round"]
+        mask = pend.get("loss_mask")
+        if mask is not None:        # faults: average over executed clients
+            losses = [l for l, m in zip(losses, mask) if m]
         rec = RoundRecord(
             round=r,
-            loss=float(np.mean(losses)),
+            loss=float(np.mean(losses)) if losses else 0.0,
             comm_gb=pend["comm_gb"],
             params_m=pend["params_m"],
             selected=[int(c) for c in pend["sel_ids"]],
+            availability=pend.get("availability"),
         )
         # append BEFORE the eval hook: the round executed (trainer state
         # and RNG streams advanced), so a raising eval_fn must lose the
@@ -445,6 +590,7 @@ class FlatTrainer:
             "prev_stack": self._prev_stack,
             "local_stack": self._local_stack,
             "seen": self._seen,
+            "late_buf": self._late_buf,
         }
         meta = {
             "trainer": "flat",
@@ -452,6 +598,7 @@ class FlatTrainer:
             "np_rng": self.np_rng.bit_generator.state,
             "client_rngs": [cl.data.rng_state() for cl in self.clients],
             "history": [rec.to_dict() for rec in self.history],
+            "fault": self._faults.state() if self._faults else None,
         }
         return arrays, meta
 
@@ -470,11 +617,14 @@ class FlatTrainer:
         self._prev_stack = to_dev(arrays["prev_stack"])
         self._local_stack = to_dev(arrays["local_stack"])
         self._seen = np.asarray(arrays["seen"], bool).copy()
+        self._late_buf = to_dev(arrays.get("late_buf"))
         if self.persistent_opt:
             self._opt_stack = adam_from_tree(arrays["opt_stack"])
         self.np_rng.bit_generator.state = meta["np_rng"]
         for cl, st in zip(self.clients, meta["client_rngs"]):
             cl.data.set_rng_state(st)
+        if self._faults is not None and meta.get("fault"):
+            self._faults.set_state(meta["fault"])
         self.history = [RoundRecord.from_dict(d) for d in meta["history"]]
 
 

@@ -143,16 +143,29 @@ class Client:
 
 
 def run_local(step_fn, params, client: Client, *, epochs: int, rng,
-              ctx: Optional[Dict[str, Any]] = None, opt_state=None):
-    """Run E local epochs (Alg. 2).  Returns (params, opt_state, mean loss)."""
+              ctx: Optional[Dict[str, Any]] = None, opt_state=None,
+              max_steps: Optional[int] = None):
+    """Run E local epochs (Alg. 2).  Returns (params, opt_state, mean loss).
+
+    ``max_steps`` caps the number of executed steps (fault injection:
+    straggler budgets / mid-round dropout).  The epoch generators are
+    still drained past the cap so the shuffle RNG advances exactly as
+    in an untruncated round — keeping the sequential path in lockstep
+    with the vectorized engine, whose ``stacked_epochs`` stacking
+    always consumes whole epochs and truncates via the valid mask.
+    """
     if opt_state is None:
         opt_state = adam_init(params)
     ctx = ctx or {}
     losses = []
+    executed = 0
     for _ in range(epochs):
         for batch in client.data.epoch():
+            if max_steps is not None and executed >= max_steps:
+                continue                  # drain: shuffle RNG must advance
             rng, sub = jax.random.split(rng)
             jb = {k: jnp.asarray(v) for k, v in batch.items()}
             params, opt_state, loss = step_fn(params, opt_state, jb, sub, ctx)
             losses.append(float(loss))
+            executed += 1
     return params, opt_state, float(np.mean(losses)) if losses else 0.0

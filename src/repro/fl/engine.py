@@ -194,8 +194,8 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
     engines are never memoized.
 
     Returns ``engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
-    ctx=None, opt_states=None, masked=True, per_client_opt=False)``
-    where
+    ctx=None, opt_states=None, w_late=None, masked=True,
+    per_client_opt=False)`` where
 
       edge_params: pytree, leaves (E, ...) — one model per edge server
                    (flat baselines: E = 1, the cloud model)
@@ -206,11 +206,14 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
       w_mat:       (E, C) fp32 — normalized per-edge aggregation rows
       ctx:         method ctx pytree, stacked per CTX_AXES[method]
       opt_states:  stacked per-client Adam rows (with per_client_opt)
+      w_late:      optional (E, C) fp32 — staleness-aggregation rows
+                   over LATE clients' deltas (unnormalized shares)
 
     and the result is a dict:
 
       "agg":    pytree of edge-aggregated models, leading (E,) axis
       "losses": (C,) per-client mean local loss
+      "late":   per-edge weighted late-delta sums (iff w_late given)
       "opt":    updated stacked Adam rows        (iff per_client_opt)
       "trained": (C, ...) per-client trained params   (moon/feddiffuse,
                  which persist per-client state between rounds)
@@ -248,7 +251,7 @@ def _build_round_engine(cfg: ModelConfig, fl: FLConfig, *, method: str,
     @partial(jax.jit, static_argnames=("masked", "per_client_opt"),
              donate_argnums=(0,), donate_argnames=("opt_states",))
     def engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
-               ctx=None, opt_states=None, masked: bool = True,
+               ctx=None, opt_states=None, w_late=None, masked: bool = True,
                per_client_opt: bool = False):
         ctx = {} if ctx is None else ctx
         start = jax.tree.map(lambda leaf: leaf[edge_idx], edge_params)
@@ -269,6 +272,15 @@ def _build_round_engine(cfg: ModelConfig, fl: FLConfig, *, method: str,
         out = {"agg": jax.tree.map(lambda leaf: combine_leaf(leaf, w_mat),
                                    trained),
                "losses": losses}
+        if w_late is not None:
+            # staleness aggregation: fused (E, C) einsum over the late
+            # clients' deltas (their w_mat entries are zero, so they are
+            # excluded from "agg"; the buffered delta sum merges into
+            # the NEXT aggregate as base + gamma * late)
+            delta = jax.tree.map(lambda t, s: t.astype(jnp.float32)
+                                 - s.astype(jnp.float32), trained, start)
+            out["late"] = jax.tree.map(lambda d: combine_leaf(d, w_late),
+                                       delta)
         if per_client_opt:
             out["opt"] = opt_out
         if return_trained:
@@ -306,13 +318,19 @@ def uniform_batch_shape(clients) -> Optional[tuple]:
 
 
 def route_engine(engine: str, strict: bool, round_clients, warned: bool,
-                 trainer: str) -> Tuple[bool, bool]:
+                 trainer: str, method: str = "") -> Tuple[bool, bool]:
     """Shared auto/strict engine routing for one round.
 
     Returns ``(use_vectorized, warned)``.  Ragged clients fall back to
     the sequential path; a strict (explicitly requested) "vectorized"
     raises instead, and the fallback warns exactly once per trainer —
     FedPhD and FlatTrainer must not diverge on this contract.
+
+    The warning text embeds ``(method, engine)``: Python's warnings
+    registry dedupes on the message, so without them a second trainer
+    hitting the same fallback in one process (e.g. two different flat
+    baselines) would be silently suppressed even though its own
+    ``warned`` flag was fresh.
     """
     if engine == "sequential":
         return False, warned
@@ -323,8 +341,9 @@ def route_engine(engine: str, strict: bool, round_clients, warned: bool,
                              "batch shape; use engine='auto' or "
                              "'sequential' for ragged clients")
         if not warned:
-            warnings.warn(f"ragged client batch shapes: {trainer} falling "
-                          "back to the sequential round engine",
+            warnings.warn(f"ragged client batch shapes: {trainer} "
+                          f"(method={method or trainer}, engine={engine}) "
+                          "falling back to the sequential round engine",
                           RuntimeWarning)
             warned = True
     return uniform, warned

@@ -34,6 +34,11 @@ class RoundRecord:
     eval: Any = None
     edge_sh: Optional[List[float]] = None
     pruned: bool = False
+    # realized per-round availability under an active FaultSpec (None
+    # when faults are disabled): {"online": int, "arrived"/"dropped"/
+    # "late": [cids], "budgets": [steps per selected client]} — see
+    # repro.fl.faults.RoundFaults.availability
+    availability: Optional[dict] = None
 
     # -- dict-style compatibility (legacy flat histories were dicts) --------
     def __getitem__(self, key: str):

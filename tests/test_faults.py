@@ -1,0 +1,417 @@
+"""Fault-injection layer: seeded availability/dropout/straggler/churn
+schedules, engine equivalence under faults, staleness-aware
+aggregation, checkpointed fault-RNG streams, and the sweep executor's
+retry/timeout quarantine.
+
+The acceptance contract this file locks:
+
+  (a) sequential vs vectorized under nonzero dropout + stragglers +
+      churn agree (params atol 1e-5, ``comm_gb`` bitwise, identical
+      realized availability), and dropped clients contribute zero
+      uplink;
+  (b) a disabled ``fault.*`` block reproduces today's trajectories
+      bitwise (fault=None and the all-default FaultSpec are the same
+      code path);
+  (c) ``aggregation="staleness"`` with zero stragglers IS FedAvg;
+  (d) a sweep run that raises mid-round is retried with backoff and
+      then quarantined ``status="failed"`` while the rest of the grid
+      completes, and the report marks the failure.
+
+Everything trains on an 8x8 micro U-Net (registered here) except the
+process-pool timeout test, which must use a built-in config — spawned
+workers re-import repro and never see this module's registrations.
+"""
+import dataclasses
+import os
+import warnings
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_UNET, get_config, register_config
+from repro.configs.base import FLConfig
+from repro.data.synthetic import DatasetSpec
+from repro.experiment import (DataSpec, ExperimentSpec, FaultModel,
+                              FaultSpec, SweepSpec, build_report,
+                              make_clients, make_trainer, register_dataset,
+                              register_method, report_markdown, run_spec,
+                              run_sweep, spec_with)
+from repro.fl.baselines import FlatTrainer
+from repro.fl.engine import route_engine
+
+TINY = "ddpm-unet-tiny-faults"
+register_config(TINY, SMOKE_UNET.replace(name=TINY, image_size=8,
+                                         base_channels=8, channel_mults=(1,),
+                                         num_res_blocks=1,
+                                         attn_resolutions=()),
+                overwrite=True)
+register_dataset("tiny-faults",
+                 DatasetSpec("tiny-faults", num_classes=4, image_size=8,
+                             samples_per_class=32),
+                 overwrite=True)
+
+DATA = DataSpec(dataset="tiny-faults", batch_size=8)
+# local_epochs=3 so the deadline/slowdown math yields a non-degenerate
+# budget spread (slow clients cap at floor(steps/2), dropped clients at
+# a uniform prefix) instead of flooring everything to zero
+FL = FLConfig(num_clients=6, num_edges=2, local_epochs=3, edge_agg_every=1,
+              cloud_agg_every=2, rounds=2, sparse_rounds=1, prune_ratio=0.44,
+              sh_a=1000.0)
+
+# every fault class active at once: partial arrival, mid-round dropout,
+# half the population 2x slow, population churn
+MIXED = FaultSpec(arrival=0.7, dropout=0.3, straggler_frac=0.5, slowdown=2.0,
+                  deadline=1.0, churn=0.2, seed=3)
+
+
+def _spec(method, engine, fault, fl=FL, prune=None, model=TINY):
+    if prune is None:
+        prune = method.startswith("fedphd")
+    return ExperimentSpec(name="faults", method=method, model=model,
+                          fl=fl, data=DATA, engine=engine, prune=prune,
+                          fault=fault)
+
+
+def _run(method, engine, fault, rounds=2, **kw):
+    spec = _spec(method, engine, fault, **kw)
+    clients, _, _ = make_clients(spec)        # fresh per trainer: the
+    tr = make_trainer(spec, get_config(spec.model), clients)   # data RNG
+    tr.run(rounds)                            # streams mutate in-place
+    return tr
+
+
+def _maxdiff(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec: the declarative layer.
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_roundtrip_and_sweep_axis():
+    f = FaultSpec(arrival=0.9, dropout=0.1, churn=0.05, seed=7)
+    assert FaultSpec.from_dict(f.to_dict()) == f
+    base = _spec("fedavg", "sequential", FaultSpec())
+    assert ExperimentSpec.from_json(base.to_json()) == base
+    # fault.* is a sweepable path like fl.* / data.*
+    s = spec_with(base, {"fault.dropout": 0.5, "fault.seed": 2})
+    assert s.fault.dropout == 0.5 and s.fault.seed == 2
+    runs = SweepSpec(name="fx", base=base,
+                     axes={"fault.dropout": [0.0, 0.5]}).expand()
+    assert [r.run_id for r in runs] == ["fault.dropout=0.0",
+                                        "fault.dropout=0.5"]
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="arrival"):
+        FaultSpec(arrival=1.5)
+    with pytest.raises(ValueError, match="slowdown"):
+        FaultSpec(slowdown=0.5)
+    with pytest.raises(ValueError, match="deadline"):
+        FaultSpec(deadline=0.0)
+    assert not FaultSpec().enabled
+    assert not FaultSpec(straggler_frac=0.5, slowdown=1.0).enabled
+    assert FaultSpec(dropout=0.1).enabled
+
+
+# ---------------------------------------------------------------------------
+# FaultModel: one seeded stream, engine/mode/resume-independent.
+# ---------------------------------------------------------------------------
+
+def _draw(model, rounds=3, n=8, steps=6):
+    out = []
+    for _ in range(rounds):
+        online = model.begin_round()
+        sel = np.flatnonzero(online)
+        rf = model.draw_round(sel, [steps] * len(sel), staleness_mode=True)
+        out.append((online.tolist(), rf.availability()))
+    return out
+
+
+def test_fault_model_deterministic_and_seed_sensitive():
+    spec = MIXED
+    a = _draw(FaultModel(spec, 8, base_seed=0))
+    b = _draw(FaultModel(spec, 8, base_seed=0))
+    assert a == b                              # bitwise-identical schedule
+    c = _draw(FaultModel(spec.replace(seed=4), 8, base_seed=0))
+    assert a != c                              # fault.seed is a real axis
+    d = _draw(FaultModel(spec, 8, base_seed=1))
+    assert a != d                              # experiment seed folds in
+
+
+def test_fault_model_state_resumes_stream_mid_run():
+    unbroken = FaultModel(MIXED, 8, base_seed=0)
+    full = _draw(unbroken, rounds=4)
+
+    first = FaultModel(MIXED, 8, base_seed=0)
+    head = _draw(first, rounds=2)
+    snap = first.state()                       # JSON-serializable
+    resumed = FaultModel(MIXED, 8, base_seed=0)
+    resumed.set_state(snap)
+    tail = _draw(resumed, rounds=2)
+    assert head + tail == full
+
+
+# ---------------------------------------------------------------------------
+# (a) engine equivalence under mixed faults.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fedphd", "fedavg"])
+def test_seq_vs_vec_under_mixed_faults(method):
+    seq = _run(method, "sequential", MIXED)
+    vec = _run(method, "vectorized", MIXED)
+    assert _maxdiff(seq.params, vec.params) < 1e-5
+    for a, b in zip(seq.history, vec.history):
+        assert a.comm_gb == b.comm_gb          # bitwise
+        assert a.selected == b.selected
+        assert a.availability == b.availability
+        assert a.availability is not None
+        assert b.loss == pytest.approx(a.loss, abs=1e-5)
+    # the schedule actually fired: some client missed/dropped/was capped
+    av = [h.availability for h in seq.history]
+    assert any(len(a["arrived"]) < len(h.selected)
+               or a["dropped"] or min(a["budgets"], default=0) == 0
+               or len(set(a["budgets"])) > 1
+               for a, h in zip(av, seq.history))
+
+
+def test_dropped_clients_zero_uplink():
+    """Flat-topology comm accounting under faults: every arrived client
+    downloads, only completed clients upload.  With dropout=1.0 every
+    arrival crashes, so the round costs exactly HALF the fault-free
+    round (downloads only) — dropped clients contribute zero uplink."""
+    free = _run("fedavg", "sequential", None, rounds=1)
+    drop = _run("fedavg", "sequential",
+                FaultSpec(dropout=1.0, seed=5), rounds=1)
+    av = drop.history[0].availability
+    assert av["arrived"] and av["arrived"] == av["dropped"]
+    assert drop.history[0].comm_gb == free.history[0].comm_gb / 2
+
+
+# ---------------------------------------------------------------------------
+# (b) disabled faults are bitwise-invisible.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fedphd", "fedavg"])
+def test_disabled_fault_spec_is_bitwise_noop(method):
+    plain = _run(method, "sequential", None)
+    noop = _run(method, "sequential", FaultSpec())   # all-default spec
+    assert _maxdiff(plain.params, noop.params) == 0.0
+    for a, b in zip(plain.history, noop.history):
+        assert b.availability is None
+        assert (a.loss, a.comm_gb, a.selected) \
+            == (b.loss, b.comm_gb, b.selected)
+
+
+# ---------------------------------------------------------------------------
+# (c)+(d of the tentpole) staleness-aware aggregation.
+# ---------------------------------------------------------------------------
+
+def test_staleness_without_stragglers_is_fedavg():
+    f = FaultSpec(arrival=0.8, dropout=0.3, seed=1)   # no deadline misses
+    a = _run("fedavg", "sequential", f)
+    b = _run("fedavg-stale", "sequential", f)
+    assert _maxdiff(a.params, b.params) == 0.0
+    assert [h.loss for h in a.history] == [h.loss for h in b.history]
+
+
+def test_staleness_seq_vs_vec_with_late_clients():
+    f = FaultSpec(straggler_frac=0.5, slowdown=2.0, deadline=0.9, seed=2)
+    seq = _run("fedavg-stale", "sequential", f)
+    vec = _run("fedavg-stale", "vectorized", f)
+    assert _maxdiff(seq.params, vec.params) < 1e-5
+    lates = [h.availability["late"] for h in seq.history]
+    assert any(lates), "spec produced no late clients"
+    for a, b in zip(seq.history, vec.history):
+        assert a.availability == b.availability
+    # and the late path changes the model vs plain truncating fedavg
+    plain = _run("fedavg", "sequential", f)
+    assert _maxdiff(seq.params, plain.params) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume: the fault RNG stream checkpoints.
+# ---------------------------------------------------------------------------
+
+def test_kill_resume_restores_fault_stream(tmp_path):
+    spec = _spec("fedavg", "sequential", MIXED).replace(
+        fl=dataclasses.replace(FL, rounds=3))
+    full = run_spec(spec, ckpt=str(tmp_path / "a.npz"))
+
+    ckpt = str(tmp_path / "b.npz")
+    run_spec(spec, rounds=2, ckpt=ckpt)              # "killed" after r2
+    resumed = run_spec(None, resume=True, rounds=3, ckpt=ckpt)
+
+    assert _maxdiff(full.params, resumed.params) == 0.0
+    assert [h.availability for h in full.history] \
+        == [h.availability for h in resumed.history]
+    assert [h.loss for h in full.history] \
+        == [h.loss for h in resumed.history]
+    assert all(h.availability is not None for h in full.history)
+
+
+# ---------------------------------------------------------------------------
+# (d) sweep executor: retry with backoff, then quarantine.
+# ---------------------------------------------------------------------------
+
+SWEEP_BASE = ExperimentSpec(
+    name="fault-sweep", method="fedavg", model=TINY,
+    fl=dataclasses.replace(FL, num_clients=4, num_edges=1, local_epochs=1,
+                           rounds=2),
+    data=DATA, engine="sequential", prune=False,
+    fault=FaultSpec(dropout=0.5, seed=1))
+
+_FLAKY = {"marker": None}
+
+
+class _CrashingTrainer(FlatTrainer):
+    """Raises entering round 2 — every attempt (they resume from the
+    round-1 checkpoint) hits the same mid-round crash."""
+
+    def run_round(self, r):
+        if r >= 2:
+            raise RuntimeError("boom: injected mid-round crash")
+        return super().run_round(r)
+
+
+class _FlakyTrainer(FlatTrainer):
+    """Crashes entering round 2 exactly once (drops a marker file), so
+    the first retry resumes the checkpoint and completes."""
+
+    def run_round(self, r):
+        m = _FLAKY["marker"]
+        if r >= 2 and m and not os.path.exists(m):
+            open(m, "w").close()
+            raise RuntimeError("flaky: transient crash")
+        return super().run_round(r)
+
+
+def _wrapped_factory(cls):
+    def make(spec, cfg, clients, eval_fn):
+        return cls("fedavg", cfg, spec.fl, clients, lr=spec.lr,
+                   rng_seed=spec.seed, engine=spec.engine,
+                   eval_fn=eval_fn, eval_every=spec.eval_every,
+                   fault=spec.fault)
+    return make
+
+
+register_method("crash-always", "flat", _wrapped_factory(_CrashingTrainer),
+                overwrite=True)
+register_method("crash-once", "flat", _wrapped_factory(_FlakyTrainer),
+                overwrite=True)
+
+
+def test_sweep_retries_then_quarantines_and_reports(tmp_path):
+    sweep = SweepSpec(name="q", base=SWEEP_BASE,
+                      axes={"method": ["crash-always", "fedavg"]})
+    res = run_sweep(sweep, str(tmp_path / "q"), max_retries=2,
+                    backoff_s=0.01)
+    bad = res.manifest["runs"]["method=crash-always"]
+    good = res.manifest["runs"]["method=fedavg"]
+    assert bad["status"] == "failed"
+    assert bad["attempts"] == 3                  # 1 try + 2 retries
+    assert "RuntimeError" in bad["error"] and "boom" in bad["error"]
+    assert "Traceback" in bad["error"]           # full traceback kept
+    # the rest of the grid completed despite the quarantined run
+    assert good["status"] == "done" and good["rounds_done"] == 2
+    assert good["history"][-1]["availability"] is not None
+
+    rep = build_report(res.manifest)
+    assert rep["failed"] == 1 and rep["done"] == 1 and not rep["complete"]
+    md = report_markdown(rep)
+    assert "1 FAILED" in md.splitlines()[0]
+    assert "| failed |" in md or "| failed " in md
+    row = next(l for l in md.splitlines() if "crash-always" in l)
+    assert "| 1 |" in row                        # failure column counts it
+
+    # raise_on_error surfaces the quarantined run's exception
+    with pytest.raises(RuntimeError, match="boom"):
+        run_sweep(sweep.replace(name="q2"), str(tmp_path / "q2"),
+                  max_retries=0, backoff_s=0.01, raise_on_error=True)
+
+
+def test_sweep_transient_crash_retried_and_resumed(tmp_path):
+    """A transient mid-round crash on a FAULTED run: the retry resumes
+    the round-1 checkpoint (including the fault RNG stream) and the
+    finished history matches an unbroken run bitwise."""
+    _FLAKY["marker"] = str(tmp_path / "crashed.marker")
+    try:
+        sweep = SweepSpec(name="t", base=SWEEP_BASE.replace(
+            method="crash-once", name="flaky"))
+        res = run_sweep(sweep, str(tmp_path / "t"), max_retries=1,
+                        backoff_s=0.01)
+        (entry,) = res.manifest["runs"].values()
+        assert entry["status"] == "done"
+        assert entry["attempts"] == 2
+        assert entry["rounds_done"] == 2
+        assert os.path.exists(_FLAKY["marker"])
+    finally:
+        _FLAKY["marker"] = None
+    # unbroken reference: same spec, marker disarmed -> no crash
+    ref = run_spec(SWEEP_BASE.replace(method="crash-once", name="flaky"))
+    assert [r["availability"] for r in entry["history"]] \
+        == [h.availability for h in ref.history]
+    assert [r["loss"] for r in entry["history"]] \
+        == [h.loss for h in ref.history]
+
+
+def test_timeout_requires_process_executor(tmp_path):
+    sweep = SweepSpec(name="x", base=SWEEP_BASE)
+    with pytest.raises(ValueError, match="timeout_s"):
+        run_sweep(sweep, str(tmp_path / "x"), timeout_s=1.0)
+
+
+def test_process_timeout_kills_and_quarantines(tmp_path):
+    """A hung run on the process executor is killed at the wall-clock
+    deadline and quarantined.  Built-in model/dataset only: the spawned
+    worker never sees this module's registrations — and the deadline is
+    far shorter than the worker's startup, a deterministic 'hang'."""
+    base = ExperimentSpec(
+        name="hang", method="fedavg", model="ddpm-unet-smoke",
+        fl=FLConfig(num_clients=2, num_edges=1, local_epochs=1,
+                    edge_agg_every=1, cloud_agg_every=2, rounds=1,
+                    sparse_rounds=2, sh_a=1000.0),
+        data=DataSpec(dataset="smoke", batch_size=32),
+        engine="sequential", prune=False)
+    sweep = SweepSpec(name="hang", base=base, axes={"seed": [0]})
+    res = run_sweep(sweep, str(tmp_path / "h"), executor="process",
+                    max_workers=1, timeout_s=0.5, max_retries=1,
+                    backoff_s=0.01)
+    (entry,) = res.manifest["runs"].values()
+    assert entry["status"] == "failed"
+    assert entry["attempts"] == 2
+    assert "TimeoutError" in entry["error"]
+    assert "timeout_s=0.5" in entry["error"]
+
+
+# ---------------------------------------------------------------------------
+# route_engine fallback warning keys on (method, engine).
+# ---------------------------------------------------------------------------
+
+def _ragged_clients(batch_sizes):
+    return [SimpleNamespace(data=SimpleNamespace(
+        batch_size=b, images=np.zeros((b, 8, 8, 1)))) for b in batch_sizes]
+
+
+def test_route_engine_warning_keyed_by_method_and_engine():
+    ragged = _ragged_clients([8, 4])
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("default")       # registry dedup semantics
+        use, warned = route_engine("auto", False, ragged, False,
+                                   "FlatTrainer", method="fedavg")
+        assert not use and warned
+        _, warned2 = route_engine("auto", False, ragged, False,
+                                  "FlatTrainer", method="fedprox")
+        assert warned2
+    msgs = [str(w.message) for w in caught]
+    # two different methods in one process must BOTH warn: the message
+    # text keys the warnings registry, so it must embed (method, engine)
+    assert len(msgs) == 2
+    assert "method=fedavg" in msgs[0] and "engine=auto" in msgs[0]
+    assert "method=fedprox" in msgs[1]
+    assert msgs[0] != msgs[1]

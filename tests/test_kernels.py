@@ -27,9 +27,12 @@ def test_block_masked_matmul(M, K, N, dtype, ratio, rng):
     rm = (jax.random.uniform(ks[3], (K,)) >= ratio / 2).astype(jnp.float32)
     got = block_masked_matmul(x, w, cm, rm, interpret=True)
     want = block_masked_matmul_ref(x, w, cm, rm)
-    atol = 1e-4 if dtype == jnp.float32 else 0.15
+    # bf16 needs an rtol term: accumulation-order rounding over large K
+    # scales with |value| and can clear any fixed atol on outliers
+    atol, rtol = (1e-4, 0.0) if dtype == jnp.float32 else (0.15, 1e-2)
     np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32), atol=atol)
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=rtol)
 
 
 def test_block_masked_matmul_skips_whole_blocks(rng):
