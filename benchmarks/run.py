@@ -22,7 +22,7 @@ def main() -> None:
 
     from benchmarks import (baseline_engine_bench, fig1_divergence,
                             fig5_selection, kernels_bench, roofline_report,
-                            round_engine_bench, table1_quality,
+                            round_engine_bench, serve_bench, table1_quality,
                             table3_pruning, table4_efficiency,
                             table5_scalability)
 
@@ -33,6 +33,7 @@ def main() -> None:
         "kernels": kernels_bench,
         "round_engine": round_engine_bench,
         "baseline_engine": baseline_engine_bench,
+        "serve": serve_bench,
         "roofline": roofline_report,
         "fig1": fig1_divergence,        # FL training (slow) last
         "table1": table1_quality,

@@ -1,0 +1,122 @@
+"""Serving bench: continuous-batching sampler throughput/latency and the
+dense-vs-masked (44%-pruned) A/B per backend.
+
+Two scales:
+
+- **step A/B** runs on a tile-aligned single-level U-Net (1024-wide
+  ResBlock groups, 8x8 images, 2 slots -> every spatial GEMM is
+  128-aligned) where the static sparsity specialization genuinely
+  shrinks the compiled program — kept counts at ratio 0.44 round to 512
+  of 1024, so masked serving drops half of every 128-block grid.  The
+  smoke U-Net's 32-wide groups are too small for tile effects; paper
+  widths (base 128) are exactly where FedPhD claims the payoff.
+- **end-to-end throughput** serves 8 requests through the full
+  :class:`repro.serve.DiffusionServer` loop (refills included) on the
+  smoke U-Net, reporting req/s and p50/p99 per-step latency.
+
+Rows join the ``regression_gate.py`` flow via ``BENCH_serve.json``; the
+masked pallas row carries a ``speedup=<x>x`` tag so a regression that
+stops exploiting sparsity (e.g. masks silently device-committed) fails
+the gate.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import dump_bench_json, emit
+from repro.configs import SMOKE_UNET
+from repro.configs.base import ModelConfig
+from repro.models.unet import init_unet
+from repro.serve import DiffusionServer, Request, masks_for_ratio
+
+PRUNE_RATIO = 0.44
+
+# single-level 1024-wide U-Net: all spatial GEMMs 128-aligned with
+# 2 slots at 8x8 (M = 2*8*8 = 128), group width 1024 -> kept 512 at
+# ratio 0.44 (kept counts for >=1024-wide groups round to 128s)
+SERVE_BENCH_UNET = ModelConfig(
+    name="ddpm-unet-serve-bench",
+    arch_type="unet",
+    source="serve_bench tile-aligned A/B variant",
+    image_size=8,
+    in_channels=3,
+    base_channels=1024,
+    channel_mults=(1,),
+    num_res_blocks=1,
+    attn_resolutions=(8,),
+    num_classes=0,
+    dropout=0.0,
+    diffusion_steps=100,
+    dtype="float32",
+    param_dtype="float32",
+)
+
+
+def _steady_step_us(params, cfg, masks, *, slots: int, iters: int = 2
+                    ) -> float:
+    """Median per-tick latency with every slot occupied and no slot ever
+    finishing inside the timed window (num_steps >> iters)."""
+    srv = DiffusionServer(params, cfg, slots=slots,
+                          num_steps=cfg.diffusion_steps, eta=0.0,
+                          masks=masks)
+    for s in range(slots):
+        srv.submit(Request(rid=s, seed=s))
+    srv.step()                                   # compile + warm
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        srv.step()
+        times.append(time.perf_counter() - t0)
+    assert srv.compile_count() == 1
+    return float(np.median(times) * 1e6)
+
+
+def step_ab(backend: str) -> None:
+    cfg = SERVE_BENCH_UNET.replace(backend=backend)
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    masks = masks_for_ratio(params, cfg, PRUNE_RATIO)
+    slots = 2
+    dense_us = _steady_step_us(params, cfg, None, slots=slots)
+    masked_us = _steady_step_us(params, cfg, masks, slots=slots)
+    speedup = dense_us / masked_us
+    emit(f"serve/{backend}/dense_step", dense_us, f"slots={slots}")
+    emit(f"serve/{backend}/masked_step", masked_us,
+         f"slots={slots};ratio={PRUNE_RATIO};speedup={speedup:.2f}x")
+    if backend == "pallas":
+        # the acceptance bar: pruned serving must not be slower than
+        # dense on the kernel backend — if it is, the static
+        # specialization fell off the serve path
+        assert masked_us <= dense_us, \
+            f"masked serving slower than dense on pallas: " \
+            f"{masked_us:.0f}us > {dense_us:.0f}us"
+
+
+def end_to_end() -> None:
+    cfg = SMOKE_UNET.replace(backend="xla")
+    params = init_unet(jax.random.PRNGKey(0), cfg)
+    requests, slots, steps = 8, 4, 5
+    srv = DiffusionServer(params, cfg, slots=slots, num_steps=steps)
+    srv.run([Request(rid=-1, seed=0)])           # compile outside the clock
+    res = srv.run([Request(rid=r, seed=r) for r in range(requests)])
+    assert len(res.images) == requests and not res.faults
+    p50 = res.latency_percentile(50) * 1e3
+    p99 = res.latency_percentile(99) * 1e3
+    emit("serve/requests", res.seconds / requests * 1e6,
+         f"n={requests};slots={slots};steps={steps};"
+         f"req_s={res.requests_per_s:.2f};p50_ms={p50:.1f};p99_ms={p99:.1f}")
+
+
+def main() -> None:
+    for backend in ("xla", "pallas"):
+        step_ab(backend)
+    end_to_end()
+    dump_bench_json("serve")
+
+
+if __name__ == "__main__":
+    import benchmarks.common  # noqa: F401  (ROWS shared via import)
+    print("name,us_per_call,derived")
+    main()

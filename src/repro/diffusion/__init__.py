@@ -1,8 +1,8 @@
 from repro.diffusion.schedule import DiffusionSchedule, linear_schedule, cosine_schedule
 from repro.diffusion.ddpm import q_sample, ddpm_loss, ddpm_sample_step
-from repro.diffusion.ddim import ddim_sample, ddim_timesteps
+from repro.diffusion.ddim import ddim_sample, ddim_step, ddim_timesteps
 from repro.diffusion.sampling import sample_images
 
 __all__ = ["DiffusionSchedule", "linear_schedule", "cosine_schedule",
            "q_sample", "ddpm_loss", "ddpm_sample_step", "ddim_sample",
-           "ddim_timesteps", "sample_images"]
+           "ddim_step", "ddim_timesteps", "sample_images"]

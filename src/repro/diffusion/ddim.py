@@ -2,10 +2,16 @@
 
 The paper evaluates all methods with DDIM at 100 steps vs DDPM's 1000.
 eta=0 gives the deterministic sampler used in the paper's FID evaluation.
+
+The single-step update is exposed as :func:`ddim_step` with *per-sample*
+timesteps, so a continuous-batching server (``repro.serve``) can run one
+jitted program over a slot batch whose requests sit at different
+denoising depths; :func:`ddim_sample` is the whole-trajectory scan built
+on the same step.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,37 +20,104 @@ from repro.diffusion.schedule import DiffusionSchedule
 
 
 def ddim_timesteps(num_train_steps: int, num_sample_steps: int) -> jnp.ndarray:
-    """Evenly spaced sub-sequence of training timesteps, descending."""
-    stride = num_train_steps // num_sample_steps
-    return jnp.arange(num_sample_steps - 1, -1, -1) * stride
+    """Evenly spaced sub-sequence of training timesteps, descending.
+
+    When ``num_sample_steps`` divides ``num_train_steps`` this is the
+    classic DDIM sub-sequence ``(S-1)*stride, ..., stride, 0`` — the
+    paper's 1000/100 setting starts at t=990, and that output is kept
+    bit-for-bit.  For non-divisible counts the old integer stride
+    truncated the top of the trajectory (1000/600 started sampling at
+    t=599 — a severely under-noised prior for x_T ~ N(0, I)); those now
+    use even spacing over the full ``[0, T-1]`` range inclusive, so the
+    first sampled t is always the final training timestep.
+    """
+    if not 1 <= num_sample_steps <= num_train_steps:
+        raise ValueError(f"num_sample_steps={num_sample_steps} must be in "
+                         f"[1, num_train_steps={num_train_steps}]")
+    if num_sample_steps == 1:
+        # the single denoising step must start from the x_T prior's
+        # timestep (the stride formula would start at t=0)
+        return jnp.array([num_train_steps - 1], jnp.int32)
+    if num_train_steps % num_sample_steps == 0:
+        stride = num_train_steps // num_sample_steps
+        return (jnp.arange(num_sample_steps - 1, -1, -1) * stride) \
+            .astype(jnp.int32)
+    ts = jnp.linspace(num_train_steps - 1, 0.0, num_sample_steps)
+    return jnp.round(ts).astype(jnp.int32)
+
+
+def ddim_step(x, t, t_prev, eps, schedule: DiffusionSchedule, *,
+              eta: float = 0.0, z=None):
+    """One DDIM update x_t -> x_{t_prev} given the predicted noise.
+
+    ``t`` / ``t_prev``: scalar or per-sample ``(B,)`` int32 timesteps —
+    requests at different denoising depths coexist in one batch.
+    ``t_prev == -1`` marks the final step to x_0 (alpha_bar_prev = 1).
+    ``eta > 0`` adds the Eq. 9 stochastic term and requires ``z`` (noise
+    shaped like ``x``); ``eta == 0`` is the paper's deterministic path
+    and consumes no randomness.
+    """
+    t = jnp.asarray(t, jnp.int32)
+    t_prev = jnp.asarray(t_prev, jnp.int32)
+    bshape = (-1,) + (1,) * (x.ndim - 1)
+    abar_t = schedule.alpha_bars[t].reshape(bshape)
+    abar_prev = jnp.where(t_prev >= 0,
+                          schedule.alpha_bars[jnp.maximum(t_prev, 0)],
+                          1.0).reshape(bshape)
+    x0_pred = (x - jnp.sqrt(1.0 - abar_t) * eps) / jnp.sqrt(abar_t)
+    x0_pred = jnp.clip(x0_pred, -1.0, 1.0)
+    if eta == 0.0:
+        return (jnp.sqrt(abar_prev) * x0_pred
+                + jnp.sqrt(jnp.maximum(1.0 - abar_prev, 0.0)) * eps)
+    # Eq. 9 sigma (eta-scaled)
+    sigma = eta * jnp.sqrt((1.0 - abar_prev) / (1.0 - abar_t)) \
+        * jnp.sqrt(1.0 - abar_t / abar_prev)
+    if z is None:
+        raise ValueError("eta > 0 needs the stochastic term's noise z")
+    return (jnp.sqrt(abar_prev) * x0_pred
+            + jnp.sqrt(jnp.maximum(1.0 - abar_prev - sigma ** 2, 0.0)) * eps
+            + sigma * z)
 
 
 def ddim_sample(eps_fn: Callable, schedule: DiffusionSchedule, rng,
-                shape, *, num_steps: int = 100, eta: float = 0.0):
-    """Generate samples.  eps_fn(x_t, t:(B,)) -> predicted noise."""
+                shape, *, num_steps: int = 100, eta: float = 0.0,
+                x_init: Optional[jnp.ndarray] = None):
+    """Generate samples.  eps_fn(x_t, t:(B,)) -> predicted noise.
+
+    ``x_init`` supplies the x_T prior draw explicitly (the serving path
+    owns its per-request noise); when given with ``eta == 0`` the output
+    does not depend on ``rng`` at all — the deterministic sampler's
+    randomness lives entirely in the prior.  For ``eta > 0`` the
+    per-step z stream is drawn exactly as before this refactor
+    (split-then-draw each step), so stochastic trajectories are bitwise
+    unchanged.
+    """
     rng, rng_init = jax.random.split(rng)
-    x = jax.random.normal(rng_init, shape, jnp.float32)
+    if x_init is None:
+        x_init = jax.random.normal(rng_init, shape, jnp.float32)
     ts = ddim_timesteps(schedule.num_steps, num_steps)
+    ts_prev = jnp.concatenate([ts[1:], jnp.full((1,), -1, ts.dtype)])
+
+    if eta == 0.0:
+        # deterministic path: no per-step rng split/draw at all
+        def body(x, i):
+            t = jnp.full((shape[0],), ts[i], jnp.int32)
+            eps = eps_fn(x, t)
+            return ddim_step(x, t, ts_prev[i], eps, schedule, eta=0.0), None
+
+        x, _ = jax.lax.scan(body, x_init, jnp.arange(num_steps))
+        return x
 
     def body(carry, i):
         x, rng = carry
-        t = ts[i]
-        t_prev = jnp.where(i + 1 < num_steps, ts[jnp.minimum(i + 1, num_steps - 1)], -1)
-        abar_t = schedule.alpha_bars[t]
-        abar_prev = jnp.where(t_prev >= 0,
-                              schedule.alpha_bars[jnp.maximum(t_prev, 0)], 1.0)
-        eps = eps_fn(x, jnp.full((shape[0],), t, jnp.int32))
-        x0_pred = (x - jnp.sqrt(1.0 - abar_t) * eps) / jnp.sqrt(abar_t)
-        x0_pred = jnp.clip(x0_pred, -1.0, 1.0)
-        # Eq. 9 sigma (eta-scaled)
-        sigma = eta * jnp.sqrt((1.0 - abar_prev) / (1.0 - abar_t)) \
-            * jnp.sqrt(1.0 - abar_t / abar_prev)
+        t = jnp.full((shape[0],), ts[i], jnp.int32)
+        eps = eps_fn(x, t)
+        # compat draw order: one split + one draw per step, identical to
+        # the pre-refactor stream
         rng, rng_z = jax.random.split(rng)
         z = jax.random.normal(rng_z, shape, jnp.float32)
-        x_next = (jnp.sqrt(abar_prev) * x0_pred
-                  + jnp.sqrt(jnp.maximum(1.0 - abar_prev - sigma ** 2, 0.0)) * eps
-                  + sigma * z)
-        return (x_next, rng), None
+        x = ddim_step(x, t, ts_prev[i], eps, schedule, eta=eta, z=z)
+        return (x, rng), None
 
-    (x, _), _ = jax.lax.scan(body, (x, rng), jnp.arange(num_steps))
+    (x, _), _ = jax.lax.scan(body, (x_init, rng), jnp.arange(num_steps))
     return x

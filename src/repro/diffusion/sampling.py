@@ -15,12 +15,18 @@ from repro.diffusion.schedule import linear_schedule
 
 
 def sample_images(params, cfg: ModelConfig, n: int = 64, steps: int = 10,
-                  seed: int = 0) -> np.ndarray:
-    """DDIM-sample ``n`` images (N, H, W, C) from a trained U-Net."""
+                  seed: int = 0, *, masks=None, eta: float = 0.0) -> np.ndarray:
+    """DDIM-sample ``n`` images (N, H, W, C) from a trained U-Net.
+
+    ``masks``: optional sparse-phase prune masks (``make_masks`` output
+    keyed by PruneGroup name) — the denoising forward then routes
+    through the backend's masked GEMMs, numerically identical to
+    sampling from ``apply_masks``-pre-zeroed weights.
+    """
     from repro.models.unet import apply_unet
     sched = linear_schedule(cfg.diffusion_steps)
-    eps_fn = lambda x, t: apply_unet(params, cfg, x, t)
+    eps_fn = lambda x, t: apply_unet(params, cfg, x, t, masks=masks)
     out = ddim_sample(eps_fn, sched, jax.random.PRNGKey(seed),
                       (n, cfg.image_size, cfg.image_size, cfg.in_channels),
-                      num_steps=steps)
+                      num_steps=steps, eta=eta)
     return np.asarray(out)

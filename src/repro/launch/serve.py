@@ -3,7 +3,15 @@
 Maintains a batch of independent request slots with a shared jitted
 serve_step; finished requests (EOS or max tokens) are refilled from a
 queue — the event-level skeleton of a production server, runnable at
-smoke scale on CPU and lowered at full scale by the dry-run.
+smoke scale on CPU and lowered at full scale by the dry-run.  The
+diffusion counterpart (per-slot denoising instead of per-slot decoding)
+is :mod:`repro.serve`.
+
+Refill hygiene: each request's seed token is a deterministic function of
+its request id, and a refilled slot's KV-cache rows are blended back to
+fresh state (``model.reset_cache_slots``) before its first step — so a
+request's output is identical whichever slot serves it and whatever ran
+in that slot before.
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --requests 8
 """
@@ -11,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +28,64 @@ import numpy as np
 from repro.configs import list_archs, smoke_variant
 from repro.launch.steps import build_serve_step
 from repro.models import model
+
+
+def seed_token(cfg, seed: int, rid: int) -> int:
+    """Deterministic per-request seed token — a function of the request
+    id only (not the slot it lands in or the slot's history)."""
+    return int(np.random.default_rng((seed, rid)).integers(0, cfg.vocab_size))
+
+
+def serve_requests(params, cfg, *, slots: int, requests: int,
+                   max_tokens: int, cache_len: int,
+                   seed: int = 0) -> Dict[str, object]:
+    """Run ``requests`` generation requests through ``slots`` continuous-
+    batching slots; returns per-request token lists + throughput stats.
+    """
+    serve = jax.jit(build_serve_step(cfg))
+    reset_fn = jax.jit(model.reset_cache_slots)
+    fresh = model.init_cache(params, cfg, slots, cache_len)
+    cache = fresh
+
+    slot_req: List = [r if r < requests else None for r in range(slots)]
+    slot_len = [0] * slots
+    toks_host = [seed_token(cfg, seed, r) for r in range(slots)]
+    toks = jnp.asarray(toks_host, jnp.int32)[:, None]
+    next_req = min(slots, requests)
+    done = 0
+    outputs: Dict[int, List[int]] = {i: [] for i in range(requests)}
+
+    t0 = time.perf_counter()
+    generated = 0
+    while done < requests:
+        toks, cache = serve(params, cache, toks)
+        generated += slots
+        host = np.asarray(toks)
+        reset = np.zeros((slots,), bool)
+        new_toks = host[:, 0].copy()
+        for s in range(slots):
+            rid = slot_req[s]
+            if rid is None:
+                continue
+            outputs[rid].append(int(host[s, 0]))
+            slot_len[s] += 1
+            if slot_len[s] >= max_tokens:
+                done += 1
+                nxt = next_req if next_req < requests else None
+                next_req += 1
+                slot_req[s] = nxt
+                slot_len[s] = 0
+                # refill: fresh cache rows + the NEW request's seed token
+                # (the old code kept both, leaking state across requests)
+                reset[s] = True
+                new_toks[s] = seed_token(cfg, seed, nxt) if nxt is not None \
+                    else 0
+        if reset.any():
+            cache = reset_fn(cache, fresh, jnp.asarray(reset))
+            toks = jnp.asarray(new_toks, jnp.int32)[:, None]
+    dt = time.perf_counter() - t0
+    return {"outputs": outputs, "seconds": dt, "generated": generated,
+            "tok_per_s": generated / dt if dt > 0 else float("inf")}
 
 
 def main():
@@ -34,41 +101,15 @@ def main():
     cfg = smoke_variant(args.arch)
     rng = jax.random.PRNGKey(args.seed)
     params = model.init(rng, cfg)
-    serve = jax.jit(build_serve_step(cfg))
-
-    cache = model.init_cache(params, cfg, args.batch, args.cache_len)
-    np_rng = np.random.default_rng(args.seed)
-    toks = jnp.asarray(np_rng.integers(0, cfg.vocab_size,
-                                       (args.batch, 1)), jnp.int32)
-    slot_req = list(range(args.batch))            # request id per slot
-    slot_len = [0] * args.batch
-    next_req = args.batch
-    done = 0
-    outputs = {i: [] for i in range(args.requests)}
-
-    t0 = time.perf_counter()
-    generated = 0
-    while done < args.requests:
-        toks, cache = serve(params, cache, toks)
-        generated += args.batch
-        host = np.asarray(toks)[:, 0]
-        for s in range(args.batch):
-            rid = slot_req[s]
-            if rid is None or rid >= args.requests:
-                continue
-            outputs[rid].append(int(host[s]))
-            slot_len[s] += 1
-            if slot_len[s] >= args.max_tokens:
-                done += 1
-                slot_req[s] = next_req if next_req < args.requests else None
-                next_req += 1
-                slot_len[s] = 0
-    dt = time.perf_counter() - t0
+    res = serve_requests(params, cfg, slots=args.batch,
+                         requests=args.requests, max_tokens=args.max_tokens,
+                         cache_len=args.cache_len, seed=args.seed)
     print(f"arch={cfg.name}  {args.requests} requests x "
-          f"{args.max_tokens} tokens, {args.batch} slots: {dt:.1f}s "
-          f"({generated/dt:.0f} tok/s incl. refills)")
+          f"{args.max_tokens} tokens, {args.batch} slots: "
+          f"{res['seconds']:.1f}s ({res['tok_per_s']:.0f} tok/s incl. "
+          f"refills)")
     for rid in range(min(args.requests, 4)):
-        print(f"  req{rid}: {outputs[rid][:12]}...")
+        print(f"  req{rid}: {res['outputs'][rid][:12]}...")
 
 
 if __name__ == "__main__":

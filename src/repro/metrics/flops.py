@@ -111,65 +111,74 @@ def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
     return factor * active_params(cfg) * tokens
 
 
-def unet_macs(params, image_size: int) -> float:
+def unet_macs(params, image_size: int, masks=None) -> float:
     """Analytic MACs of one U-Net forward pass (Table III/IV accounting).
 
     Convolutions dominate; dense layers + attention included.
+
+    ``masks``: optional sparse-phase prune masks keyed by PruneGroup
+    name (the ``apply_unet(masks=)`` contract) — the count then reflects
+    the *served* compute of the masked forward: each ResBlock's
+    conv1/temb output and conv2 input shrink to the group's kept-channel
+    count, and each attention block's qkv/proj GEMMs likewise.  The
+    attention score/value einsums stay full-width (pruned channels are
+    zeroed, not removed, there), so masked MACs are the honest cost of
+    the static-sparsity serving path, not a naive ``(1-ratio)`` scaling.
     """
     import numpy as np
-    total = 0.0
 
-    def walk(p, res_hint):
-        nonlocal total
-        # heuristic: handled explicitly below
-        pass
+    def kept(name: str, size: int) -> int:
+        if masks is None or name not in masks:
+            return size
+        return int(np.sum(np.asarray(masks[name]) != 0))
 
-    # Explicit traversal mirroring apply_unet resolution changes.
-    def conv_macs(w, res):
+    def conv_macs(w, res, cin_kept=None, cout_kept=None):
         kh, kw, cin, cout = w.shape
+        cin = cin if cin_kept is None else cin_kept
+        cout = cout if cout_kept is None else cout_kept
         return kh * kw * cin * cout * res * res
 
+    def resblock_macs(rp, res, name):
+        k = kept(name, rp["conv1"]["w"].shape[-1])
+        m = conv_macs(rp["conv1"]["w"], res, cout_kept=k)
+        m += conv_macs(rp["conv2"]["w"], res, cin_kept=k)
+        if "skip" in rp:
+            m += conv_macs(rp["skip"]["w"], res)
+        m += rp["temb"]["w"].shape[0] * k
+        return m
+
+    def attnblock_macs(ap, res, name):
+        c = ap["proj"]["w"].shape[2]
+        k = kept(name, c)
+        m = conv_macs(ap["qkv"]["w"], res, cout_kept=3 * k)
+        m += conv_macs(ap["proj"]["w"], res, cin_kept=k)
+        m += 2 * (res * res) ** 2 * c
+        return m
+
+    # Explicit traversal mirroring apply_unet resolution changes.
+    total = 0.0
     res = image_size
     total += conv_macs(params["conv_in"]["w"], res)
-    for lvl_p in params["down"]:
-        for blk in lvl_p["blocks"]:
-            rp = blk["res"]
-            total += conv_macs(rp["conv1"]["w"], res)
-            total += conv_macs(rp["conv2"]["w"], res)
-            if "skip" in rp:
-                total += conv_macs(rp["skip"]["w"], res)
-            total += rp["temb"]["w"].size
+    for lvl, lvl_p in enumerate(params["down"]):
+        for bi, blk in enumerate(lvl_p["blocks"]):
+            total += resblock_macs(blk["res"], res,
+                                   f"down/{lvl}/blocks/{bi}/res")
             if "attn" in blk:
-                ap = blk["attn"]
-                total += conv_macs(ap["qkv"]["w"], res)
-                total += conv_macs(ap["proj"]["w"], res)
-                c = ap["proj"]["w"].shape[2]
-                total += 2 * (res * res) ** 2 * c
+                total += attnblock_macs(blk["attn"], res,
+                                        f"down/{lvl}/blocks/{bi}/attn")
         if "down" in lvl_p:
             res //= 2
             total += conv_macs(lvl_p["down"]["w"], res)
-    for key in ("res1", "res2"):
-        rp = params["mid"][key]
-        total += conv_macs(rp["conv1"]["w"], res)
-        total += conv_macs(rp["conv2"]["w"], res)
-        total += rp["temb"]["w"].size
-    ap = params["mid"]["attn"]
-    total += conv_macs(ap["qkv"]["w"], res)
-    total += conv_macs(ap["proj"]["w"], res)
-    total += 2 * (res * res) ** 2 * ap["proj"]["w"].shape[2]
-    for lvl_p in params["up"]:
-        for blk in lvl_p["blocks"]:
-            rp = blk["res"]
-            total += conv_macs(rp["conv1"]["w"], res)
-            total += conv_macs(rp["conv2"]["w"], res)
-            if "skip" in rp:
-                total += conv_macs(rp["skip"]["w"], res)
-            total += rp["temb"]["w"].size
+    total += resblock_macs(params["mid"]["res1"], res, "mid/res1")
+    total += attnblock_macs(params["mid"]["attn"], res, "mid/attn")
+    total += resblock_macs(params["mid"]["res2"], res, "mid/res2")
+    for lvl, lvl_p in enumerate(params["up"]):
+        for bi, blk in enumerate(lvl_p["blocks"]):
+            total += resblock_macs(blk["res"], res,
+                                   f"up/{lvl}/blocks/{bi}/res")
             if "attn" in blk:
-                apb = blk["attn"]
-                total += conv_macs(apb["qkv"]["w"], res)
-                total += conv_macs(apb["proj"]["w"], res)
-                total += 2 * (res * res) ** 2 * apb["proj"]["w"].shape[2]
+                total += attnblock_macs(blk["attn"], res,
+                                        f"up/{lvl}/blocks/{bi}/attn")
         if "up" in lvl_p:
             res *= 2
             total += conv_macs(lvl_p["up"]["w"], res)

@@ -75,6 +75,12 @@ def decode(params: Params, cache, cfg: ModelConfig, tokens,
     return tfm.decode_step(params, cache, cfg, tokens, opts)
 
 
+def reset_cache_slots(cache, fresh, reset):
+    """Per-slot cache reset for continuous-batching refill — see
+    :func:`repro.models.transformer.reset_cache_slots`."""
+    return tfm.reset_cache_slots(cache, fresh, reset)
+
+
 # ---------------------------------------------------------------------------
 # Input specs for the dry-run (ShapeDtypeStruct stand-ins, no allocation)
 # ---------------------------------------------------------------------------

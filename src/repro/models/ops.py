@@ -47,6 +47,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.block_masked_matmul.ops import masked_matmul as _bmm_kernel
 from repro.kernels.block_masked_matmul.ref import block_masked_matmul_ref
@@ -111,14 +112,91 @@ _masked_matmul_pallas.defvjp(_masked_matmul_pallas_fwd,
                              _masked_matmul_pallas_bwd)
 
 
+def is_static_mask(m) -> bool:
+    """Host-constant (numpy) masks trigger trace-time sparsity
+    specialization; device/traced masks keep the exact training path."""
+    return isinstance(m, np.ndarray)
+
+
+def _static_masks(col_mask, row_mask) -> bool:
+    if col_mask is None and row_mask is None:
+        return False
+    return (col_mask is None or is_static_mask(col_mask)) and \
+        (row_mask is None or is_static_mask(row_mask))
+
+
+def _masked_matmul_static(x2, w, col_mask, row_mask, b: str):
+    """Serve-time masked matmul with *host-constant* masks: the pruned
+    channels are known at trace time, so instead of multiplying by zero
+    we gather the kept rows/columns, run a smaller GEMM, and scatter
+    back — the compiled program genuinely shrinks with sparsity.
+
+    Gathers are element-granular (kept channels need not be contiguous
+    — the U-Net's GroupNorm between conv1 and conv2 forbids the
+    function-preserving repack that would make top-k masks contiguous),
+    except on the pallas backend when element granularity would knock a
+    tile-aligned GEMM off the kernel: there the gather falls back to
+    128-block granularity, dropping only whole all-pruned MXU tiles and
+    keeping partial blocks' element masks inside the kernel.  Zero kept
+    rows or columns short-circuits to zeros.  Matches the dynamic-mask
+    path to fp32 reduction-order tolerance (the dropped terms are exact
+    zeros).
+    """
+    K, N = w.shape
+    rm = np.ones((K,), np.float32) if row_mask is None \
+        else np.asarray(row_mask, np.float32)
+    cm = np.ones((N,), np.float32) if col_mask is None \
+        else np.asarray(col_mask, np.float32)
+    out_dtype = jnp.promote_types(x2.dtype, w.dtype)
+    bs = 128
+    ridx = np.nonzero(rm)[0]
+    cidx = np.nonzero(cm)[0]
+    if b == "pallas":
+        M = x2.shape[0]
+        kernel_full = M % bs == 0 and K % bs == 0 and N % bs == 0
+        kernel_elem = M % bs == 0 and ridx.size % bs == 0 \
+            and cidx.size % bs == 0
+        if kernel_full and not kernel_elem:
+            # block-granular: keep any 128-block with a live unit
+            rkeep = rm.reshape(-1, bs).max(axis=1) != 0
+            ckeep = cm.reshape(-1, bs).max(axis=1) != 0
+            ridx = np.nonzero(np.repeat(rkeep, bs))[0]
+            cidx = np.nonzero(np.repeat(ckeep, bs))[0]
+    if ridx.size == 0 or cidx.size == 0:
+        return jnp.zeros((x2.shape[0], N), out_dtype)
+    xr = x2 if ridx.size == K else x2[:, ridx]
+    wr = w if ridx.size == K and cidx.size == N else w[np.ix_(ridx, cidx)]
+    if b == "pallas":
+        out_r = _masked_matmul_pallas(xr, wr, jnp.asarray(cm[cidx]),
+                                      jnp.asarray(rm[ridx]))
+    elif b == "ref":
+        out_r = block_masked_matmul_ref(
+            xr, wr, jnp.ones((cidx.size,), jnp.float32),
+            jnp.ones((ridx.size,), jnp.float32))
+    else:
+        out_r = xr @ wr
+    if cidx.size == N:
+        return out_r
+    return jnp.zeros((x2.shape[0], N), out_r.dtype).at[:, cidx].set(out_r)
+
+
 def masked_matmul(x, w, col_mask=None, row_mask=None, *, backend: str = ""):
     """``x @ (w * col_mask[None] * row_mask[:, None])`` — the structured-
     pruning sparse-phase matmul.  x: (M, K) or (..., K); w: (K, N);
     masks are 0/1 fp32 vectors (``None`` = all ones).
+
+    Mask *type* selects the strategy: device/traced masks run the exact
+    training-time formulation (multiply by zero; pallas skips all-zero
+    tiles via ``pl.when``), while host ``np.ndarray`` masks are serving
+    constants and specialize the compiled program itself — see
+    :func:`_masked_matmul_static`.
     """
     b = resolve_backend(backend)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    if _static_masks(col_mask, row_mask):
+        out = _masked_matmul_static(x2, w, col_mask, row_mask, b)
+        return out.reshape(lead + (w.shape[1],))
     if b == "pallas":
         cm = jnp.ones((w.shape[1],), jnp.float32) if col_mask is None \
             else col_mask
@@ -150,8 +228,8 @@ def matmul(x, w, *, backend: str = ""):
 def dense(p, x, *, backend: str = "", col_mask=None):
     """``x @ p["w"] + p["b"]``; ``col_mask`` prunes output features
     (weight columns AND bias — exactly ``apply_masks``' pre-zeroing)."""
-    b = p["b"] if col_mask is None else p["b"] * col_mask
-    if resolve_backend(backend) == "xla":
+    b = p["b"] if col_mask is None else p["b"] * jnp.asarray(col_mask)
+    if resolve_backend(backend) == "xla" and not _static_masks(col_mask, None):
         w = p["w"] if col_mask is None else p["w"] * col_mask[None, :]
         return x @ w + b
     return masked_matmul(x, p["w"], col_mask, None, backend=backend) + b
@@ -188,11 +266,14 @@ def conv(p, x, *, stride: int = 1, padding: str = "SAME",
     b = resolve_backend(backend)
     w = p["w"]
     kh, kw, cin, cout = w.shape
-    bias = p["b"] if col_mask is None else p["b"] * col_mask
+    bias = p["b"] if col_mask is None else p["b"] * jnp.asarray(col_mask)
+    # host-constant serving masks take the GEMM route on every backend
+    # so the static gather/scatter specialization can engage
+    static = _static_masks(col_mask, row_mask)
 
     if kh == kw == 1 and stride == 1:
         w2 = w[0, 0]
-        if b == "xla":
+        if b == "xla" and not static:
             w2 = _masked_wm(w2, col_mask, row_mask)
             return jnp.einsum("bhwc,cd->bhwd", x, w2) + bias
         out = masked_matmul(x.reshape(-1, cin), w2, col_mask, row_mask,
@@ -208,7 +289,7 @@ def conv(p, x, *, stride: int = 1, padding: str = "SAME",
             for di in range(kh) for dj in range(kw)]
     patches = jnp.stack(cols, axis=3)            # (B, oh, ow, kh*kw, cin)
     wk = w.reshape(kh * kw, cin, cout)
-    if b == "xla":
+    if b == "xla" and not static:
         if col_mask is not None:
             wk = wk * col_mask[None, None, :]
         if row_mask is not None:
@@ -216,8 +297,12 @@ def conv(p, x, *, stride: int = 1, padding: str = "SAME",
         y = jnp.einsum("bhwkc,kcd->bhwd", patches, wk)
         return y + bias
     # flatten the patch axis into K; the cin row mask tiles across the
-    # kh*kw patch positions (im2col K index = patch * cin + c)
-    rm = None if row_mask is None else jnp.tile(row_mask, kh * kw)
+    # kh*kw patch positions (im2col K index = patch * cin + c).  np.tile
+    # for host masks — jnp.tile would device-commit them and silently
+    # drop the static specialization.
+    rm = None if row_mask is None else \
+        (np.tile(row_mask, kh * kw) if is_static_mask(row_mask)
+         else jnp.tile(row_mask, kh * kw))
     flat = patches.reshape(-1, kh * kw * cin)
     y = masked_matmul(flat, wk.reshape(kh * kw * cin, cout), col_mask, rm,
                       backend=b)

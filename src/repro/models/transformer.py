@@ -505,6 +505,33 @@ def init_cache(params: Params, cfg: ModelConfig, batch: int, seq_len: int,
     return cache
 
 
+def reset_cache_slots(cache: Params, fresh: Params, reset) -> Params:
+    """Blend freshly-initialized state into the cache rows of reset slots.
+
+    ``fresh`` is an :func:`init_cache` output of the same shape (NOT
+    necessarily all-zeros: ring caches start ``kv_pos = -1``); ``reset``
+    is a ``(B,)`` bool vector.  Slot state is data, so a continuous-
+    batching server calls this under jit on every refill without
+    recompiling — and without this, a refilled slot decodes against the
+    *previous* request's KV rows.
+    """
+    def blend(axis):
+        def f(a, b):
+            shape = [1] * a.ndim
+            shape[axis] = -1
+            return jnp.where(reset.reshape(shape), b, a)
+        return f
+
+    out: Params = {"pos": jnp.where(reset, fresh["pos"], cache["pos"])}
+    out["head"] = jax.tree.map(blend(0), cache["head"], fresh["head"])
+    out["tail"] = jax.tree.map(blend(0), cache["tail"], fresh["tail"])
+    # cycle-stacked layer states carry (n_cycles, B, ...) leaves
+    out["cycles"] = jax.tree.map(blend(1), cache["cycles"], fresh["cycles"])
+    if "enc_out" in cache:
+        out["enc_out"] = blend(0)(cache["enc_out"], fresh["enc_out"])
+    return out
+
+
 def _decode_self_attention(ap, cache, h, pos, cfg: ModelConfig, kind: int):
     """h: (B,1,d). Updates ring/full KV cache, returns (out, new_cache)."""
     B = h.shape[0]

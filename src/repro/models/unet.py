@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import ops
@@ -113,7 +114,10 @@ def apply_attnblock(p, x, *, backend: str = "", mask=None):
     q/k/v thirds of the qkv projection and the proj input rows."""
     B, H, W, C = x.shape
     h = group_norm(x, p["norm"]["scale"], p["norm"]["bias"])
-    qkv_mask = None if mask is None else jnp.concatenate([mask, mask, mask])
+    # np.concatenate for host (serving) masks: jnp would device-commit
+    # them and drop ops' static sparsity specialization
+    cat = np.concatenate if ops.is_static_mask(mask) else jnp.concatenate
+    qkv_mask = None if mask is None else cat([mask, mask, mask])
     qkv = conv(p["qkv"], h, backend=backend, col_mask=qkv_mask)
     Ci = qkv.shape[-1] // 3          # may be < C after structured pruning
     qkv = qkv.reshape(B, H * W, 3, Ci)

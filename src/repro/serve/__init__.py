@@ -1,0 +1,17 @@
+"""Pruned-diffusion sampling service (ROADMAP item 2).
+
+Continuous-batching DDIM/DDPM sampler: a fixed pool of request slots
+advances through ONE jitted denoising tick per step — per-slot step
+counters are data, so requests at different denoising depths coexist in
+a batch and refills never recompile.  Host masks (``np.ndarray``) route
+the forward through :mod:`repro.models.ops`' static sparsity
+specialization, so the 44%-pruned sparse-phase model is genuinely
+cheaper to serve.
+
+  PYTHONPATH=src python -m repro.serve --ckpt out/ckpt --requests 8
+"""
+from repro.serve.artifact import load_serving_artifact, masks_for_ratio
+from repro.serve.server import DiffusionServer, Request, ServeResult
+
+__all__ = ["DiffusionServer", "Request", "ServeResult",
+           "load_serving_artifact", "masks_for_ratio"]

@@ -1,0 +1,69 @@
+"""Checkpoint -> servable artifact: params + post-training ModelConfig.
+
+Any ``repro.checkpoint`` artifact works — ``Experiment.save`` output
+(the runner's ``ckpt.npz``) or a raw trainer ``state()`` dump.  The
+model config is recovered from the trainer metadata when present
+(FedPhD trainers store the *post-prune* cfg there) and otherwise from
+the spec's model name; the serving backend can be overridden per
+deployment without touching the checkpoint.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.configs import get_config
+from repro.configs.base import ModelConfig, config_from_dict
+from repro.models.ops import resolve_backend
+
+
+def load_serving_artifact(path: str, *, backend: Optional[str] = None
+                          ) -> Tuple[Any, ModelConfig, Dict]:
+    """Load ``(params, cfg, meta)`` ready for :class:`DiffusionServer`.
+
+    ``backend`` overrides the checkpoint's compute backend (serving
+    hardware need not match training hardware); ``None`` keeps it.
+    """
+    arrays, meta = checkpoint.load(path)
+    if "params" not in arrays:
+        raise ValueError(f"checkpoint at {path!r} has no 'params' entry — "
+                         f"not a trainer/experiment artifact")
+    params = jax.tree.map(jnp.asarray, arrays["params"])
+    if meta.get("cfg"):
+        cfg = config_from_dict(meta["cfg"])
+    elif meta.get("spec", {}).get("model"):
+        cfg = get_config(meta["spec"]["model"])
+        if meta["spec"].get("backend"):
+            cfg = cfg.replace(backend=meta["spec"]["backend"])
+    else:
+        raise ValueError(f"checkpoint at {path!r} carries neither a model "
+                         f"cfg nor a spec to derive one from")
+    if cfg.arch_type != "unet":
+        raise ValueError(f"repro.serve samples diffusion U-Nets; checkpoint "
+                         f"is arch_type={cfg.arch_type!r} (use "
+                         f"repro.launch.serve for token models)")
+    cfg = cfg.replace(backend=resolve_backend(backend or cfg.backend))
+    return params, cfg, meta
+
+
+def masks_for_ratio(params, cfg: ModelConfig, ratio: float,
+                    *, criterion: str = "l2") -> Dict[str, np.ndarray]:
+    """Serving masks at ``ratio`` as HOST numpy arrays — the type that
+    triggers ops' static sparsity specialization (trace-time channel
+    gathers) instead of the training-time multiply-by-zero path."""
+    from repro.core.pruning.criteria import l2_scores, random_scores
+    from repro.core.pruning.groups import build_groups
+    from repro.core.pruning.masks import make_masks
+    groups = build_groups(cfg, params)
+    if criterion == "l2":
+        scores = l2_scores(params, groups, backend=cfg.backend)
+    elif criterion == "random":
+        scores = random_scores(jax.random.PRNGKey(0), groups)
+    else:
+        raise ValueError(f"unknown criterion {criterion!r}")
+    masks = make_masks(scores, groups, ratio)
+    return {k: np.asarray(v) for k, v in masks.items()}

@@ -1,0 +1,233 @@
+"""Continuous-batching diffusion sampler server.
+
+The server owns a ``(slots, H, W, C)`` batch of denoising states plus a
+per-slot step counter and RNG key — all *data*, so every tick runs the
+same compiled program regardless of which requests occupy which slots or
+how deep each one is.  A finished slot emits its image and refills from
+the request source; a faulting or timing-out source degrades gracefully
+(the fault is recorded and serving continues with whatever slots are
+live).
+
+Per-request determinism: a request's prior draw and per-step noise
+stream are functions of its ``seed`` alone, following
+:func:`repro.diffusion.ddim.ddim_sample`'s exact split sequence — so the
+served output for a request equals a standalone ``ddim_sample`` run and
+is identical whichever slot serves it and whatever ran there before.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.diffusion.ddim import ddim_step, ddim_timesteps
+from repro.diffusion.schedule import linear_schedule
+
+
+@dataclass(frozen=True)
+class Request:
+    """One image to sample.  ``seed`` fully determines the output."""
+    rid: int
+    seed: int = 0
+
+
+@dataclass
+class ServeResult:
+    images: Dict[int, np.ndarray] = field(default_factory=dict)
+    step_latencies_s: List[float] = field(default_factory=list)
+    request_latencies_s: Dict[int, float] = field(default_factory=dict)
+    faults: List[str] = field(default_factory=list)
+    seconds: float = 0.0
+
+    def latency_percentile(self, q: float) -> float:
+        """Per-step latency percentile in seconds (q in [0, 100])."""
+        if not self.step_latencies_s:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.step_latencies_s), q))
+
+    @property
+    def requests_per_s(self) -> float:
+        n = len(self.images)
+        return n / self.seconds if self.seconds > 0 else float("inf")
+
+
+RequestSource = Union[Iterable, Iterator, Callable[[], Optional[Request]]]
+
+
+class DiffusionServer:
+    """Slot-based continuous-batching DDIM (eta=0) / DDPM-like (eta>0)
+    sampler over a trained (optionally mask-pruned) U-Net.
+
+    ``masks``: pass **host** numpy masks (``masks_for_ratio``) to serve
+    the pruned model through ops' static sparsity specialization;
+    ``None`` serves dense.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 num_steps: int = 10, eta: float = 0.0, masks=None):
+        from repro.models.unet import apply_unet
+        self.cfg = cfg
+        self.params = jax.tree.map(jnp.asarray, params)
+        self.slots = slots
+        self.num_steps = num_steps
+        self.eta = eta
+        self.masks = masks
+        sched = linear_schedule(cfg.diffusion_steps)
+        ts = ddim_timesteps(cfg.diffusion_steps, num_steps)
+        ts_prev = jnp.concatenate([ts[1:], jnp.full((1,), -1, ts.dtype)])
+        shape = (slots, cfg.image_size, cfg.image_size, cfg.in_channels)
+
+        def tick(params, x, sidx, active, keys):
+            idx = jnp.minimum(sidx, num_steps - 1)
+            t, tp = ts[idx], ts_prev[idx]
+            eps = apply_unet(params, cfg, x, t, masks=masks)
+            if eta == 0.0:
+                x_new = ddim_step(x, t, tp, eps, sched, eta=0.0)
+                new_keys = keys
+            else:
+                sp = jax.vmap(jax.random.split)(keys)      # (slots, 2, kdim)
+                new_keys = sp[:, 0]
+                z = jax.vmap(lambda k: jax.random.normal(
+                    k, shape[1:], jnp.float32))(sp[:, 1])
+                x_new = ddim_step(x, t, tp, eps, sched, eta=eta, z=z)
+            guard = active.reshape((-1,) + (1,) * (x.ndim - 1))
+            x = jnp.where(guard, x_new, x)
+            sidx = jnp.where(active, sidx + 1, sidx)
+            keys = jnp.where(active.reshape((-1,) + (1,) * (keys.ndim - 1)),
+                             new_keys, keys)
+            return x, sidx, keys
+
+        self._tick = jax.jit(tick)
+        self.x = jnp.zeros(shape, jnp.float32)
+        self.sidx = jnp.zeros((slots,), jnp.int32)
+        key0 = jax.random.PRNGKey(0)
+        self.keys = jnp.broadcast_to(key0, (slots,) + key0.shape)
+        self._slot_req: List[Optional[Request]] = [None] * slots
+        self._admit_t = [0.0] * slots
+        self.step_latencies_s: List[float] = []
+        self.request_latencies_s: Dict[int, float] = {}
+
+    # -- request lifecycle ---------------------------------------------------
+    def _seed_state(self, seed: int):
+        """(carry_key, x_T) following ddim_sample's split sequence for a
+        1-image shape — the served trajectory matches a standalone
+        ``ddim_sample(..., PRNGKey(seed), (1, H, W, C))`` bitwise."""
+        k = jax.random.split(jax.random.PRNGKey(seed))
+        c = self.cfg
+        x0 = jax.random.normal(k[1], (c.image_size, c.image_size,
+                                      c.in_channels), jnp.float32)
+        return k[0], x0
+
+    def free_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self._slot_req) if r is None]
+
+    def active_count(self) -> int:
+        return self.slots - len(self.free_slots())
+
+    def submit(self, req: Request) -> bool:
+        """Admit a request into a free slot; False if the batch is full."""
+        free = self.free_slots()
+        if not free:
+            return False
+        s = free[0]
+        carry, x0 = self._seed_state(req.seed)
+        self.x = self.x.at[s].set(x0)
+        self.sidx = self.sidx.at[s].set(0)
+        self.keys = self.keys.at[s].set(carry)
+        self._slot_req[s] = req
+        self._admit_t[s] = time.perf_counter()
+        return True
+
+    def kill(self, rid: int) -> bool:
+        """Drop an in-flight request without emitting (client went away).
+        The slot is immediately refillable; isolation is the refill
+        contract, not a cache wipe — new requests overwrite x/sidx/keys."""
+        for s, r in enumerate(self._slot_req):
+            if r is not None and r.rid == rid:
+                self._slot_req[s] = None
+                return True
+        return False
+
+    # -- the denoising tick --------------------------------------------------
+    def step(self) -> List[Tuple[int, np.ndarray]]:
+        """One jitted denoising tick over the slot batch; returns the
+        ``(rid, image)`` pairs that completed this tick."""
+        active = jnp.asarray([r is not None for r in self._slot_req])
+        t0 = time.perf_counter()
+        self.x, self.sidx, self.keys = self._tick(
+            self.params, self.x, self.sidx, active, self.keys)
+        self.x.block_until_ready()
+        now = time.perf_counter()
+        self.step_latencies_s.append(now - t0)
+        completed = []
+        sidx_host = np.asarray(self.sidx)
+        for s, req in enumerate(self._slot_req):
+            if req is not None and int(sidx_host[s]) >= self.num_steps:
+                completed.append((req.rid, np.asarray(self.x[s])))
+                self.request_latencies_s[req.rid] = now - self._admit_t[s]
+                self._slot_req[s] = None
+        return completed
+
+    def compile_count(self) -> int:
+        """Number of compiled tick programs (tests assert it stays 1 —
+        slot occupancy/depth is data, not shape)."""
+        return self._tick._cache_size()
+
+    # -- serving loop --------------------------------------------------------
+    def run(self, requests: RequestSource, *, idle_limit: int = 100,
+            fault_limit: int = 100) -> ServeResult:
+        """Serve until the source is exhausted and all slots drain.
+
+        The source is an iterable of :class:`Request` or a callable; it
+        may yield ``None`` ("no request right now" — a timeout) or raise
+        (a fault).  Both degrade gracefully: serving continues with live
+        slots, and ``idle_limit`` consecutive empty polls with an empty
+        batch (or ``fault_limit`` consecutive faults) ends the run with
+        the condition recorded in ``result.faults``.
+        """
+        res = ServeResult()
+        pull = requests if callable(requests) else iter(requests).__next__
+        exhausted = False
+        idle = faults_in_a_row = 0
+        n0_steps = len(self.step_latencies_s)
+        t_start = time.perf_counter()
+        while True:
+            while not exhausted and self.free_slots():
+                try:
+                    req = pull()
+                except StopIteration:
+                    exhausted = True
+                    break
+                except Exception as e:          # queue fault
+                    res.faults.append(f"request source fault: {e!r}")
+                    faults_in_a_row += 1
+                    if faults_in_a_row >= fault_limit:
+                        res.faults.append("fault limit reached; treating "
+                                          "source as exhausted")
+                        exhausted = True
+                    continue
+                faults_in_a_row = 0
+                if req is None:                 # timeout/empty poll
+                    break
+                self.submit(req)
+            if self.active_count() == 0:
+                if exhausted:
+                    break
+                idle += 1                       # source alive but empty
+                if idle >= idle_limit:
+                    res.faults.append("idle limit reached with empty "
+                                      "source; stopping")
+                    break
+                continue
+            idle = 0
+            for rid, img in self.step():
+                res.images[rid] = img
+        res.seconds = time.perf_counter() - t_start
+        res.step_latencies_s = self.step_latencies_s[n0_steps:]
+        res.request_latencies_s = dict(self.request_latencies_s)
+        return res

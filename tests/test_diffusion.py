@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.diffusion import (ddim_sample, ddim_timesteps, ddpm_loss,
-                             linear_schedule, cosine_schedule, q_sample)
+from repro.diffusion import (ddim_sample, ddim_step, ddim_timesteps,
+                             ddpm_loss, linear_schedule, cosine_schedule,
+                             q_sample)
 
 
 def test_linear_schedule_shapes():
@@ -53,6 +54,37 @@ def test_ddim_timesteps():
     assert int(ts[0]) == 990 and int(ts[-1]) == 0
 
 
+def test_ddim_timesteps_divisible_unchanged():
+    """The paper's 1000/100 setting keeps the classic stride sub-sequence
+    bit-for-bit (990, 980, ..., 0)."""
+    ts = np.asarray(ddim_timesteps(1000, 100))
+    np.testing.assert_array_equal(ts, np.arange(99, -1, -1) * 10)
+    np.testing.assert_array_equal(np.asarray(ddim_timesteps(100, 100)),
+                                  np.arange(99, -1, -1))
+
+
+@pytest.mark.parametrize("T,S", [(1000, 7), (1000, 600), (100, 33),
+                                 (10, 3), (1000, 999)])
+def test_ddim_timesteps_non_divisible(T, S):
+    """Non-divisible counts previously truncated the trajectory top
+    (1000/600 started at t=599); now the first sampled t is always the
+    final training timestep and spacing is even over [0, T-1]."""
+    ts = np.asarray(ddim_timesteps(T, S))
+    assert ts.shape == (S,)
+    assert ts[0] == T - 1 and ts[-1] == 0
+    assert np.all(np.diff(ts) < 0)               # strictly descending
+    gaps = -np.diff(ts)
+    assert gaps.max() - gaps.min() <= 1          # even spacing
+
+
+def test_ddim_timesteps_single_and_validation():
+    assert np.asarray(ddim_timesteps(1000, 1)).tolist() == [999]
+    with pytest.raises(ValueError):
+        ddim_timesteps(100, 0)
+    with pytest.raises(ValueError):
+        ddim_timesteps(100, 101)
+
+
 def test_ddim_sample_runs():
     s = linear_schedule(100)
     eps_fn = lambda x, t: jnp.zeros_like(x)
@@ -60,3 +92,66 @@ def test_ddim_sample_runs():
                       num_steps=10)
     assert out.shape == (2, 8, 8, 3)
     assert not bool(jnp.any(jnp.isnan(out)))
+
+
+def test_ddim_eta0_invariant_to_rng():
+    """The deterministic sampler consumes no randomness beyond the
+    prior: with x_init supplied, the input rng cannot matter."""
+    s = linear_schedule(100)
+    eps_fn = lambda x, t: 0.1 * x
+    x_init = jax.random.normal(jax.random.PRNGKey(7), (2, 8, 8, 3))
+    a = ddim_sample(eps_fn, s, jax.random.PRNGKey(0), (2, 8, 8, 3),
+                    num_steps=10, x_init=x_init)
+    b = ddim_sample(eps_fn, s, jax.random.PRNGKey(123), (2, 8, 8, 3),
+                    num_steps=10, x_init=x_init)
+    assert float(jnp.max(jnp.abs(a - b))) == 0.0
+
+
+def test_ddim_step_scan_matches_sample():
+    """Driving ddim_step by hand (per-sample timesteps) reproduces the
+    whole-trajectory sampler."""
+    s = linear_schedule(100)
+    eps_fn = lambda x, t: 0.1 * x
+    rng = jax.random.PRNGKey(3)
+    out = ddim_sample(eps_fn, s, rng, (2, 8, 8, 3), num_steps=5)
+    _, rng_init = jax.random.split(rng)
+    x = jax.random.normal(rng_init, (2, 8, 8, 3), jnp.float32)
+    ts = ddim_timesteps(100, 5)
+    ts_prev = jnp.concatenate([ts[1:], jnp.full((1,), -1, ts.dtype)])
+    for i in range(5):
+        t = jnp.full((2,), ts[i], jnp.int32)
+        x = ddim_step(x, t, ts_prev[i], eps_fn(x, t), s, eta=0.0)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(out),
+                               rtol=0, atol=1e-6)
+
+
+def test_ddim_eta_pos_stream_compat():
+    """eta>0 keeps the pre-refactor RNG stream: one split + one z draw
+    per step, drawn before the update — locked against an inline
+    re-implementation of the old sampler."""
+    T, S, eta, shape = 100, 6, 0.5, (2, 8, 8, 3)
+    s = linear_schedule(T)
+    eps_fn = lambda x, t: 0.1 * x
+    out = ddim_sample(eps_fn, s, jax.random.PRNGKey(5), shape,
+                      num_steps=S, eta=eta)
+
+    rng = jax.random.PRNGKey(5)
+    rng, rng_init = jax.random.split(rng)
+    x = jax.random.normal(rng_init, shape, jnp.float32)
+    ts = np.asarray(ddim_timesteps(T, S))
+    for i in range(S):
+        t = jnp.full((shape[0],), int(ts[i]), jnp.int32)
+        eps = eps_fn(x, t)
+        abar_t = s.alpha_bars[int(ts[i])]
+        abar_prev = s.alpha_bars[int(ts[i + 1])] if i + 1 < S else 1.0
+        x0 = jnp.clip((x - jnp.sqrt(1 - abar_t) * eps) / jnp.sqrt(abar_t),
+                      -1.0, 1.0)
+        sigma = eta * jnp.sqrt((1 - abar_prev) / (1 - abar_t)) \
+            * jnp.sqrt(1 - abar_t / abar_prev)
+        rng, rng_z = jax.random.split(rng)
+        z = jax.random.normal(rng_z, shape, jnp.float32)
+        x = jnp.sqrt(abar_prev) * x0 \
+            + jnp.sqrt(jnp.maximum(1 - abar_prev - sigma ** 2, 0.0)) * eps \
+            + sigma * z
+    np.testing.assert_allclose(np.asarray(x), np.asarray(out),
+                               rtol=0, atol=1e-5)

@@ -53,6 +53,47 @@ def test_serve_step_greedy(rng):
     assert int(cache["pos"][0]) == 4
 
 
+def test_reset_cache_slots(rng):
+    """Blending fresh state into one slot's rows restores init state
+    there and leaves the other slots' rows untouched."""
+    cfg = smoke_variant("gemma2-2b")
+    serve = jax.jit(build_serve_step(cfg))
+    params = model.init(rng, cfg)
+    fresh = model.init_cache(params, cfg, 2, 16)
+    cache = fresh
+    toks = jnp.ones((2, 1), jnp.int32)
+    for _ in range(3):
+        toks, cache = serve(params, cache, toks)
+    reset0 = model.reset_cache_slots(cache, fresh,
+                                     jnp.asarray([True, False]))
+    assert int(reset0["pos"][0]) == 0 and int(reset0["pos"][1]) == 3
+    # resetting every slot restores init_cache exactly; resetting none
+    # is the identity — including non-zero init leaves (ring kv_pos=-1)
+    reset_all = model.reset_cache_slots(cache, fresh,
+                                        jnp.asarray([True, True]))
+    reset_none = model.reset_cache_slots(cache, fresh,
+                                         jnp.asarray([False, False]))
+    for got, want in ((reset_all, fresh), (reset_none, cache)):
+        for leaf_g, leaf_w in zip(jax.tree.leaves(got),
+                                  jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(leaf_g),
+                                          np.asarray(leaf_w))
+
+
+def test_serve_requests_refill_isolated(rng):
+    """Regression: a refilled slot must not leak the previous request's
+    KV rows or token — request output is a function of its id only."""
+    from repro.launch.serve import serve_requests
+    cfg = smoke_variant("gemma2-2b")
+    params = model.init(rng, cfg)
+    kw = dict(requests=4, max_tokens=4, cache_len=16, seed=0)
+    refilled = serve_requests(params, cfg, slots=2, **kw)
+    isolated = serve_requests(params, cfg, slots=4, **kw)
+    for rid in range(4):
+        assert refilled["outputs"][rid] == isolated["outputs"][rid], \
+            f"request {rid} output depends on slot history"
+
+
 def test_master_weights_for_bf16(rng):
     cfg = smoke_variant("internlm2-20b").replace(param_dtype="bfloat16")
     params = model.init(rng, cfg)

@@ -1,0 +1,229 @@
+"""Serving-layer tests: continuous-batching DDIM server, masked-serving
+parity, checkpoint artifact loading, masked MACs accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.configs import SMOKE_UNET
+from repro.configs.base import config_to_dict
+from repro.core import pruning as P
+from repro.diffusion import ddim_sample
+from repro.diffusion.sampling import sample_images
+from repro.diffusion.schedule import linear_schedule
+from repro.metrics.flops import unet_macs
+from repro.models import model
+from repro.models.unet import apply_unet
+from repro.serve import (DiffusionServer, Request, load_serving_artifact,
+                         masks_for_ratio)
+
+CFG = SMOKE_UNET
+SHAPE1 = (1, CFG.image_size, CFG.image_size, CFG.in_channels)
+
+
+@pytest.fixture(scope="module")
+def unet_params():
+    return model.init(jax.random.PRNGKey(0), CFG)
+
+
+def _standalone(params, seed, *, steps, eta=0.0, masks=None):
+    """Reference: one request sampled outside the server."""
+    sched = linear_schedule(CFG.diffusion_steps)
+    eps_fn = lambda x, t: apply_unet(params, CFG, x, t, masks=masks)
+    out = ddim_sample(eps_fn, sched, jax.random.PRNGKey(seed), SHAPE1,
+                      num_steps=steps, eta=eta)
+    return np.asarray(out[0])
+
+
+# -- continuous batching ------------------------------------------------------
+
+def test_server_matches_standalone_mixed_depths(unet_params):
+    """4 requests through 2 slots: refilled slots serve later requests at
+    different depths than their neighbours, yet every output is bitwise
+    the standalone ddim_sample for that request's seed — and the tick
+    never recompiles."""
+    srv = DiffusionServer(unet_params, CFG, slots=2, num_steps=4)
+    reqs = [Request(rid=i, seed=100 + i) for i in range(4)]
+    res = srv.run(reqs)
+    assert sorted(res.images) == [0, 1, 2, 3]
+    assert srv.compile_count() == 1, "slot occupancy/depth must be data"
+    for r in reqs:
+        want = _standalone(unet_params, r.seed, steps=4)
+        np.testing.assert_array_equal(res.images[r.rid], want)
+
+
+def test_server_eta_pos_matches_standalone(unet_params):
+    """eta>0: the per-slot z stream reproduces ddim_sample's
+    split-then-draw sequence per request, slot history irrelevant."""
+    srv = DiffusionServer(unet_params, CFG, slots=2, num_steps=3, eta=1.0)
+    res = srv.run([Request(rid=i, seed=7 + i) for i in range(3)])
+    assert srv.compile_count() == 1
+    for i in range(3):
+        want = _standalone(unet_params, 7 + i, steps=3, eta=1.0)
+        np.testing.assert_array_equal(res.images[i], want)
+
+
+def test_server_kill_then_refill_isolated(unet_params):
+    """A killed request's slot must serve its successor exactly as a
+    fresh server would — no leakage of the dead request's state."""
+    srv = DiffusionServer(unet_params, CFG, slots=1, num_steps=4)
+    srv.submit(Request(rid=0, seed=1))
+    srv.step()                                   # rid 0 partway through
+    assert srv.kill(0)
+    assert not srv.kill(0)                       # already gone
+    res = srv.run([Request(rid=1, seed=2)])
+    assert list(res.images) == [1]
+    np.testing.assert_array_equal(res.images[1],
+                                  _standalone(unet_params, 2, steps=4))
+
+
+def test_server_queue_faults_degrade_gracefully(unet_params):
+    """A request source that raises between requests is recorded as a
+    fault; every request it does manage to yield still gets served."""
+    reqs = iter([Request(rid=0, seed=3), None, Request(rid=1, seed=4)])
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] % 2 == 0:
+            raise ConnectionError("queue hiccup")
+        try:
+            return next(reqs)
+        except StopIteration:
+            raise StopIteration
+
+    srv = DiffusionServer(unet_params, CFG, slots=2, num_steps=3)
+    res = srv.run(flaky, idle_limit=5)
+    assert sorted(res.images) == [0, 1]
+    assert any("fault" in f for f in res.faults)
+    for rid, seed in ((0, 3), (1, 4)):
+        np.testing.assert_array_equal(res.images[rid],
+                                      _standalone(unet_params, seed, steps=3))
+
+
+def test_server_idle_limit_stops_empty_source(unet_params):
+    """A source that only times out (yields None) ends the run after
+    idle_limit polls with the condition recorded, not a hang."""
+    srv = DiffusionServer(unet_params, CFG, slots=2, num_steps=3)
+    res = srv.run(lambda: None, idle_limit=3)
+    assert res.images == {}
+    assert any("idle limit" in f for f in res.faults)
+
+
+def test_server_fault_limit_stops_dead_source(unet_params):
+    def dead():
+        raise ConnectionError("down")
+
+    srv = DiffusionServer(unet_params, CFG, slots=2, num_steps=3)
+    res = srv.run(dead, fault_limit=3)
+    assert res.images == {}
+    assert any("fault limit" in f for f in res.faults)
+
+
+# -- masked serving parity ----------------------------------------------------
+
+def _masks_and_zeroed(params, as_numpy):
+    groups = P.build_groups(CFG, params)
+    masks = P.make_masks(P.l2_scores(params, groups), groups, 0.44)
+    zeroed = P.apply_masks(params, groups, masks)
+    if as_numpy:
+        masks = {k: np.asarray(v) for k, v in masks.items()}
+    return masks, zeroed
+
+
+@pytest.mark.parametrize("backend,as_numpy,atol", [
+    ("xla", False, 0.0),      # training-time multiply-by-zero path
+    ("ref", False, 0.0),
+    ("xla", True, 1e-5),      # static gather-GEMM specialization
+    ("pallas", True, 1e-5),
+])
+def test_masked_sampling_equals_prezeroed_dense(unet_params, backend,
+                                                as_numpy, atol):
+    """DDIM trajectories with masks= must match sampling from
+    apply_masks-pre-zeroed dense weights: exactly for device masks
+    (same multiplies in the same order), atol 1e-5 for the static
+    host-mask specialization (reduced GEMMs reassociate the sums)."""
+    cfg = CFG.replace(backend=backend)
+    masks, zeroed = _masks_and_zeroed(unet_params, as_numpy)
+    steps, n = (2, 1) if backend == "pallas" else (3, 2)
+    got = sample_images(unet_params, cfg, n=n, steps=steps, seed=11,
+                        masks=masks)
+    want = sample_images(zeroed, cfg, n=n, steps=steps, seed=11)
+    np.testing.assert_allclose(got, want, rtol=0, atol=atol)
+
+
+def test_server_masked_matches_prezeroed_dense(unet_params):
+    """The serving hot path (static host masks) agrees with a dense
+    server over pre-zeroed weights, request by request."""
+    masks, zeroed = _masks_and_zeroed(unet_params, as_numpy=True)
+    reqs = [Request(rid=i, seed=50 + i) for i in range(3)]
+    got = DiffusionServer(unet_params, CFG, slots=2, num_steps=3,
+                          masks=masks).run(reqs)
+    want = DiffusionServer(zeroed, CFG, slots=2, num_steps=3).run(reqs)
+    for r in reqs:
+        np.testing.assert_allclose(got.images[r.rid], want.images[r.rid],
+                                   rtol=0, atol=1e-5)
+
+
+# -- checkpoint artifact ------------------------------------------------------
+
+def test_load_serving_artifact_roundtrip(unet_params, tmp_path):
+    """Both metadata flavours — trainer cfg dict and runner spec — load
+    into a servable (params, cfg) that samples identically to the
+    in-memory params."""
+    p_cfg = str(tmp_path / "ckpt_cfg.npz")
+    checkpoint.save(p_cfg, {"params": unet_params},
+                    {"cfg": config_to_dict(CFG)})
+    p_spec = str(tmp_path / "ckpt_spec.npz")
+    checkpoint.save(p_spec, {"params": unet_params},
+                    {"spec": {"model": "ddpm-unet-smoke"}})
+    want = _standalone(unet_params, 9, steps=3)
+    for path in (p_cfg, p_spec):
+        params, cfg, _ = load_serving_artifact(path)
+        assert cfg.arch_type == "unet"
+        assert cfg.image_size == CFG.image_size
+        res = DiffusionServer(params, cfg, slots=1, num_steps=3).run(
+            [Request(rid=0, seed=9)])
+        np.testing.assert_array_equal(res.images[0], want)
+
+
+def test_load_serving_artifact_rejects_token_models(rng, tmp_path):
+    from repro.configs import smoke_variant
+    cfg = smoke_variant("gemma2-2b")
+    params = model.init(rng, cfg)
+    path = str(tmp_path / "tok.npz")
+    checkpoint.save(path, {"params": params}, {"cfg": config_to_dict(cfg)})
+    with pytest.raises(ValueError, match="arch_type"):
+        load_serving_artifact(path)
+
+
+def test_load_serving_artifact_requires_params(tmp_path):
+    path = str(tmp_path / "empty.npz")
+    checkpoint.save(path, {"stats": {"x": np.zeros(3)}}, {})
+    with pytest.raises(ValueError, match="params"):
+        load_serving_artifact(path)
+
+
+def test_masks_for_ratio_static_and_sparse(unet_params):
+    masks = masks_for_ratio(unet_params, CFG, 0.44)
+    assert masks and all(isinstance(m, np.ndarray) for m in masks.values())
+    kept = sum(int(m.sum()) for m in masks.values())
+    total = sum(m.size for m in masks.values())
+    assert kept < total                          # actually pruned
+    with pytest.raises(ValueError):
+        masks_for_ratio(unet_params, CFG, 0.44, criterion="nope")
+
+
+# -- honest FLOPs -------------------------------------------------------------
+
+def test_unet_macs_masked_accounting(unet_params):
+    """Masked MACs count only kept channels: all-ones masks reproduce
+    the dense figure exactly; 44% pruning lands strictly below dense and
+    above the naive density-squared lower bound's floor of zero."""
+    dense = unet_macs(unet_params, CFG.image_size)
+    masks = masks_for_ratio(unet_params, CFG, 0.44)
+    ones = {k: np.ones_like(m) for k, m in masks.items()}
+    assert unet_macs(unet_params, CFG.image_size, masks=ones) == dense
+    pruned = unet_macs(unet_params, CFG.image_size, masks=masks)
+    assert 0 < pruned < dense
