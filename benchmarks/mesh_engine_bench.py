@@ -1,0 +1,130 @@
+"""Mesh-sharded round A/B: the vectorized engine with the client axis
+laid over an 8-device ``{"data": 8, "model": 1}`` mesh vs the same
+engine unsharded, identical config and numerics (asserted in-child to
+atol 1e-5).
+
+XLA reads ``--xla_force_host_platform_device_count`` once, at backend
+init, so the A/B runs in a subprocess under ``repro.launch.env
+.child_env(8)`` (the same pattern as tests/test_mesh_engine.py); the
+child prints the timing rows and this wrapper re-emits them into the
+harness CSV / $BENCH_OUT_DIR medians.
+
+Reading the rows: ``ratio=<x>x`` on the sharded row is sharded-over-
+unsharded wall-clock and is INFORMATIONAL — on a shared-core CI box
+eight fake devices time-slice the same cores and the shard_map's
+collective permutes are pure overhead, so the ratio sits below 1.0 by
+construction.  The row exists to pin the sharded path's latency (the
+3x latency tolerance still gates it) and to report real scaling on
+accelerator-backed meshes, where the client axis buys wall-clock.
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+
+from benchmarks.common import dump_bench_json, emit
+from repro.launch import env as launch_env
+
+DEVICES = 8
+
+_CHILD = r"""
+from repro.launch import env
+env.apply({devices})                  # before the first jax backend init
+
+import time
+import jax
+import numpy as np
+assert len(jax.devices()) == {devices}, jax.devices()
+
+from repro.configs import SMOKE_UNET
+from repro.configs.base import FLConfig
+from repro.core.hfl import FedPhD
+from repro.data import ClientData, shards_per_client
+from repro.data.synthetic import DatasetSpec, make_dataset
+from repro.fl.client import Client
+from repro.launch.mesh import make_spec_mesh
+
+NUM_CLIENTS = {devices}
+NUM_EDGES = 2
+BATCH = 1
+TIMED_ROUNDS = 3
+
+MICRO_UNET = SMOKE_UNET.replace(name='ddpm-unet-micro-mesh', image_size=4,
+                                base_channels=8, channel_mults=(1,),
+                                num_res_blocks=1, attn_resolutions=())
+MICRO_DATA = DatasetSpec('bench-micro-mesh', num_classes=4, image_size=4,
+                         samples_per_class=64)
+
+
+def clients(seed=0):
+    images, labels = make_dataset(MICRO_DATA, seed=seed)
+    parts = shards_per_client(labels, num_clients=NUM_CLIENTS,
+                              classes_per_client=1, seed=seed)
+    return [Client(i, ClientData(images[p], labels[p], batch_size=BATCH,
+                                 seed=i), MICRO_DATA.num_classes)
+            for i, p in enumerate(parts)]
+
+
+def fl():
+    return FLConfig(num_clients=NUM_CLIENTS, num_edges=NUM_EDGES,
+                    local_epochs=2, edge_agg_every=1,
+                    cloud_agg_every=10 ** 6,
+                    rounds=2 * TIMED_ROUNDS + 2, sh_a=1000.0)
+
+
+mesh = make_spec_mesh({{'data': {devices}, 'model': 1}})
+plain = FedPhD(MICRO_UNET, fl(), clients(), rng_seed=0,
+               engine='vectorized', prune=False)
+shard = FedPhD(MICRO_UNET, fl(), clients(), rng_seed=0,
+               engine='vectorized', prune=False, mesh=mesh)
+plain.run_round(1)                    # warmup: jit compile
+shard.run_round(1)
+
+t_plain, t_shard = [], []
+r = 2
+for _ in range(TIMED_ROUNDS):         # interleave against CPU drift
+    t0 = time.perf_counter()
+    plain.run_round(r)
+    t_plain.append(time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    shard.run_round(r + 1)
+    t_shard.append(time.perf_counter() - t0)
+    r += 2
+
+# the A/B is only meaningful if the two paths agree numerically
+for a, b in zip(plain.history, shard.history):
+    assert abs(a.loss - b.loss) < 1e-5, (a.round, a.loss, b.loss)
+    assert a.comm_gb == b.comm_gb
+for x, y in zip(jax.tree.leaves(plain.params),
+                jax.tree.leaves(shard.params)):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+us_plain = float(np.median(t_plain)) * 1e6
+us_shard = float(np.median(t_shard)) * 1e6
+ratio = us_plain / max(us_shard, 1e-9)
+shape = f'C={{NUM_CLIENTS}};E={{NUM_EDGES}};B={{BATCH}};devices={devices}'
+print(f'ROW mesh_engine/unsharded/round,{{us_plain:.1f}},{{shape}}')
+print(f'ROW mesh_engine/sharded/round,{{us_shard:.1f}},'
+      f'{{shape}};ratio={{ratio:.2f}}x')
+"""
+
+
+def main() -> None:
+    script = _CHILD.format(devices=DEVICES)
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=1800,
+                         env=launch_env.child_env(DEVICES))
+    if res.returncode != 0:
+        raise RuntimeError("mesh_engine A/B child failed:\n"
+                           + res.stdout + res.stderr)
+    rows = [ln[len("ROW "):] for ln in res.stdout.splitlines()
+            if ln.startswith("ROW ")]
+    assert len(rows) == 2, res.stdout
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        emit(name, float(us), derived)
+    dump_bench_json("mesh_engine")
+
+
+if __name__ == "__main__":
+    main()

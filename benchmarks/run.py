@@ -21,9 +21,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (baseline_engine_bench, fig1_divergence,
-                            fig5_selection, kernels_bench, roofline_report,
-                            round_engine_bench, serve_bench, table1_quality,
-                            table3_pruning, table4_efficiency,
+                            fig5_selection, kernels_bench, mesh_engine_bench,
+                            roofline_report, round_engine_bench, serve_bench,
+                            table1_quality, table3_pruning, table4_efficiency,
                             table5_scalability)
 
     modules = {
@@ -33,6 +33,7 @@ def main() -> None:
         "kernels": kernels_bench,
         "round_engine": round_engine_bench,
         "baseline_engine": baseline_engine_bench,
+        "mesh_engine": mesh_engine_bench,   # subprocess: 8 fake devices
         "serve": serve_bench,
         "roofline": roofline_report,
         "fig1": fig1_divergence,        # FL training (slow) last

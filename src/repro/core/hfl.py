@@ -31,8 +31,10 @@ from repro.core.sh_score import AccumulatedDistribution, sh_score, uniform_targe
 from repro.data.pipeline import stack_round
 from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
-from repro.fl.engine import (make_round_engine, resolve_engine, route_engine,
-                             stacked_adam_init, tree_gather, tree_scatter)
+from repro.fl.engine import (adam_stack_from_tree, make_round_engine,
+                             resolve_engine, resolve_store, route_engine,
+                             stacked_adam_init, store_tree, tree_gather,
+                             tree_scatter)
 from repro.fl.faults import (FaultSpec, apply_late, late_delta,
                              make_fault_model)
 # RoundRecord is re-exported here for compatibility: it moved to
@@ -40,7 +42,7 @@ from repro.fl.faults import (FaultSpec, apply_late, late_delta,
 from repro.fl.record import RoundRecord, RunResult, evals_of
 from repro.models import model
 from repro.models.ops import resolve_backend
-from repro.optim import adam_from_tree, adam_init
+from repro.optim import adam_init
 
 
 class FedPhD:
@@ -62,12 +64,19 @@ class FedPhD:
             | "ref"; "" resolves via $FEDPHD_BACKEND at construction
             and the concrete name is baked into self.cfg).
     persistent_opt: carry per-client Adam moments across rounds in a
-            stacked (N, ...) device buffer, gathered/scattered by each
-            round's participation selection.  Off by default (the paper
-            restarts Adam every round); moments reset when pruning
-            changes the parameter shapes at r = R_s.
+            stacked (N, ...) buffer, gathered/scattered by each round's
+            participation selection.  Off by default (the paper restarts
+            Adam every round); moments reset when pruning changes the
+            parameter shapes at r = R_s.
+    state_store: where that stacked buffer lives — "device", "host"
+            (numpy; only the participating rows move to device per
+            round, so a 10k-client population with 1% participation
+            fits), or "auto" (host when N >> participants — see
+            repro.fl.engine.resolve_store).
     mesh:   optional jax mesh; the stacked client axis of the vectorized
-            engine is laid over ``client_axis`` (launch/federated.py).
+            engine is laid over ``client_axis`` inside the round engine
+            (launch/federated.py shard_clients), so one run's vmapped
+            local training partitions across devices.
     eval_fn/eval_every: the unified eval-hook contract —
             ``eval_fn(params, cfg, round)`` is called every
             ``eval_every`` rounds and its result stored in
@@ -78,7 +87,7 @@ class FedPhD:
                  *, rng_seed: int = 0, selection: str = "sh",
                  aggregation: str = "sh", prune: bool = True,
                  lr: float = 2e-4, engine: Optional[str] = None,
-                 persistent_opt: bool = False,
+                 persistent_opt: bool = False, state_store: str = "auto",
                  mesh=None, client_axis: str = "data",
                  eval_fn: Optional[Callable] = None, eval_every: int = 0,
                  fault: Optional[FaultSpec] = None):
@@ -97,6 +106,9 @@ class FedPhD:
         self._warned_ragged = False
         self.mesh = mesh
         self.client_axis = client_axis
+        self._store = resolve_store(
+            state_store, len(clients),
+            max(1, round(fl.participation * len(clients))))
         self.eval_fn = eval_fn
         self.eval_every = eval_every
         self.np_rng = np.random.default_rng(rng_seed)
@@ -152,9 +164,12 @@ class FedPhD:
                                           lr=self.lr)
         self._engine_sparse = make_round_engine(
             self.cfg, self.fl, sparse=True, groups=self.groups,
-            lr=self.lr) if sparse else None
+            lr=self.lr, mesh=self.mesh,
+            client_axis=self.client_axis) if sparse else None
         self._engine_plain = make_round_engine(self.cfg, self.fl,
-                                               sparse=False, lr=self.lr)
+                                               sparse=False, lr=self.lr,
+                                               mesh=self.mesh,
+                                               client_axis=self.client_axis)
         # one Adam zero-tree per model shape, shared by every client in
         # every sequential round (the vectorized engine builds its own
         # in-program constant)
@@ -162,7 +177,8 @@ class FedPhD:
         # persistent per-client moments: a stacked (N, ...) buffer both
         # engines gather/scatter by participation.  Rebuilt (i.e. reset
         # to zeros) whenever pruning changes the parameter shapes.
-        self._opt_stack = stacked_adam_init(self.params, len(self.clients)) \
+        self._opt_stack = stacked_adam_init(self.params, len(self.clients),
+                                            host=self._store == "host") \
             if self.persistent_opt else None
 
     # -- bookkeeping ----------------------------------------------------------
@@ -332,18 +348,18 @@ class FedPhD:
                         if ee == e and cid in late:
                             w_late[e, i] = self.clients[cid].n_samples / tot
 
-        if self.mesh is not None:
-            from repro.launch.federated import shard_clients
-            batches, valid, rngs = (
-                shard_clients(t, self.mesh, self.client_axis)
-                for t in (batches, valid, rngs))
-
+        # self.mesh (when set) is handled INSIDE the engine: the
+        # _make_sharded_engine wrapper lays every client-leading operand
+        # over the mesh's client axis before dispatch
         engine = self._engine_sparse if sparse_round else self._engine_plain
         idx_arr = np.asarray([cid for _, cid in order])
+        # host-store gathered rows are numpy: stage them to device
+        # explicitly so the engine's opt_states donation stays live
         out = engine(edge_stack, edge_idx, batches, valid, rngs,
                      jnp.asarray(w_mat),
-                     opt_states=(tree_gather(self._opt_stack, idx_arr)
-                                 if self.persistent_opt else None),
+                     opt_states=(store_tree(
+                         tree_gather(self._opt_stack, idx_arr), "device")
+                         if self.persistent_opt else None),
                      w_late=(jnp.asarray(w_late) if any_late else None),
                      masked=masked, per_client_opt=self.persistent_opt)
         if self.persistent_opt:
@@ -640,4 +656,5 @@ class FedPhD:
         self.history = [RoundRecord.from_dict(d) for d in meta["history"]]
         self._rebuild_steps()
         if self.persistent_opt:
-            self._opt_stack = adam_from_tree(arrays["opt_stack"])
+            self._opt_stack = adam_stack_from_tree(arrays["opt_stack"],
+                                                   self._store)

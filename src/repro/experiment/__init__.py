@@ -23,10 +23,16 @@ from repro.experiment.report import (build_report, report_markdown,
                                      run_scalars, write_report)
 from repro.experiment.run import (Experiment, checkpoint_exists, run_spec)
 from repro.experiment.spec import (TOPOLOGIES, DataSpec, ExperimentSpec)
-from repro.experiment.sweep import (SweepResult, SweepRun, SweepSpec,
+from repro.experiment.cluster import (ClusterClient, FakeCluster, JobStatus,
+                                      K8sCluster, K8sExecutor, render_job,
+                                      worker_main)
+from repro.experiment.sweep import (EXECUTORS, ExecContext, Executor,
+                                    ProcessExecutor, SequentialExecutor,
+                                    SweepResult, SweepRun, SweepSpec,
                                     load_manifest, manifest_path,
-                                    manifest_status, run_id_of, run_sweep,
-                                    spec_get, spec_with)
+                                    manifest_status, resolve_executor,
+                                    run_id_of, run_sweep, spec_get,
+                                    spec_with)
 from repro.experiment.trainer import Trainer
 from repro.fl.faults import FaultModel, FaultSpec
 from repro.fl.record import RoundRecord, RunResult, evals_of
@@ -41,5 +47,9 @@ __all__ = ["DATASETS", "dataset_spec", "make_clients", "register_dataset",
            "SweepResult", "SweepRun", "SweepSpec", "load_manifest",
            "manifest_path", "manifest_status", "run_id_of", "run_sweep",
            "spec_get", "spec_with",
+           "EXECUTORS", "ExecContext", "Executor", "ProcessExecutor",
+           "SequentialExecutor", "resolve_executor",
+           "ClusterClient", "FakeCluster", "JobStatus", "K8sCluster",
+           "K8sExecutor", "render_job", "worker_main",
            "build_report", "report_markdown", "run_scalars",
            "write_report"]

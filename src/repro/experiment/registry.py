@@ -74,6 +74,14 @@ def make_trainer(spec: ExperimentSpec, cfg: ModelConfig,
 # Built-in methods.
 # ---------------------------------------------------------------------------
 
+def _spec_mesh(spec: ExperimentSpec):
+    """``spec.mesh`` ({axis -> size} or None) to a live jax Mesh."""
+    if not spec.mesh:
+        return None
+    from repro.launch.mesh import make_spec_mesh   # lazy: touches devices
+    return make_spec_mesh(spec.mesh)
+
+
 def _fedphd_factory(prune_mode: str = "",
                     aggregation: str = "") -> TrainerFactory:
     def make(spec: ExperimentSpec, cfg, clients, eval_fn):
@@ -86,6 +94,7 @@ def _fedphd_factory(prune_mode: str = "",
                       aggregation=aggregation or spec.aggregation,
                       prune=spec.prune, lr=spec.lr, engine=spec.engine,
                       persistent_opt=spec.persistent_opt,
+                      state_store=spec.state_store, mesh=_spec_mesh(spec),
                       eval_fn=eval_fn, eval_every=spec.eval_every,
                       fault=spec.fault)
     return make
@@ -96,6 +105,8 @@ def _flat_factory(method: str, aggregation: str = "fedavg") -> TrainerFactory:
         return FlatTrainer(method, cfg, spec.fl, clients, lr=spec.lr,
                            rng_seed=spec.seed, engine=spec.engine,
                            persistent_opt=spec.persistent_opt,
+                           state_store=spec.state_store,
+                           mesh=_spec_mesh(spec),
                            eval_fn=eval_fn, eval_every=spec.eval_every,
                            aggregation=aggregation, fault=spec.fault)
     return make

@@ -71,11 +71,24 @@ def build_parser() -> argparse.ArgumentParser:
     src.add_argument("--sweep", help="path to a SweepSpec JSON file: run "
                                      "the whole grid with a resumable "
                                      "manifest + aggregated report")
-    ap.add_argument("--executor", choices=("sequential", "process"),
-                    help="[--sweep] run the grid in-process (default) or "
-                         "over a spawn-context process pool")
+    ap.add_argument("--executor", choices=("sequential", "process", "k8s"),
+                    help="[--sweep] run the grid in-process (default), "
+                         "over a spawn-context process pool, or as one "
+                         "Kubernetes Job per grid point over shared "
+                         "storage")
     ap.add_argument("--max-workers", type=int,
-                    help="[--sweep --executor process] pool size")
+                    help="[--sweep --executor process|k8s] pool size / "
+                         "max in-flight Jobs")
+    ap.add_argument("--k8s-fake", action="store_true",
+                    help="[--sweep --executor k8s] drive the executor "
+                         "against the in-memory FakeCluster (no cluster, "
+                         "no kubernetes package — the CI smoke path)")
+    ap.add_argument("--image", default="repro:latest",
+                    help="[--sweep --executor k8s] container image for "
+                         "worker Jobs (default: repro:latest)")
+    ap.add_argument("--namespace", default=None,
+                    help="[--sweep --executor k8s] Kubernetes namespace "
+                         "(default: default)")
     ap.add_argument("--max-runs", type=int,
                     help="[--sweep] stop after this many run attempts "
                          "in THIS invocation (failures count); the "
@@ -162,10 +175,21 @@ def _main_sweep(args: argparse.Namespace) -> SweepResult:
     if args.rounds is not None:
         sweep = sweep.replace(rounds=args.rounds)
     executor = args.executor or "sequential"
-    if args.max_workers is not None and executor != "process":
+    if args.max_workers is not None and executor not in ("process", "k8s"):
         raise SystemExit("--max-workers requires --executor process "
-                         "(the sequential executor runs one grid point "
-                         "at a time)")
+                         "or k8s (the sequential executor runs one grid "
+                         "point at a time)")
+    if (args.k8s_fake or args.namespace is not None) and executor != "k8s":
+        raise SystemExit("--k8s-fake/--namespace require --executor k8s")
+    if executor == "k8s":
+        # construct the executor here so --k8s-fake can inject the
+        # in-memory cluster double (no kubernetes package needed)
+        from repro.experiment.cluster import FakeCluster, K8sExecutor
+        executor = K8sExecutor(
+            cluster=FakeCluster() if args.k8s_fake else None,
+            image=args.image, namespace=args.namespace or "default",
+            max_workers=args.max_workers,
+            poll_s=0.0 if args.k8s_fake else 2.0)
     # the CLI's eval hook is live only on the sequential executor (a
     # Python callable can't cross the spawn boundary) and only fires
     # where a spec's eval_every says so
@@ -202,8 +226,13 @@ def main(argv: Optional[Sequence[str]] = None
                                   ("--max-runs", args.max_runs),
                                   ("--group-by", args.group_by),
                                   ("--timeout-s", args.timeout_s),
-                                  ("--max-retries", args.max_retries))
+                                  ("--max-retries", args.max_retries),
+                                  ("--namespace", args.namespace))
            if val is not None]
+    if args.k8s_fake:
+        bad.append("--k8s-fake")
+    if args.image != "repro:latest":
+        bad.append("--image")
     if bad:
         raise SystemExit(f"{', '.join(bad)} require --sweep")
     ckpt = os.path.join(args.out, "ckpt.npz")

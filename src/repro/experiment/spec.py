@@ -56,6 +56,15 @@ class ExperimentSpec:
                                     # (None = $FEDPHD_BACKEND or xla);
                                     # threaded into ModelConfig.backend
     persistent_opt: bool = False
+    state_store: str = "auto"       # stacked per-client state residency:
+                                    # auto | device | host (host keeps
+                                    # the (N,) buffers in numpy and
+                                    # stages only participants per round)
+    mesh: Optional[dict] = None     # {axis name -> size}, e.g.
+                                    # {"data": 8, "model": 1}: lay the
+                                    # round engine's client axis over
+                                    # "data" (repro.launch.mesh.
+                                    # make_spec_mesh); None = unsharded
     lr: float = 2e-4
     eval_every: int = 0             # 0 = never call the eval hook
     seed: int = 0
@@ -81,6 +90,9 @@ class ExperimentSpec:
             d["data"] = DataSpec(**d["data"])
         if isinstance(d.get("fault"), dict):
             d["fault"] = FaultSpec.from_dict(d["fault"])
+        if isinstance(d.get("mesh"), dict):
+            # JSON numbers may arrive as floats; axis sizes are ints
+            d["mesh"] = {str(k): int(v) for k, v in d["mesh"].items()}
         known = {k: v for k, v in d.items()
                  if k in {f.name for f in dataclasses.fields(cls)}}
         return cls(**known)

@@ -28,9 +28,15 @@ run checkpoints into its own ``runs/<run_id>/ckpt.npz`` at run_spec's
 ``save_every`` cadence, so a killed sweep resumes **mid-grid** (done
 runs are skipped via the manifest) *and* **mid-run** (the partial
 checkpoint is picked up via ``run_spec(resume=True)``, reusing the
-bitwise kill-and-resume contract from the experiment API).  Executors:
-``sequential`` (in-process, supports a Python ``eval_fn``) or
-``process`` (a spawn-context process pool for grid-level parallelism).
+bitwise kill-and-resume contract from the experiment API).
+
+Execution is pluggable (:class:`Executor`): ``sequential`` (in-process,
+supports a Python ``eval_fn``), ``process`` (a spawn-context process
+pool for grid-level parallelism), or ``k8s``
+(:class:`repro.experiment.cluster.K8sExecutor` — one containerized Job
+per grid point over shared storage, testable in-memory via
+``FakeCluster``).  ``run_sweep(executor=...)`` takes either a name or a
+constructed executor instance.
 
 Aggregation lives in :mod:`repro.experiment.report`; the CLI front end
 is ``python -m repro.experiment.runner --sweep sweep.json``.
@@ -52,7 +58,7 @@ from repro.experiment.spec import ExperimentSpec
 
 MANIFEST_FORMAT = 1
 MANIFEST_NAME = "sweep.json"
-EXECUTORS = ("sequential", "process")
+EXECUTORS = ("sequential", "process", "k8s")
 STATUSES = ("pending", "running", "done", "failed")
 
 
@@ -399,6 +405,121 @@ def _attempt(spec_dict: dict, ckpt: str, rounds: Optional[int],
             time.perf_counter() - t0)
 
 
+@dataclasses.dataclass
+class ExecContext:
+    """Everything an :class:`Executor` needs beyond the manifest: the
+    sweep definition and the run-level policy knobs of ``run_sweep``."""
+    sweep: SweepSpec
+    rounds: Optional[int] = None
+    save_every: int = 1
+    eval_fn: Any = None
+    raise_on_error: bool = False
+    timeout_s: Optional[float] = None
+    max_retries: int = 0
+    backoff_s: float = 1.0
+
+    def target_rounds(self, entry: Mapping[str, Any]) -> int:
+        return _target_rounds(self.sweep, entry)
+
+
+class Executor:
+    """One way of running the pending grid points of a sweep.
+
+    Subclasses set the capability flags (validated centrally by
+    ``run_sweep`` so every executor rejects unsupported knobs the same
+    way) and implement ``run``, which must drive each run-id in
+    ``order`` to ``done``/``failed`` under the shared manifest contract:
+    status transitions + ``write_manifest`` after every change, retries
+    with exponential backoff, quarantine on exhausted retries, and
+    ``raise_on_error`` aborting the grid with the failing run's error.
+    """
+    name = "abstract"
+    supports_eval_fn = False    # can a Python callable reach the run?
+    supports_timeout = False    # can a hung attempt be killed?
+
+    def run(self, man: dict, out: str, order: List[str],
+            ctx: ExecContext) -> None:
+        raise NotImplementedError
+
+
+class SequentialExecutor(Executor):
+    """In-process, one run at a time — the reference executor (and the
+    only one a Python ``eval_fn`` can reach)."""
+    name = "sequential"
+    supports_eval_fn = True
+    supports_timeout = False
+
+    def run(self, man: dict, out: str, order: List[str],
+            ctx: ExecContext) -> None:
+        for rid in order:
+            entry = man["runs"][rid]
+            ckpt = os.path.join(out, entry["ckpt"])
+            os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+            last_exc = None
+            for attempt in range(1, ctx.max_retries + 2):
+                if attempt > 1:
+                    time.sleep(ctx.backoff_s * 2 ** (attempt - 2))
+                entry["status"] = "running"
+                entry["attempts"] = int(entry.get("attempts") or 0) + 1
+                write_manifest(out, man)
+                try:
+                    history, wall_s = _attempt(entry["spec"], ckpt,
+                                               ctx.rounds, ctx.eval_fn,
+                                               ctx.save_every)
+                except Exception as e:  # noqa: BLE001 — recorded+retried
+                    last_exc = e
+                    entry["error"] = traceback.format_exc()
+                    entry["status"] = "pending"  # retry-eligible until
+                    write_manifest(out, man)     # the for-else quarantines
+                    continue
+                _finish_entry(entry, history, wall_s)
+                write_manifest(out, man)
+                break
+            else:
+                entry["status"] = "failed"        # retries exhausted
+                write_manifest(out, man)
+                if ctx.raise_on_error:
+                    raise last_exc
+
+
+class ProcessExecutor(Executor):
+    """Spawn-context process pool: one worker process per in-flight run,
+    wall-clock timeouts, grid-level parallelism."""
+    name = "process"
+    supports_eval_fn = False
+    supports_timeout = True
+
+    def __init__(self, max_workers: Optional[int] = None):
+        self.max_workers = max_workers
+
+    def run(self, man: dict, out: str, order: List[str],
+            ctx: ExecContext) -> None:
+        _run_procs(man, out, order, ctx.rounds, self.max_workers,
+                   ctx.save_every, ctx.raise_on_error, ctx.timeout_s,
+                   ctx.max_retries, ctx.backoff_s)
+
+
+def resolve_executor(executor, max_workers: Optional[int] = None):
+    """Name -> Executor instance; constructed instances pass through
+    (the injection point for ``K8sExecutor(cluster=FakeCluster())``)."""
+    if not isinstance(executor, str):
+        # duck-typed so injected executors (e.g. cluster.K8sExecutor,
+        # which avoids importing this module) need not subclass Executor
+        if not callable(getattr(executor, "run", None)):
+            raise TypeError(f"executor must be a name from {EXECUTORS} or "
+                            f"an Executor-like instance with .run(), got "
+                            f"{type(executor).__name__}")
+        return executor
+    if executor == "sequential":
+        return SequentialExecutor()
+    if executor == "process":
+        return ProcessExecutor(max_workers=max_workers)
+    if executor == "k8s":
+        from repro.experiment.cluster import K8sExecutor
+        return K8sExecutor(max_workers=max_workers)
+    raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
+
+
 def run_sweep(sweep: SweepSpec, out: str, *,
               executor: str = "sequential",
               max_workers: Optional[int] = None,
@@ -420,25 +541,30 @@ def run_sweep(sweep: SweepSpec, out: str, *,
     spin — and the manifest stays resumable (the CI smoke job uses it
     as a deterministic "kill").
 
-    ``executor="process"`` fans runs out over spawn-context worker
-    processes (one per in-flight run); a Python ``eval_fn`` cannot
-    cross that boundary (use the sequential executor, or bake evals
+    ``executor`` is a name from :data:`EXECUTORS` or a constructed
+    :class:`Executor`.  ``"process"`` fans runs out over spawn-context
+    worker processes (one per in-flight run); ``"k8s"`` submits one
+    containerized Job per run over shared storage
+    (:mod:`repro.experiment.cluster`).  A Python ``eval_fn`` cannot
+    cross either boundary (use the sequential executor, or bake evals
     into a registered method).
 
     Fault tolerance: a crashed run is retried up to ``max_retries``
     times with exponential backoff (``backoff_s * 2**(attempt-1)``),
     resuming from its last checkpoint each time; exhausted retries
     quarantine the run as ``status="failed"`` with the LAST attempt's
-    full traceback in ``entry["error"]`` while the rest of the grid
-    completes (unless ``raise_on_error``).  ``timeout_s`` (process
-    executor only) kills any single attempt exceeding the wall-clock
-    budget — a hung run cannot stall the grid.
+    error in ``entry["error"]`` while the rest of the grid completes
+    (unless ``raise_on_error``).  ``timeout_s`` (process/k8s executors)
+    kills any single attempt exceeding the wall-clock budget — a hung
+    run cannot stall the grid.
     """
-    if executor not in EXECUTORS:
-        raise ValueError(f"executor {executor!r} not in {EXECUTORS}")
-    if timeout_s is not None and executor != "process":
-        raise ValueError("timeout_s needs executor='process' (a hung "
-                         "in-process run cannot be interrupted)")
+    exe = resolve_executor(executor, max_workers)
+    if eval_fn is not None and not exe.supports_eval_fn:
+        raise ValueError("eval_fn cannot cross the process boundary; "
+                         "use executor='sequential'")
+    if timeout_s is not None and not exe.supports_timeout:
+        raise ValueError("timeout_s needs executor='process' or 'k8s' (a "
+                         "hung in-process run cannot be interrupted)")
     man = init_manifest(sweep, out)
     # a "done" run re-enters the queue when the target round count grew
     # (sweep.rounds raised, or the base fl.rounds edited in place)
@@ -448,43 +574,11 @@ def run_sweep(sweep: SweepSpec, out: str, *,
     if limit is not None:
         order = order[:max(limit, 0)]
 
-    if executor == "process":
-        if eval_fn is not None:
-            raise ValueError("eval_fn cannot cross the process boundary; "
-                             "use executor='sequential'")
-        _run_procs(man, out, order, sweep.rounds, max_workers, save_every,
-                   raise_on_error, timeout_s, max_retries, backoff_s)
-        return SweepResult(man, out)
-
-    for rid in order:
-        entry = man["runs"][rid]
-        ckpt = os.path.join(out, entry["ckpt"])
-        os.makedirs(os.path.dirname(ckpt), exist_ok=True)
-        last_exc = None
-        for attempt in range(1, max_retries + 2):
-            if attempt > 1:
-                time.sleep(backoff_s * 2 ** (attempt - 2))
-            entry["status"] = "running"
-            entry["attempts"] = int(entry.get("attempts") or 0) + 1
-            write_manifest(out, man)
-            try:
-                history, wall_s = _attempt(entry["spec"], ckpt,
-                                           sweep.rounds, eval_fn,
-                                           save_every)
-            except Exception as e:  # noqa: BLE001 — recorded + retried
-                last_exc = e
-                entry["error"] = traceback.format_exc()
-                entry["status"] = "pending"   # retry-eligible until the
-                write_manifest(out, man)      # loop below quarantines it
-                continue
-            _finish_entry(entry, history, wall_s)
-            write_manifest(out, man)
-            break
-        else:
-            entry["status"] = "failed"        # retries exhausted
-            write_manifest(out, man)
-            if raise_on_error:
-                raise last_exc
+    ctx = ExecContext(sweep=sweep, rounds=sweep.rounds,
+                      save_every=save_every, eval_fn=eval_fn,
+                      raise_on_error=raise_on_error, timeout_s=timeout_s,
+                      max_retries=max_retries, backoff_s=backoff_s)
+    exe.run(man, out, order, ctx)
     return SweepResult(man, out)
 
 

@@ -45,13 +45,15 @@ from repro.core.aggregation import (aggregate_fedavg, fedavg_weights,
 from repro.data.pipeline import stack_round
 from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
-from repro.fl.engine import (make_round_engine, resolve_engine, route_engine,
-                             stacked_adam_init, tree_gather, tree_scatter)
+from repro.fl.engine import (adam_stack_from_tree, make_round_engine,
+                             resolve_engine, resolve_store, route_engine,
+                             stacked_adam_init, stacked_zeros, store_tree,
+                             tree_gather, tree_scatter)
 from repro.fl.faults import (FaultSpec, apply_late, late_delta,
                              make_fault_model)
 from repro.fl.record import RoundRecord, RunResult, evals_of
 from repro.models import model
-from repro.optim import adam_from_tree, adam_init, adam_update
+from repro.optim import adam_init, adam_update
 
 FLAT_METHODS = ("fedavg", "fedprox", "feddiffuse", "moon", "scaffold")
 
@@ -115,7 +117,8 @@ class FlatTrainer:
     def __init__(self, method: str, cfg: ModelConfig, fl: FLConfig,
                  clients: List[Client], *, lr: float = 2e-4,
                  rng_seed: int = 0, engine: Optional[str] = None,
-                 persistent_opt: bool = False,
+                 persistent_opt: bool = False, state_store: str = "auto",
+                 mesh=None, client_axis: str = "data",
                  eval_fn: Optional[Callable] = None, eval_every: int = 0,
                  aggregation: str = "fedavg",
                  fault: Optional[FaultSpec] = None):
@@ -166,28 +169,36 @@ class FlatTrainer:
         # speedup is dispatch-bound anyway — see baseline_engine_bench).
         # Built unconditionally (memoized, jit-compiled only on first
         # call) so a trainer may switch self.engine between rounds.
+        self.mesh = mesh
+        self.client_axis = client_axis
         self._round_engine = make_round_engine(cfg, fl, method=method,
-                                               lr=lr, unroll=1)
+                                               lr=lr, unroll=1,
+                                               mesh=mesh,
+                                               client_axis=client_axis)
 
         n = len(clients)
-        self._opt_stack = stacked_adam_init(self.params, n) \
+        # stacked (N,) method state lives on device by default; for
+        # large populations with small participation it moves to host
+        # numpy and only the selected rows are staged per round
+        self._store = resolve_store(
+            state_store, n, max(1, round(fl.participation * n)))
+        host = self._store == "host"
+        self._opt_stack = stacked_adam_init(self.params, n, host=host) \
             if persistent_opt else None
         zeros_like = lambda t: jax.tree.map(
             lambda p: jnp.zeros_like(p, jnp.float32), t)
-        stack_like = lambda t: jax.tree.map(
-            lambda p: jnp.zeros((n,) + p.shape, p.dtype), t)
-        stack_f32 = lambda t: jax.tree.map(
-            lambda p: jnp.zeros((n,) + p.shape, jnp.float32), t)
         # method state, all with a leading (N,) client axis; `seen`
         # marks clients that have participated (unseen rows default to
         # the current global model, matching the reference dict.get)
         self.c_global = zeros_like(self.params) \
             if method == "scaffold" else None
-        self._c_local_stack = stack_f32(self.params) \
+        self._c_local_stack = stacked_zeros(self.params, n,
+                                            dtype=jnp.float32, host=host) \
             if method == "scaffold" else None
-        self._prev_stack = stack_like(self.params) \
+        self._prev_stack = stacked_zeros(self.params, n, host=host) \
             if method == "moon" else None
-        self._local_stack = stack_like(_split_shared(self.params, cfg)[1]) \
+        self._local_stack = stacked_zeros(
+            _split_shared(self.params, cfg)[1], n, host=host) \
             if method == "feddiffuse" else None
         self._seen = np.zeros(n, bool)
 
@@ -362,9 +373,13 @@ class FlatTrainer:
                    "c_global": self.c_global,
                    "scale": jnp.asarray(scale, jnp.float32)}
 
+        # host store: gathered rows are numpy — stage the opt rows to
+        # device explicitly (numpy inputs would silently defeat the
+        # engine's opt_states buffer donation)
         out = self._round_engine(
             server, edge_idx, batches, valid, rngs, w_row, ctx=ctx,
-            opt_states=(tree_gather(self._opt_stack, sel_arr)
+            opt_states=(store_tree(tree_gather(self._opt_stack, sel_arr),
+                                   "device")
                         if self.persistent_opt else None),
             w_late=w_late,
             masked=padded, per_client_opt=self.persistent_opt)
@@ -610,16 +625,20 @@ class FlatTrainer:
                              f"{meta['method']!r}, trainer is {self.method!r}")
         to_dev = lambda t: None if t is None \
             else jax.tree.map(jnp.asarray, t)
+        # stacked (N,) buffers land wherever this trainer keeps them
+        # (host numpy or device), non-stacked state always on device
+        to_store = lambda t: store_tree(t, self._store)
         self.params = to_dev(arrays["params"])
         self.rng = jnp.asarray(arrays["rng"])
         self.c_global = to_dev(arrays["c_global"])
-        self._c_local_stack = to_dev(arrays["c_local_stack"])
-        self._prev_stack = to_dev(arrays["prev_stack"])
-        self._local_stack = to_dev(arrays["local_stack"])
+        self._c_local_stack = to_store(arrays["c_local_stack"])
+        self._prev_stack = to_store(arrays["prev_stack"])
+        self._local_stack = to_store(arrays["local_stack"])
         self._seen = np.asarray(arrays["seen"], bool).copy()
         self._late_buf = to_dev(arrays.get("late_buf"))
         if self.persistent_opt:
-            self._opt_stack = adam_from_tree(arrays["opt_stack"])
+            self._opt_stack = adam_stack_from_tree(arrays["opt_stack"],
+                                                   self._store)
         self.np_rng.bit_generator.state = meta["np_rng"]
         for cl, st in zip(self.clients, meta["client_rngs"]):
             cl.data.set_rng_state(st)

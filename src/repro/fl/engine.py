@@ -47,6 +47,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.aggregation import combine_leaf
@@ -101,9 +102,19 @@ def unstack_tree(stacked, n: int):
 
 
 def tree_gather(stacked, idx):
-    """Rows ``idx`` of every leaf's leading axis (scalar idx drops it)."""
-    idx = jnp.asarray(idx)
-    return jax.tree.map(lambda leaf: leaf[idx], stacked)
+    """Rows ``idx`` of every leaf's leading axis (scalar idx drops it).
+
+    Polymorphic over the stack's store: numpy leaves (the host store —
+    see ``resolve_store``) fancy-index on the host, so only the gathered
+    participant rows ever move to device; jax leaves gather on device.
+    """
+    np_idx = np.asarray(idx)
+
+    def take(leaf):
+        if isinstance(leaf, np.ndarray):
+            return leaf[np_idx]
+        return leaf[jnp.asarray(np_idx)]
+    return jax.tree.map(take, stacked)
 
 
 def tree_scatter(stacked, idx, rows):
@@ -113,21 +124,103 @@ def tree_scatter(stacked, idx, rows):
     are drawn without replacement) this is the exact inverse of
     ``tree_gather``: rows outside ``idx`` are untouched and the result
     is invariant to permuting ``(idx, rows)`` in lockstep.
+
+    Numpy leaves (host store) are updated IN PLACE — the whole point of
+    the host store is never materializing a second (N, ...) copy — and
+    the device rows sync D2H here; jax leaves use the functional
+    ``.at[].set``.
     """
-    idx = jnp.asarray(idx)
-    return jax.tree.map(lambda leaf, r: leaf.at[idx].set(r), stacked, rows)
+    np_idx = np.asarray(idx)
+
+    def put(leaf, r):
+        if isinstance(leaf, np.ndarray):
+            leaf[np_idx] = np.asarray(r)
+            return leaf
+        return leaf.at[jnp.asarray(np_idx)].set(r)
+    return jax.tree.map(put, stacked, rows)
 
 
-def stacked_adam_init(params, n: int) -> AdamState:
+STORES = ("auto", "device", "host")
+
+
+def resolve_store(store: str, n_clients: int,
+                  n_participants: Optional[int] = None) -> str:
+    """Resolve a stacked-state store choice to "device" or "host".
+
+    Persistent per-client state (Adam moments, SCAFFOLD variates, MOON
+    prev models, FedDiffuse local subtrees) lives in stacks with a
+    leading (N,) client axis.  On device that is fine while N is small,
+    but a population run (10k clients at 1% participation) must not
+    materialize N full model copies in device memory when each round
+    only touches C of them — the host store keeps the stacks as numpy
+    and ``tree_gather``/``tree_scatter`` move just the participating
+    slice per round.
+
+    "auto" picks host when the population is large AND mostly idle per
+    round (N >= 8*C and N >= 256); explicit "device"/"host" always win.
+    """
+    if store not in STORES:
+        raise ValueError(f"unknown state store {store!r}; expected one "
+                         f"of {STORES}")
+    if store != "auto":
+        return store
+    c = max(int(n_participants or n_clients), 1)
+    return "host" if (n_clients >= 8 * c and n_clients >= 256) else "device"
+
+
+def stacked_zeros(tree, n: int, *, dtype=None, host: bool = False):
+    """A (n, ...) zero stack congruent with ``tree`` in the given store
+    (host = numpy leaves; device = jnp).  ``dtype`` overrides the leaf
+    dtypes (e.g. float32 control variates over bf16 params)."""
+    if host:
+        return jax.tree.map(
+            lambda p: np.zeros((n,) + p.shape, dtype or p.dtype), tree)
+    return jax.tree.map(
+        lambda p: jnp.zeros((n,) + p.shape, dtype or p.dtype), tree)
+
+
+def store_tree(tree, store: str):
+    """Move a stacked-state pytree into ``store`` ("host" -> numpy
+    leaves, anything else -> device).  Checkpoint restore uses this so
+    a host-store trainer doesn't round-trip its (N, ...) stacks through
+    device memory."""
+    if tree is None:
+        return None
+    conv = np.asarray if store == "host" else jnp.asarray
+    return jax.tree.map(conv, tree)
+
+
+def stacked_adam_init(params, n: int, *, host: bool = False) -> AdamState:
     """Adam state for ``n`` persistent clients: every moment leaf gains
     a leading (n,) axis and the step counter becomes an (n,) vector.
     Gather rows with ``tree_gather`` for the round's participants and
-    scatter the engine's updated rows back with ``tree_scatter``."""
-    zeros = lambda p: jnp.zeros((n,) + p.shape, jnp.float32)
-    return AdamState(step=jnp.zeros((n,), jnp.int32),
+    scatter the engine's updated rows back with ``tree_scatter``.
+    ``host=True`` keeps the stack as numpy (see ``resolve_store``)."""
+    xp = np if host else jnp
+    zeros = lambda p: xp.zeros((n,) + p.shape, xp.float32)
+    return AdamState(step=xp.zeros((n,), xp.int32),
                      mu=jax.tree.map(zeros, params),
                      nu=jax.tree.map(zeros, params),
                      master=None)
+
+
+def adam_stack_from_tree(t, store: str = "device") -> Optional[AdamState]:
+    """Checkpoint-loading counterpart of ``stacked_adam_init``: rebuild
+    the stacked AdamState in ``store`` (checkpoint arrays arrive as
+    numpy, so the host store is a zero-copy rewrap)."""
+    if t is None:
+        return None
+    if store != "host":
+        from repro.optim import adam_from_tree
+        return adam_from_tree(t)
+    if isinstance(t, AdamState):
+        step, mu, nu, master = t.step, t.mu, t.nu, t.master
+    else:
+        step, mu, nu, *rest = tuple(t)
+        master = rest[0] if rest else None
+    to_np = lambda x: jax.tree.map(np.asarray, x)
+    return AdamState(step=np.asarray(step), mu=to_np(mu), nu=to_np(nu),
+                     master=None if master is None else to_np(master))
 
 
 # ---------------------------------------------------------------------------
@@ -176,14 +269,25 @@ def make_train_one(loss_fn, *, method: str = "fedphd", lr: float = 2e-4,
 def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
                       method: str = "fedphd", sparse: bool = False,
                       groups=None, lr: float = 2e-4, unroll: int = 8,
-                      prune_masks=None):
+                      prune_masks=None, mesh=None,
+                      client_axis: str = "data"):
     """Build the jitted vectorized round program for ``method``.
 
     Plain (non-sparse) engines are memoized on the hashable
-    ``(cfg, fl, method, lr, unroll)`` key: every trainer built with the
-    same configs shares one engine function and therefore one XLA
-    compile cache — constructing several trainers (equivalence tests,
-    benches, sweeps) no longer recompiles the round program.
+    ``(cfg, fl, method, lr, unroll, mesh, client_axis)`` key: every
+    trainer built with the same configs shares one engine function and
+    therefore one XLA compile cache — constructing several trainers
+    (equivalence tests, benches, sweeps) no longer recompiles the round
+    program.
+
+    ``mesh`` puts the stacked client axis on the device mesh: every
+    client-leading input (batches, valid, rngs, edge_idx, the gathered
+    Adam rows, per-client ctx entries) is laid over ``client_axis`` via
+    ``repro.launch.federated.shard_clients`` before dispatch, so jit's
+    partitioner runs each device's client slice locally and the fused
+    (E, C) aggregation einsum lowers to a cross-device all-reduce.
+    The engine's numerics stay atol-1e-5 equivalent to the unsharded
+    program (reduction order inside the einsum may reassociate).
 
     ``cfg.backend`` selects the compute backend (repro.models.ops:
     xla | pallas | ref) for every tensor-core op the program traces —
@@ -220,21 +324,52 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
       "c_new", "dc_mean": SCAFFOLD c_i+ stack and mean control delta
     """
     if not sparse and groups is None and prune_masks is None:
-        return _plain_round_engine(cfg, fl, method, lr, unroll)
+        # jax meshes hash and compare by (devices, axis names), so the
+        # memo key stays sound across trainers sharing one mesh object
+        return _plain_round_engine(cfg, fl, method, lr, unroll, mesh,
+                                   client_axis)
     return _build_round_engine(cfg, fl, method=method, sparse=sparse,
                                groups=groups, lr=lr, unroll=unroll,
-                               prune_masks=prune_masks)
+                               prune_masks=prune_masks, mesh=mesh,
+                               client_axis=client_axis)
 
 
 @lru_cache(maxsize=64)
-def _plain_round_engine(cfg, fl, method, lr, unroll):
+def _plain_round_engine(cfg, fl, method, lr, unroll, mesh, client_axis):
     return _build_round_engine(cfg, fl, method=method, sparse=False,
-                               groups=None, lr=lr, unroll=unroll)
+                               groups=None, lr=lr, unroll=unroll,
+                               mesh=mesh, client_axis=client_axis)
+
+
+def _make_sharded_engine(engine, mesh, client_axis: str, ctx_axes):
+    """Wrap a jitted round engine so every client-leading operand is
+    laid over ``client_axis`` before dispatch.  Inputs whose leading
+    dim doesn't divide the axis (shard_clients warns once) and the
+    small replicated operands (edge stack, (E, C) weight rows) pass
+    through — jit partitions the program from the sharded operands."""
+    from repro.launch.federated import shard_clients
+
+    def sharded(edge_params, edge_idx, batches, valid, rngs, w_mat,
+                ctx=None, opt_states=None, w_late=None, masked=True,
+                per_client_opt=False):
+        put = lambda t: shard_clients(t, mesh, client_axis)
+        edge_idx, batches, valid, rngs = (
+            put(t) for t in (edge_idx, batches, valid, rngs))
+        if opt_states is not None:
+            opt_states = put(opt_states)
+        if ctx:
+            ctx = {k: put(v) if ctx_axes.get(k) == 0 else v
+                   for k, v in ctx.items()}
+        return engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
+                      ctx=ctx, opt_states=opt_states, w_late=w_late,
+                      masked=masked, per_client_opt=per_client_opt)
+    return sharded
 
 
 def _build_round_engine(cfg: ModelConfig, fl: FLConfig, *, method: str,
                         sparse: bool, groups, lr: float, unroll: int,
-                        prune_masks=None):
+                        prune_masks=None, mesh=None,
+                        client_axis: str = "data"):
     loss_fn = make_loss_fn(cfg, fl, method=method, sparse=sparse,
                            groups=groups, prune_masks=prune_masks)
     train_one = make_train_one(loss_fn, method=method, lr=lr, unroll=unroll)
@@ -302,6 +437,8 @@ def _build_round_engine(cfg: ModelConfig, fl: FLConfig, *, method: str,
                                           delta)
         return out
 
+    if mesh is not None:
+        return _make_sharded_engine(engine, mesh, client_axis, ctx_axes)
     return engine
 
 

@@ -13,6 +13,7 @@ scores that ride along as tiny scalars.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Tuple
 
@@ -41,18 +42,36 @@ def shard_clients(tree, mesh, axis: str = "data"):
     lowers to the ICI all-reduce of ``hierarchical_aggregate``.
 
     Leaves whose leading dim does not divide the axis size (or a None
-    mesh) are returned unsharded, so the CPU/1-device path is a no-op.
+    mesh) are returned unsharded — with a once-per-process warning, so
+    a participation count that silently defeats the mesh is visible.
+    (Scalar leaves have no client axis and skip quietly; the CPU
+    1-device path shards trivially and never warns.)
     """
     if mesh is None or axis not in mesh.axis_names:
         return tree
     n_dev = mesh.shape[axis]
 
     def put(leaf):
-        if leaf.ndim == 0 or leaf.shape[0] % n_dev != 0:
+        global _WARNED_INDIVISIBLE
+        if leaf.ndim == 0:
+            return leaf
+        if leaf.shape[0] % n_dev != 0:
+            if not _WARNED_INDIVISIBLE:
+                warnings.warn(
+                    f"shard_clients: a leaf's leading dim "
+                    f"({leaf.shape[0]}) does not divide mesh axis "
+                    f"{axis!r} (size {n_dev}); leaving it UNSHARDED. "
+                    "Pick a participant count divisible by the data-axis "
+                    "size to keep the round on the mesh. (warning once "
+                    "per process)", RuntimeWarning)
+                _WARNED_INDIVISIBLE = True
             return leaf
         spec = P(*((axis,) + (None,) * (leaf.ndim - 1)))
         return jax.device_put(leaf, NamedSharding(mesh, spec))
     return jax.tree.map(put, tree)
+
+
+_WARNED_INDIVISIBLE = False
 
 
 def hierarchical_aggregate(params, n_samples, sh_score, *, mesh,

@@ -1,0 +1,290 @@
+"""k8s sweep executor against the in-memory FakeCluster: Job rendering,
+the worker entrypoint, grid equivalence with the sequential executor,
+preemption-resume, artifact reconciliation, and quarantine."""
+import json
+import os
+
+import pytest
+
+from repro.configs import SMOKE_UNET, register_config
+from repro.configs.base import FLConfig
+from repro.experiment import (DataSpec, ExperimentSpec, FakeCluster,
+                              JobStatus, K8sExecutor, SweepSpec,
+                              register_dataset, resolve_executor, run_sweep)
+from repro.experiment.cluster import (PREEMPTED_EXIT, job_name, load_result,
+                                      render_job, run_result_path,
+                                      run_spec_path, worker_main)
+from repro.experiment.data import DatasetSpec
+from repro.experiment.sweep import (EXECUTORS, ProcessExecutor,
+                                    SequentialExecutor)
+
+TINY_UNET = SMOKE_UNET.replace(name="ddpm-unet-tiny-k8s", image_size=8,
+                               base_channels=8, channel_mults=(1,),
+                               num_res_blocks=1, attn_resolutions=())
+register_config("ddpm-unet-tiny-k8s", TINY_UNET, overwrite=True)
+register_dataset("tiny-k8s", DatasetSpec("tiny-k8s", num_classes=4,
+                                         image_size=8, samples_per_class=32),
+                 overwrite=True)
+
+BASE = ExperimentSpec(
+    name="k8s-base", method="fedavg", model="ddpm-unet-tiny-k8s",
+    fl=FLConfig(num_clients=4, num_edges=1, local_epochs=1,
+                edge_agg_every=1, cloud_agg_every=2, rounds=2,
+                sparse_rounds=2, sh_a=1000.0),
+    data=DataSpec(dataset="tiny-k8s", batch_size=8),
+    engine="sequential", prune=False)
+
+GRID = SweepSpec(name="k8s-grid", base=BASE,
+                 axes={"seed": [0, 1], "lr": [1e-4, 2e-4]})
+
+
+def fake_exec(**kw):
+    """A FakeCluster-backed executor (poll_s=0: no scheduler latency)."""
+    cluster = kw.pop("cluster", None) or FakeCluster()
+    return K8sExecutor(cluster=cluster, poll_s=0.0, **kw), cluster
+
+
+@pytest.fixture(scope="module")
+def seq_manifest(tmp_path_factory):
+    """The sequential-executor reference manifest for GRID."""
+    out = tmp_path_factory.mktemp("seq")
+    res = run_sweep(GRID, str(out))
+    assert res.complete
+    return res.manifest
+
+
+# -- validation / resolution -------------------------------------------------
+
+def test_executor_registry_and_validation(tmp_path):
+    assert EXECUTORS == ("sequential", "process", "k8s")
+    with pytest.raises(ValueError, match="executor 'slurm' not in"):
+        run_sweep(GRID, str(tmp_path), executor="slurm")
+    with pytest.raises(TypeError, match="Executor-like"):
+        resolve_executor(object())
+    assert isinstance(resolve_executor("sequential"), SequentialExecutor)
+    assert isinstance(resolve_executor("process"), ProcessExecutor)
+    exe = resolve_executor("k8s", max_workers=3)
+    assert isinstance(exe, K8sExecutor) and exe.max_workers == 3
+    injected, _ = fake_exec()
+    assert resolve_executor(injected) is injected
+
+
+def test_capability_rejections(tmp_path):
+    exe, _ = fake_exec()
+    with pytest.raises(ValueError, match="eval_fn cannot cross"):
+        run_sweep(GRID, str(tmp_path), executor=exe,
+                  eval_fn=lambda p, c, r: {})
+    with pytest.raises(ValueError, match="timeout_s needs executor"):
+        run_sweep(GRID, str(tmp_path), executor="sequential", timeout_s=5.0)
+
+
+# -- Job rendering -----------------------------------------------------------
+
+def test_job_name_sanitized():
+    name = job_name("fl.participation=0.5,method=fedphd,seed=2", 1)
+    assert name == name.lower() and len(name) <= 63
+    assert all(c.isalnum() or c == "-" for c in name)
+    assert name != job_name("fl.participation=0.5,method=fedphd,seed=2", 2)
+    long_a = job_name("axis=" + "x" * 100 + "1", 1)
+    long_b = job_name("axis=" + "x" * 100 + "2", 1)
+    assert len(long_a) <= 63 and len(long_b) <= 63 and long_a != long_b
+
+
+def test_render_job_schema():
+    job = render_job(run_id="lr=0.1,seed=0", attempt=2, image="repro:test",
+                     spec_path="/sweep/runs/r/spec.json",
+                     ckpt_path="/sweep/runs/r/ckpt.npz",
+                     result_path="/sweep/runs/r/result.json",
+                     rounds=7, save_every=2, namespace="fl",
+                     mount_path="/sweep", pvc="sweep-pvc",
+                     env={"FEDPHD_ENGINE": "vectorized"}, devices=8)
+    assert job["apiVersion"] == "batch/v1" and job["kind"] == "Job"
+    assert job["metadata"]["namespace"] == "fl"
+    # the raw run-id survives in an annotation (labels can't hold '=')
+    assert job["metadata"]["annotations"]["repro.run-id"] == "lr=0.1,seed=0"
+    spec = job["spec"]
+    # retries belong to the executor, not kubelet
+    assert spec["backoffLimit"] == 0
+    pod = spec["template"]["spec"]
+    assert pod["restartPolicy"] == "Never"
+    [ctr] = pod["containers"]
+    cmd = ctr["command"]
+    assert cmd[:3] == ["python", "-m", "repro.experiment.cluster"]
+    assert cmd[cmd.index("--rounds") + 1] == "7"
+    assert cmd[cmd.index("--save-every") + 1] == "2"
+    env = {e["name"]: e["value"] for e in ctr["env"]}
+    assert env["FEDPHD_ENGINE"] == "vectorized"
+    assert "--xla_force_host_platform_device_count=8" in env["XLA_FLAGS"]
+    [vol] = pod["volumes"]
+    assert vol["persistentVolumeClaim"]["claimName"] == "sweep-pvc"
+    assert ctr["volumeMounts"][0]["mountPath"] == "/sweep"
+    # hostPath fallback without a PVC; no mount at all without a path
+    job2 = render_job(run_id="r", attempt=1, image="i", spec_path="s",
+                      ckpt_path="c", result_path="o", mount_path="/data")
+    assert job2["spec"]["template"]["spec"]["volumes"][0][
+        "hostPath"]["path"] == "/data"
+    job3 = render_job(run_id="r", attempt=1, image="i", spec_path="s",
+                      ckpt_path="c", result_path="o")
+    assert job3["spec"]["template"]["spec"]["volumes"] == []
+
+
+# -- worker entrypoint -------------------------------------------------------
+
+def test_worker_main_writes_result_and_resumes(tmp_path):
+    out = str(tmp_path)
+    rid = "worker-direct"
+    os.makedirs(os.path.join(out, "runs", rid))
+    spec_path = run_spec_path(out, rid)
+    with open(spec_path, "w") as f:
+        json.dump(BASE.to_dict(), f)
+    ckpt = os.path.join(out, "runs", rid, "ckpt.npz")
+    argv = ["--spec", spec_path, "--ckpt", ckpt,
+            "--result", run_result_path(out, rid), "--run-id", rid]
+
+    # preempted attempt: one round trained, no completion token
+    assert worker_main(argv, _stop_after=1) == PREEMPTED_EXIT
+    assert load_result(out, rid) is None
+    assert os.path.exists(ckpt + ".manifest.json")
+
+    # retry resumes from the checkpoint and completes
+    assert worker_main(argv) == 0
+    res = load_result(out, rid)
+    assert res["run_id"] == rid and res["spec"] == BASE.to_dict()
+    assert res["rounds_done"] == len(res["history"]) == 2
+    assert res["history"][0]["round"] == 1 and res["wall_s"] > 0
+
+
+# -- executor end-to-end -----------------------------------------------------
+
+def test_k8s_grid_matches_sequential(tmp_path, seq_manifest):
+    exe, cluster = fake_exec()
+    res = run_sweep(GRID, str(tmp_path), executor=exe)
+    assert res.complete
+    assert set(res.manifest["runs"]) == set(seq_manifest["runs"])
+    assert len(cluster.submitted) == 4
+    for rid, entry in res.manifest["runs"].items():
+        ref = seq_manifest["runs"][rid]
+        assert [h["selected"] for h in entry["history"]] \
+            == [h["selected"] for h in ref["history"]]
+        assert [h["comm_gb"] for h in entry["history"]] \
+            == [h["comm_gb"] for h in ref["history"]]
+        for a, b in zip(entry["history"], ref["history"]):
+            assert a["loss"] == pytest.approx(b["loss"], abs=1e-5)
+
+
+def test_preemption_resumes_from_checkpoint(tmp_path, seq_manifest):
+    rid = "lr=0.0001,seed=0"
+    exe, cluster = fake_exec(cluster=FakeCluster(preempt_once={rid: 1}))
+    res = run_sweep(GRID, str(tmp_path), executor=exe, max_retries=1)
+    assert res.complete
+    assert cluster.preempted == [rid]
+    entry = res.manifest["runs"][rid]
+    assert entry["attempts"] == 2
+    # the resumed history is the unbroken 2-round trajectory
+    ref = seq_manifest["runs"][rid]["history"]
+    assert [h["round"] for h in entry["history"]] == [1, 2]
+    for a, b in zip(entry["history"], ref):
+        assert a["loss"] == pytest.approx(b["loss"], abs=1e-5)
+        assert a["selected"] == b["selected"]
+
+
+def test_preemption_without_retries_quarantines(tmp_path):
+    rid = "lr=0.0001,seed=0"
+    exe, _ = fake_exec(cluster=FakeCluster(preempt_once={rid: 1}))
+    res = run_sweep(GRID, str(tmp_path), executor=exe)  # max_retries=0
+    entry = res.manifest["runs"][rid]
+    assert entry["status"] == "failed"
+    assert "JobFailed(Preempted)" in entry["error"]
+    done = [r for r, e in res.manifest["runs"].items()
+            if e["status"] == "done"]
+    assert len(done) == 3   # the rest of the grid completed
+
+
+def test_reconcile_from_artifacts(tmp_path):
+    out = str(tmp_path)
+    exe, _ = fake_exec()
+    assert run_sweep(GRID, out, executor=exe).complete
+    # lose the manifest; forbid submits: completion must come purely
+    # from the result.json artifacts on shared storage
+    os.remove(os.path.join(out, "sweep.json"))
+    exe2, cluster2 = fake_exec(cluster=FakeCluster(fail_submits=True))
+    res = run_sweep(GRID, out, executor=exe2)
+    assert res.complete and cluster2.submitted == []
+
+
+def test_stale_result_reruns(tmp_path):
+    out = str(tmp_path)
+    exe, _ = fake_exec()
+    assert run_sweep(GRID, out, executor=exe).complete
+    # an edited sweep: same run-ids, different specs (the sweep name is
+    # baked into every spec) -> on-disk artifacts are stale, all rerun
+    edited = GRID.replace(name="k8s-grid-v2")
+    exe2, cluster2 = fake_exec()
+    res = run_sweep(edited, out, executor=exe2)
+    assert res.complete and len(cluster2.submitted) == 4
+    for rid, entry in res.manifest["runs"].items():
+        assert entry["spec"]["name"] == f"k8s-grid-v2/{rid}"
+
+
+def test_injected_failure_quarantine_and_raise(tmp_path):
+    rid = "lr=0.0002,seed=1"
+    exe, _ = fake_exec(cluster=FakeCluster(
+        fail_reasons={rid: "ImagePullBackOff"}))
+    res = run_sweep(GRID, str(tmp_path / "a"), executor=exe)
+    entry = res.manifest["runs"][rid]
+    assert entry["status"] == "failed"
+    assert "JobFailed(ImagePullBackOff)" in entry["error"]
+    exe2, _ = fake_exec(cluster=FakeCluster(
+        fail_reasons={rid: "ImagePullBackOff"}))
+    with pytest.raises(RuntimeError, match="failed after 1 attempt"):
+        run_sweep(GRID, str(tmp_path / "b"), executor=exe2,
+                  raise_on_error=True)
+
+
+def test_pending_polls_then_success(tmp_path):
+    exe, cluster = fake_exec(cluster=FakeCluster(pending_polls=2))
+    res = run_sweep(GRID, str(tmp_path), executor=exe, max_workers=2)
+    assert res.complete
+    assert all(st["polls"] > 2 for st in cluster.jobs.values())
+
+
+def test_k8s_cluster_requires_package():
+    from repro.experiment.cluster import K8sCluster
+    pytest.importorskip  # real client only errors when kubernetes absent
+    try:
+        import kubernetes  # noqa: F401
+        pytest.skip("kubernetes package present")
+    except ImportError:
+        pass
+    with pytest.raises(RuntimeError, match="kubernetes"):
+        K8sCluster()
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def test_cli_k8s_fake(tmp_path):
+    from repro.experiment import runner
+    sweep_json = tmp_path / "grid.json"
+    sweep_json.write_text(GRID.to_json())
+    out = tmp_path / "out"
+    res = runner.main(["--sweep", str(sweep_json), "--out", str(out),
+                       "--executor", "k8s", "--k8s-fake"])
+    assert res.complete
+    assert (out / "report.json").exists()
+
+
+def test_cli_k8s_flag_guards(tmp_path):
+    from repro.experiment import runner
+    sweep_json = tmp_path / "grid.json"
+    sweep_json.write_text(GRID.to_json())
+    with pytest.raises(SystemExit, match="--executor k8s"):
+        runner.main(["--sweep", str(sweep_json), "--out", str(tmp_path),
+                     "--k8s-fake"])
+    with pytest.raises(SystemExit, match="require --sweep"):
+        runner.main(["--preset", "smoke", "--out", str(tmp_path),
+                     "--k8s-fake"])
+
+
+def test_job_status_value():
+    st = JobStatus("Failed", "Preempted")
+    assert (st.phase, st.reason) == ("Failed", "Preempted")

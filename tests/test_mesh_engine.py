@@ -1,0 +1,228 @@
+"""Mesh-sharded round engine (``ExperimentSpec.mesh``) and the
+TPU-topology aggregation path, on 8 fake CPU devices.
+
+Everything that needs a multi-device view runs in a subprocess under
+``repro.launch.env`` (XLA reads ``--xla_force_host_platform_device_count``
+once, at backend init — the main test process must keep its single
+device; see conftest).  In-process tests cover only the single-device
+guard rails.
+"""
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch import env as launch_env
+
+
+def _run(script: str, *, devices=None) -> subprocess.CompletedProcess:
+    # JAX_PLATFORMS=cpu inside child_env is load-bearing: on images
+    # bundling libtpu, backend discovery otherwise polls the GCP
+    # metadata server with 30-retry backoff
+    return subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, timeout=600,
+                          env=launch_env.child_env(devices))
+
+
+# --------------------------------------------------------------------------
+# Sharded-vs-unsharded equivalence, driven through env.apply() in-child
+# (no XLA_FLAGS arrive from outside: the apply() call is load-bearing).
+# --------------------------------------------------------------------------
+
+_EQUIV_SCRIPT = r"""
+from repro.launch import env
+env.apply(8)                      # before the first jax backend init
+
+import jax, numpy as np
+assert len(jax.devices()) == 8, jax.devices()
+
+from repro.configs import SMOKE_UNET, register_config
+from repro.configs.base import FLConfig
+from repro.experiment import (DataSpec, ExperimentSpec, make_clients,
+                              register_dataset, run_spec)
+from repro.experiment.data import DatasetSpec
+from repro.fl.baselines import FlatTrainer
+from repro.launch.mesh import make_spec_mesh
+
+TINY = SMOKE_UNET.replace(name='ddpm-unet-tiny-mesh', image_size=8,
+                          base_channels=8, channel_mults=(1,),
+                          num_res_blocks=1, attn_resolutions=())
+register_config('ddpm-unet-tiny-mesh', TINY, overwrite=True)
+register_dataset('tiny-mesh', DatasetSpec('tiny-mesh', num_classes=4,
+                                          image_size=8, samples_per_class=32),
+                 overwrite=True)
+BASE = ExperimentSpec(
+    name='mesh-smoke', method='fedphd', model='ddpm-unet-tiny-mesh',
+    fl=FLConfig(num_clients=8, num_edges=2, local_epochs=1,
+                edge_agg_every=1, cloud_agg_every=2, rounds=2,
+                sparse_rounds=2, sh_a=1000.0, participation=1.0),
+    data=DataSpec(dataset='tiny-mesh', batch_size=8),
+    engine='vectorized', prune=False)
+
+# --- FedPhD: spec.mesh round-trips JSON and matches unsharded exactly
+sharded_spec = ExperimentSpec.from_json(
+    BASE.replace(mesh={'data': 8, 'model': 1}).to_json())
+assert sharded_spec.mesh == {'data': 8, 'model': 1}
+plain = run_spec(BASE, rounds=2)
+shard = run_spec(sharded_spec, rounds=2)
+for a, b in zip(plain.history, shard.history):
+    assert abs(a.loss - b.loss) < 1e-5, (a.round, a.loss, b.loss)
+    assert a.comm_gb == b.comm_gb, (a.round, a.comm_gb, b.comm_gb)
+    assert a.selected == b.selected
+for x, y in zip(jax.tree.leaves(plain.trainer.params),
+                jax.tree.leaves(shard.trainer.params)):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+# --- the client axis is REALLY on the mesh: the engine's per-client
+# loss output comes back sharded over 'data'
+mesh = make_spec_mesh({'data': 8, 'model': 1})
+clients, _, _ = make_clients(BASE.replace(method='fedavg'))
+tr = FlatTrainer('fedavg', TINY, BASE.fl, clients, rng_seed=0,
+                 engine='vectorized', mesh=mesh)
+pend = tr._start_round(1)
+losses = pend['losses']
+assert losses.shape == (8,)
+spec_str = str(getattr(losses.sharding, 'spec', losses.sharding))
+assert 'data' in spec_str, f'losses not sharded over data: {spec_str}'
+tr._finish_round(pend)
+print('MESH_EQUIV_OK', [round(r.loss, 5) for r in shard.history])
+"""
+
+
+def test_spec_mesh_sharded_equivalence():
+    res = _run(_EQUIV_SCRIPT)
+    assert "MESH_EQUIV_OK" in res.stdout, res.stdout + res.stderr
+
+
+# --------------------------------------------------------------------------
+# hierarchical_aggregate driven from real engine output vs the (E, C)
+# einsum reference; shard_clients warn-once semantics.
+# --------------------------------------------------------------------------
+
+_AGG_SCRIPT = r"""
+import warnings
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 8
+
+from repro.configs import SMOKE_UNET, register_config
+from repro.configs.base import FLConfig
+from repro.experiment import (DataSpec, ExperimentSpec, make_clients,
+                              register_dataset)
+from repro.experiment.data import DatasetSpec
+from repro.fl.baselines import FlatTrainer
+from repro.launch.federated import hierarchical_aggregate, shard_clients
+
+TINY = SMOKE_UNET.replace(name='ddpm-unet-tiny-agg', image_size=8,
+                          base_channels=8, channel_mults=(1,),
+                          num_res_blocks=1, attn_resolutions=())
+register_config('ddpm-unet-tiny-agg', TINY, overwrite=True)
+register_dataset('tiny-agg', DatasetSpec('tiny-agg', num_classes=4,
+                                         image_size=8, samples_per_class=32),
+                 overwrite=True)
+spec = ExperimentSpec(
+    name='agg', method='moon', model='ddpm-unet-tiny-agg',
+    fl=FLConfig(num_clients=8, num_edges=2, local_epochs=1,
+                edge_agg_every=1, cloud_agg_every=2, rounds=1,
+                sparse_rounds=1, participation=1.0),
+    data=DataSpec(dataset='tiny-agg', batch_size=8), prune=False)
+
+# one vectorized MOON round leaves the 8 trained client models stacked
+# in _prev_stack — genuine engine output, not synthetic data
+clients, _, _ = make_clients(spec)
+tr = FlatTrainer('moon', TINY, spec.fl, clients, rng_seed=0,
+                 engine='vectorized')
+rec = tr.run_round(1)
+stacked = tr._prev_stack                     # (8, ...) per-client params
+n = np.asarray([c.n_samples for c in clients], np.float32)
+mu = np.asarray([l for l in np.full(8, rec.loss, np.float32)
+                 * np.linspace(0.5, 1.5, 8)], np.float32)  # distinct scores
+A, B = 1000.0, 0.0
+
+mesh = jax.make_mesh((2, 4), ('pod', 'data'))
+agg = jax.jit(lambda p: hierarchical_aggregate(
+    p, jnp.asarray(n), jnp.asarray(mu), mesh=mesh, a=A, b=B,
+    cloud_round=True))(stacked)
+
+# (E, C) einsum reference: per-edge SH weights, then SH across edges
+w = np.maximum(n + A * mu + B, 0.0).reshape(2, 4)
+mu_ec = mu.reshape(2, 4)
+w_edge = w / w.sum(1, keepdims=True)                        # (E, C)
+n_e = w.sum(1)
+mu_e = (mu_ec * w).sum(1) / w.sum(1)
+w_c = np.maximum(n_e + A * mu_e + B, 0.0)
+w_cloud = w_c / w_c.sum()                                   # (E,)
+W = (w_cloud[:, None] * w_edge).reshape(8)                  # (E*C,)
+for name, (got, leaf) in zip(
+        [str(i) for i in range(len(jax.tree.leaves(agg)))],
+        zip(jax.tree.leaves(agg), jax.tree.leaves(stacked))):
+    leaf = np.asarray(leaf, np.float64)
+    ref = np.tensordot(W, leaf, axes=(0, 0))
+    # every client replica of the aggregate must equal the reference
+    for c in range(8):
+        np.testing.assert_allclose(np.asarray(got)[c], ref, atol=1e-5)
+
+# --- shard_clients: non-dividing leading dim warns ONCE, scalars quiet
+mesh8 = jax.make_mesh((8,), ('data',))
+tree = {'bad': jnp.zeros((6, 3)), 'ok': jnp.zeros((8, 2)),
+        'scalar': jnp.float32(1.0)}
+with warnings.catch_warnings(record=True) as rec1:
+    warnings.simplefilter('always')
+    out = shard_clients(tree, mesh8, 'data')
+msgs = [w for w in rec1 if 'UNSHARDED' in str(w.message)]
+assert len(msgs) == 1, [str(w.message) for w in rec1]
+assert 'data' in str(out['ok'].sharding.spec)
+with warnings.catch_warnings(record=True) as rec2:
+    warnings.simplefilter('always')
+    shard_clients(tree, mesh8, 'data')
+assert not [w for w in rec2 if 'UNSHARDED' in str(w.message)]
+print('AGG_OK')
+"""
+
+
+def test_hierarchical_aggregate_from_engine_output():
+    res = _run(_AGG_SCRIPT, devices=8)
+    assert "AGG_OK" in res.stdout, res.stdout + res.stderr
+
+
+# --------------------------------------------------------------------------
+# Single-device guard rails (in-process: must NOT force a device count).
+# --------------------------------------------------------------------------
+
+def test_make_host_mesh_guards_indivisible():
+    import jax
+
+    from repro.launch.mesh import make_host_mesh
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="does not divide"):
+        make_host_mesh(n + 1)
+    with pytest.raises(ValueError, match="does not divide"):
+        make_host_mesh(0)
+    mesh = make_host_mesh(1)
+    assert mesh.shape["model"] == 1 and mesh.shape["data"] == n
+
+
+def test_make_spec_mesh_validation():
+    from repro.launch.mesh import make_spec_mesh
+    assert make_spec_mesh(None) is None
+    assert make_spec_mesh({}) is None
+    with pytest.raises(ValueError, match="sizes must be >= 1"):
+        make_spec_mesh({"data": 0})
+    with pytest.raises(ValueError, match="repro.launch.env.apply"):
+        make_spec_mesh({"data": 1024})
+    mesh = make_spec_mesh({"data": 1})
+    assert mesh.axis_names == ("data",)
+
+
+def test_launch_env_overlay():
+    env = launch_env.host_env(8, tcmalloc=False, platform="cpu")
+    assert "--xla_force_host_platform_device_count=8" in env["XLA_FLAGS"]
+    assert env["JAX_PLATFORMS"] == "cpu"
+    # a prior device-count flag is superseded, other flags survive
+    merged = launch_env.merge_xla_flags(
+        launch_env.xla_host_devices_flag(4),
+        "--xla_cpu_foo=1 --xla_force_host_platform_device_count=512")
+    assert merged.count("device_count") == 1
+    assert "--xla_force_host_platform_device_count=4" in merged
+    assert "--xla_cpu_foo=1" in merged
+    child = launch_env.child_env(2)
+    assert child["JAX_PLATFORMS"] == "cpu" and "PYTHONPATH" in child

@@ -1,0 +1,131 @@
+"""Host-resident stacked client state (``state_store``): the store
+resolver, numpy-aware gather/scatter, and trainer-level equivalence —
+a host-store vectorized run must match the device-store sequential
+reference exactly, including through checkpoint restore."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_UNET, register_config
+from repro.configs.base import FLConfig
+from repro.experiment import (DataSpec, ExperimentSpec, register_dataset,
+                              run_spec)
+from repro.experiment.data import DatasetSpec
+from repro.fl.engine import (resolve_store, stacked_adam_init, stacked_zeros,
+                             store_tree, tree_gather, tree_scatter)
+
+TINY_UNET = SMOKE_UNET.replace(name="ddpm-unet-tiny-store", image_size=8,
+                               base_channels=8, channel_mults=(1,),
+                               num_res_blocks=1, attn_resolutions=())
+register_config("ddpm-unet-tiny-store", TINY_UNET, overwrite=True)
+register_dataset("tiny-store",
+                 DatasetSpec("tiny-store", num_classes=4, image_size=8,
+                             samples_per_class=32), overwrite=True)
+
+BASE = ExperimentSpec(
+    name="store", method="fedphd", model="ddpm-unet-tiny-store",
+    fl=FLConfig(num_clients=8, num_edges=2, local_epochs=1,
+                edge_agg_every=1, cloud_agg_every=2, rounds=2,
+                sparse_rounds=2, sh_a=1000.0, participation=0.5),
+    # shards partition: non-IID (1 class per client) but UNIFORM batch
+    # shapes — the strict vectorized engine refuses ragged clients, and
+    # the equivalence below must exercise the vectorized host-store path
+    data=DataSpec(dataset="tiny-store", partition="shards",
+                  classes_per_client=1, batch_size=8),
+    persistent_opt=True, prune=False)
+
+
+def test_resolve_store():
+    assert resolve_store("device", 100000, 1) == "device"
+    assert resolve_store("host", 2, 2) == "host"
+    # auto: host only for large, mostly-idle populations — the 10k @ 1%
+    # participation regime must fit without N device-resident stacks
+    assert resolve_store("auto", 10_000, 100) == "host"
+    assert resolve_store("auto", 256, 32) == "host"
+    assert resolve_store("auto", 255, 31) == "device"   # below floor
+    assert resolve_store("auto", 256, 64) == "device"   # too dense
+    assert resolve_store("auto", 8, 8) == "device"
+    with pytest.raises(ValueError, match="unknown state store"):
+        resolve_store("gpu", 8, 8)
+
+
+def test_host_stack_gather_scatter_roundtrip():
+    tree = {"w": jnp.ones((3, 2)), "b": jnp.zeros((4,))}
+    stack = stacked_zeros(tree, 10, host=True)
+    assert isinstance(stack["w"], np.ndarray)
+    assert stack["w"].shape == (10, 3, 2)
+    rows = tree_gather(stack, np.array([2, 7]))
+    assert isinstance(rows["w"], np.ndarray) and rows["w"].shape == (2, 3, 2)
+    # scatter device-computed rows back into the numpy stack in place
+    new = {"w": jnp.full((2, 3, 2), 5.0), "b": jnp.full((2, 4), -1.0)}
+    out = tree_scatter(stack, np.array([2, 7]), new)
+    assert out["w"] is stack["w"]           # in-place, no copy of (N,...)
+    np.testing.assert_array_equal(stack["w"][2], 5.0 * np.ones((3, 2)))
+    np.testing.assert_array_equal(stack["b"][7], -np.ones(4))
+    np.testing.assert_array_equal(stack["w"][0], np.zeros((3, 2)))
+    # single-row (int index) gather drops the leading axis
+    row = tree_gather(stack, 2)
+    assert row["w"].shape == (3, 2)
+
+
+def test_host_adam_stack_staging():
+    params = {"w": jnp.ones((2, 2))}
+    stack = stacked_adam_init(params, 6, host=True)
+    assert isinstance(stack.mu["w"], np.ndarray)
+    rows = tree_gather(stack, np.array([0, 3]))
+    staged = store_tree(rows, "device")
+    assert isinstance(staged.mu["w"], jnp.ndarray)    # donation-safe
+    back = store_tree(staged, "host")
+    assert isinstance(back.mu["w"], np.ndarray)
+
+
+def test_fedphd_host_store_matches_device_reference():
+    """Vectorized engine + host store vs sequential engine + device
+    store, dirichlet alpha=0.5, persistent Adam: identical trajectories
+    — the participating-slice staging must be numerically invisible."""
+    ref = run_spec(BASE.replace(engine="sequential",
+                                state_store="device"), rounds=2)
+    host = run_spec(BASE.replace(engine="vectorized",
+                                 state_store="host"), rounds=2)
+    assert host.trainer._store == "host"
+    for a, b in zip(ref.history, host.history):
+        assert a.selected == b.selected
+        assert a.comm_gb == b.comm_gb
+        assert np.isclose(a.loss, b.loss, atol=1e-4)
+    for x, y in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(host.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+    # the opt stack really lives on host
+    assert isinstance(jax.tree.leaves(host.trainer._opt_stack.mu)[0],
+                      np.ndarray)
+
+
+def test_scaffold_host_store_matches_device(tmp_path):
+    """SCAFFOLD is the stack-heaviest flat method (control variates +
+    Adam): host-store vectorized vs device-store sequential, THROUGH a
+    kill-and-resume checkpoint round-trip on the host-store side."""
+    spec = BASE.replace(method="scaffold", aggregation="fedavg",
+                        selection="sh")
+    ref = run_spec(spec.replace(engine="sequential", state_store="device"),
+                   rounds=2)
+    ckpt = str(tmp_path / "ckpt.npz")
+    h1 = run_spec(spec.replace(engine="vectorized", state_store="host"),
+                  rounds=1, ckpt=ckpt)
+    assert len(h1.history) == 1
+    host = run_spec(None, resume=True, ckpt=ckpt, rounds=2)
+    assert host.trainer._store == "host"
+    assert isinstance(
+        jax.tree.leaves(host.trainer._c_local_stack)[0], np.ndarray)
+    for a, b in zip(ref.history, host.history):
+        assert a.selected == b.selected
+        assert np.isclose(a.loss, b.loss, atol=1e-4)
+    for x, y in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(host.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_spec_state_store_roundtrip():
+    spec = BASE.replace(state_store="host")
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again.state_store == "host" and again == spec
