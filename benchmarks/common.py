@@ -27,6 +27,16 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(row, flush=True)
 
 
+def emit_bytes(name: str, nbytes: int, derived: str = "") -> None:
+    """Emit a bytes-on-wire row: ``us`` is pinned to 0 (there is no
+    latency to gate) and the byte count rides the derived column as a
+    ``bytes=<n>`` tag, which ``regression_gate.py`` gates exactly —
+    byte accounting is deterministic, so ANY increase over the
+    committed baseline fails the gate."""
+    tag = f"bytes={int(nbytes)}"
+    emit(name, 0.0, f"{tag};{derived}" if derived else tag)
+
+
 def dump_bench_json(bench: str) -> Optional[str]:
     """Persist every row emitted so far as ``BENCH_<bench>.json`` under
     ``$BENCH_OUT_DIR`` (no-op when unset) — the machine-readable medians

@@ -14,7 +14,12 @@ baselines in ``benchmarks/baselines/`` and fails CI on a regression:
   (default 3.0 — the round-engine speedup has been observed anywhere in
   3.4-17.5x on that box); the in-bench absolute floors (>= 2x) still
   apply first.  ``overlap=..x`` tags are informational (pinned ~1.0 on
-  the shared-core CI box by construction) and are not gated.
+  the shared-core CI box by construction) and are not gated;
+- **bytes rows** (a ``bytes=<n>`` tag, emitted via
+  ``common.emit_bytes`` with ``us=0``): byte accounting is
+  deterministic, so the gate fails on ANY fresh count above the
+  baseline (and on a dropped tag).  Zero-latency rows skip the
+  latency check.
 
 Updating a baseline is an explicit, reviewed act: copy the fresh
 ``BENCH_*.json`` over ``benchmarks/baselines/`` and append the new
@@ -48,9 +53,13 @@ from typing import Dict, List, Optional
 
 TOLERANCE = 3.0
 SPEEDUP_TOLERANCE = 3.0
+# bytes-on-wire rows are deterministic (host-computed from static
+# shapes) — any fresh byte count above the baseline is a regression
+BYTES_TOLERANCE = 1.0
 DRAFT_THRESHOLD = 0.25
 
 _SPEEDUP = re.compile(r"(?:^|;)speedup=([0-9.]+)x")
+_BYTES = re.compile(r"(?:^|;)bytes=([0-9]+)")
 
 
 def _load(path: str) -> Dict[str, dict]:
@@ -61,6 +70,11 @@ def _load(path: str) -> Dict[str, dict]:
 def _speedup(row: dict) -> Optional[float]:
     m = _SPEEDUP.search(row.get("derived", ""))
     return float(m.group(1)) if m else None
+
+
+def _bytes(row: dict) -> Optional[int]:
+    m = _BYTES.search(row.get("derived", ""))
+    return int(m.group(1)) if m else None
 
 
 def compare(baseline: Dict[str, dict], fresh: Dict[str, dict], *,
@@ -79,7 +93,8 @@ def compare(baseline: Dict[str, dict], fresh: Dict[str, dict], *,
         row = fresh[name]
         limit = base["us"] * tolerance
         verdict = "ok"
-        if row["us"] > limit:
+        # bytes-only rows carry us=0 — no latency to gate
+        if base["us"] > 0 and row["us"] > limit:
             verdict = "REGRESSED"
             failures.append(f"{name}: {row['us']:.0f}us > "
                             f"{limit:.0f}us (baseline {base['us']:.0f}us "
@@ -90,10 +105,23 @@ def compare(baseline: Dict[str, dict], fresh: Dict[str, dict], *,
             verdict = "REGRESSED"
             failures.append(f"{name}: speedup {f_sp:.2f}x < "
                             f"{b_sp:.2f}x / {speedup_tolerance}")
+        b_by, f_by = _bytes(base), _bytes(row)
+        if b_by is not None:
+            if f_by is None:
+                verdict = "REGRESSED"
+                failures.append(f"{name}: baseline carries bytes={b_by} "
+                                "but the fresh row has no bytes= tag")
+            elif f_by > b_by * BYTES_TOLERANCE:
+                verdict = "REGRESSED"
+                failures.append(f"{name}: bytes {f_by} > baseline {b_by} "
+                                "(byte accounting is deterministic — any "
+                                "increase is a regression)")
         print(f"  {verdict:>9}  {name}: {row['us']:.0f}us "
               f"(baseline {base['us']:.0f}us)"
               + (f" speedup {f_sp:.2f}x (baseline {b_sp:.2f}x)"
-                 if b_sp is not None and f_sp is not None else ""))
+                 if b_sp is not None and f_sp is not None else "")
+              + (f" bytes {f_by} (baseline {b_by})"
+                 if b_by is not None and f_by is not None else ""))
     return failures
 
 
@@ -102,10 +130,14 @@ def trajectory_rows(fresh: Dict[str, dict]) -> Dict[str, float]:
     ``<row>_us`` per latency, ``<bench...>/speedup`` per tagged row."""
     rows: Dict[str, float] = {}
     for name, row in sorted(fresh.items()):
-        rows[f"{name}_us"] = float(row["us"])
+        if row["us"] > 0:               # bytes-only rows have no latency
+            rows[f"{name}_us"] = float(row["us"])
         sp = _speedup(row)
         if sp is not None:
             rows[name.rsplit("/", 1)[0] + "/speedup"] = sp
+        by = _bytes(row)
+        if by is not None:
+            rows[f"{name}/bytes"] = float(by)
     return rows
 
 

@@ -1,11 +1,72 @@
-"""§Roofline report: render the dry-run JSON into the per-(arch x shape)
-three-term table (also emitted as benchmark rows)."""
+"""§Roofline report.
+
+Two parts:
+
+- **backend x precision GEMM roofline**: lower the repo's masked-GEMM
+  workhorse (``repro.models.ops.masked_matmul`` at the serve-bench tile
+  shape) per compute backend (xla, pallas) and precision (fp32, bf16),
+  run ``repro.roofline.analyze_hlo`` over the compiled HLO for the
+  *predicted* FLOPs / HBM bytes / arithmetic intensity, and time the
+  call for the *measured* wall-clock and achieved FLOP/s.  Rows emit as
+  ``roofline/<backend>/<precision>`` with the predicted-vs-measured
+  numbers in the derived column and land in ``BENCH_roofline.json``
+  (``dump_bench_json``) — uploaded as a CI artifact, NOT committed as a
+  baseline: wall-clock on the shared CI box is too noisy to gate, the
+  value is the trend across PRs.
+- **dry-run render**: the original per-(arch x shape) three-term table
+  from the launch dry-run JSON, when present.
+"""
 from __future__ import annotations
 
 import json
 import os
 
-from benchmarks.common import emit
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dump_bench_json, emit, time_fn
+
+# serve-bench tile shape: M=128 rows against a 1024x1024 weight — every
+# dimension 128-aligned so the pallas grid has no masked remainder
+M, K, N = 128, 1024, 1024
+PRUNE_KEEP = 0.5
+
+
+def _gemm_case(backend: str, precision: str):
+    """(jitted fn, args) for one backend x precision point."""
+    from repro.models.ops import compute_dtype, masked_matmul
+
+    dt = compute_dtype(precision)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)), dt)
+    col = jnp.asarray(np.arange(N) < int(N * PRUNE_KEEP), jnp.float32)
+
+    def f(x, w, col):
+        return masked_matmul(x, w, col_mask=col, backend=backend)
+
+    return jax.jit(f), (x, w, col)
+
+
+def gemm_roofline() -> None:
+    from repro.roofline.analysis import analyze_hlo
+
+    for backend in ("xla", "pallas"):
+        for precision in ("fp32", "bf16"):
+            fn, args = _gemm_case(backend, precision)
+            compiled = fn.lower(*args).compile()
+            terms = analyze_hlo(compiled.as_text())
+            us = time_fn(lambda: jax.block_until_ready(fn(*args)),
+                         warmup=2, iters=5)
+            pred_ai = terms.flops / max(terms.hbm_bytes, 1.0)
+            achieved = terms.flops / max(us * 1e-6, 1e-12)
+            emit(f"roofline/{backend}/{precision}", us,
+                 f"M={M};K={K};N={N};keep={PRUNE_KEEP};"
+                 f"pred_flops={terms.flops:.3g};"
+                 f"pred_hbm_bytes={terms.hbm_bytes:.3g};"
+                 f"pred_intensity={pred_ai:.2f};"
+                 f"achieved_gflops={achieved / 1e9:.2f}")
 
 
 def render(path: str = "results_dryrun_single_pod.json") -> None:
@@ -25,7 +86,12 @@ def render(path: str = "results_dryrun_single_pod.json") -> None:
 
 
 def main() -> None:
+    gemm_roofline()
     render()
+    # artifact only — no committed baseline (the gate only reads names
+    # present under benchmarks/baselines/, so this file rides the CI
+    # artifact without being gated)
+    dump_bench_json("roofline")
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import dump_bench_json, emit
+from benchmarks.common import dump_bench_json, emit, emit_bytes
 from repro.configs import SMOKE_UNET
 from repro.configs.base import FLConfig
 from repro.core.hfl import FedPhD
@@ -95,10 +95,44 @@ def main() -> None:
     assert speedup >= 2.0, \
         f"vectorized round engine regressed: {speedup:.2f}x < 2x"
 
+    precision_and_bytes(us_vec)
     pipelined_ab()
     # medians -> $BENCH_OUT_DIR/BENCH_round_engine.json for the CI
     # regression gate (benchmarks/regression_gate.py)
     dump_bench_json("round_engine")
+
+
+def precision_and_bytes(us_fp32: float) -> None:
+    """The PR-9 axes on the same micro config: a bf16 vectorized round
+    (fp32 master weights, bf16 GEMMs — repro.models.ops) and the
+    bytes-on-wire uplink rows the gate pins exactly.  On this 2-core
+    CPU box bf16 is emulated, so ``vs_fp32`` is informational (not
+    asserted); the bytes rows ARE asserted — they are host-computed
+    from static shapes and must not drift."""
+    from repro.fl.compress import uplink_bytes
+
+    bf = FedPhD(MICRO_UNET.replace(precision="bf16"), _fl(), _clients(),
+                rng_seed=0, engine="vectorized", prune=False)
+    bf.run_round(1)                        # warmup: jit compile
+    ts = []
+    for r in range(2, TIMED_ROUNDS + 2):
+        t0 = time.perf_counter()
+        bf.run_round(r)
+        ts.append(time.perf_counter() - t0)
+    us_bf16 = float(np.median(ts)) * 1e6
+    shape = f"C={NUM_CLIENTS};E={NUM_EDGES};B={BATCH}"
+    emit("round_engine/vectorized_bf16", us_bf16,
+         f"{shape};vs_fp32={us_fp32 / max(us_bf16, 1e-9):.2f}x")
+
+    # one client->edge upload of the micro model's round delta
+    up_f = uplink_bytes(bf.params, "none")
+    up_q = uplink_bytes(bf.params, "int8")
+    emit_bytes("round_engine/uplink_fp32", up_f, "per-client delta")
+    emit_bytes("round_engine/uplink_int8", up_q,
+               f"ratio={up_f / up_q:.2f}x")
+    # int8 payload: 1 byte/elem + one fp32 scale/leaf -> ~4x under fp32
+    assert up_q * 3 < up_f, \
+        f"int8 uplink not compressing: {up_q}B vs fp32 {up_f}B"
 
 
 def pipelined_ab() -> None:

@@ -74,18 +74,20 @@ def _steady_step_us(params, cfg, masks, *, slots: int, iters: int = 2
     return float(np.median(times) * 1e6)
 
 
-def step_ab(backend: str) -> None:
-    cfg = SERVE_BENCH_UNET.replace(backend=backend)
+def step_ab(backend: str, precision: str = "fp32") -> None:
+    cfg = SERVE_BENCH_UNET.replace(backend=backend, precision=precision)
     params = init_unet(jax.random.PRNGKey(0), cfg)
     masks = masks_for_ratio(params, cfg, PRUNE_RATIO)
     slots = 2
     dense_us = _steady_step_us(params, cfg, None, slots=slots)
     masked_us = _steady_step_us(params, cfg, masks, slots=slots)
     speedup = dense_us / masked_us
-    emit(f"serve/{backend}/dense_step", dense_us, f"slots={slots}")
-    emit(f"serve/{backend}/masked_step", masked_us,
+    # fp32 rows keep their pre-precision names (committed baselines)
+    suffix = "" if precision == "fp32" else f"_{precision}"
+    emit(f"serve/{backend}/dense_step{suffix}", dense_us, f"slots={slots}")
+    emit(f"serve/{backend}/masked_step{suffix}", masked_us,
          f"slots={slots};ratio={PRUNE_RATIO};speedup={speedup:.2f}x")
-    if backend == "pallas":
+    if backend == "pallas" and precision == "fp32":
         # the acceptance bar: pruned serving must not be slower than
         # dense on the kernel backend — if it is, the static
         # specialization fell off the serve path
@@ -112,6 +114,13 @@ def end_to_end() -> None:
 def main() -> None:
     for backend in ("xla", "pallas"):
         step_ab(backend)
+    # precision axis: dense-vs-masked again under bf16 serving (weights
+    # cast once at server construction, activations at each GEMM —
+    # repro.models.ops).  xla only: the pallas rows run the interpreter
+    # on CPU and the bf16 leg would double an already-slow A/B for no
+    # extra coverage (the kernels are precision-parameterized either
+    # way and tested in tests/test_precision.py).
+    step_ab("xla", "bf16")
     end_to_end()
     dump_bench_json("serve")
 

@@ -119,6 +119,14 @@ class ModelConfig:
     # backend).  Part of the frozen config on purpose: the backend is a
     # static argument of every compiled step/round program.
     backend: str = ""
+    # --- compute precision ---------------------------------------------------
+    # repro.models.ops precision axis: "fp32" | "bf16"; "" resolves via
+    # $FEDPHD_PRECISION (trainers bake the resolved name in, same as
+    # backend).  bf16 casts float params inside the loss closure — the
+    # master weights, Adam moments, and aggregation stay fp32.  Frozen
+    # for the same reason as ``backend``: it is a static argument of
+    # every compiled step/round program.
+    precision: str = ""
 
     def __post_init__(self):
         if self.arch_type != "unet":

@@ -31,17 +31,19 @@ from repro.core.sh_score import AccumulatedDistribution, sh_score, uniform_targe
 from repro.data.pipeline import stack_round
 from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
+from repro.fl.compress import (QUANTS, downlink_bytes,
+                               ef_roundtrip_jit as _ef_jit, uplink_bytes)
 from repro.fl.engine import (adam_stack_from_tree, make_round_engine,
                              resolve_engine, resolve_store, route_engine,
-                             stacked_adam_init, store_tree, tree_gather,
-                             tree_scatter)
+                             stacked_adam_init, stacked_zeros, store_tree,
+                             tree_gather, tree_scatter)
 from repro.fl.faults import (FaultSpec, apply_late, late_delta,
                              make_fault_model)
 # RoundRecord is re-exported here for compatibility: it moved to
 # repro.fl.record when the flat baselines adopted the same schema.
 from repro.fl.record import RoundRecord, RunResult, evals_of
 from repro.models import model
-from repro.models.ops import resolve_backend
+from repro.models.ops import resolve_backend, resolve_precision
 from repro.optim import adam_init
 
 
@@ -90,11 +92,18 @@ class FedPhD:
                  persistent_opt: bool = False, state_store: str = "auto",
                  mesh=None, client_axis: str = "data",
                  eval_fn: Optional[Callable] = None, eval_every: int = 0,
-                 fault: Optional[FaultSpec] = None):
-        # bake the resolved compute backend into the frozen config so
-        # every compiled program (and the checkpoint manifest) pins a
-        # concrete backend even when it came from $FEDPHD_BACKEND
-        self.cfg = cfg = cfg.replace(backend=resolve_backend(cfg.backend))
+                 fault: Optional[FaultSpec] = None, quant: str = "none"):
+        # bake the resolved compute backend AND precision into the
+        # frozen config so every compiled program (and the checkpoint
+        # manifest) pins concrete values even when they came from
+        # $FEDPHD_BACKEND / $FEDPHD_PRECISION
+        self.cfg = cfg = cfg.replace(
+            backend=resolve_backend(cfg.backend),
+            precision=resolve_precision(cfg.precision))
+        if quant not in QUANTS:
+            raise ValueError(f"unknown quant {quant!r}; expected one of "
+                             f"{QUANTS}")
+        self.quant = quant
         self.fl = fl
         self.clients = clients
         self.selection = selection
@@ -164,12 +173,13 @@ class FedPhD:
                                           lr=self.lr)
         self._engine_sparse = make_round_engine(
             self.cfg, self.fl, sparse=True, groups=self.groups,
-            lr=self.lr, mesh=self.mesh,
-            client_axis=self.client_axis) if sparse else None
+            lr=self.lr, mesh=self.mesh, client_axis=self.client_axis,
+            quant=self.quant) if sparse else None
         self._engine_plain = make_round_engine(self.cfg, self.fl,
                                                sparse=False, lr=self.lr,
                                                mesh=self.mesh,
-                                               client_axis=self.client_axis)
+                                               client_axis=self.client_axis,
+                                               quant=self.quant)
         # one Adam zero-tree per model shape, shared by every client in
         # every sequential round (the vectorized engine builds its own
         # in-program constant)
@@ -180,6 +190,13 @@ class FedPhD:
         self._opt_stack = stacked_adam_init(self.params, len(self.clients),
                                             host=self._store == "host") \
             if self.persistent_opt else None
+        # per-client error-feedback residuals for the quantized uplink:
+        # fp32, congruent with params, reset here (= at the prune
+        # boundary, where the leaf shapes change under them)
+        self._err_stack = stacked_zeros(self.params, len(self.clients),
+                                        dtype=np.float32,
+                                        host=self._store == "host") \
+            if self.quant != "none" else None
 
     # -- bookkeeping ----------------------------------------------------------
     def _param_count_m(self) -> float:
@@ -189,6 +206,14 @@ class FedPhD:
         return sum(x.size * x.dtype.itemsize
                    for x in jax.tree.leaves(self.params))
 
+    def _wire_bytes(self):
+        """Bytes-on-wire per transfer: ``(up, up_late, down)`` — the
+        quantized on-time uplink (payload + per-leaf scales), the fp32
+        late/staleness uplink, and the compute-dtype download."""
+        return (uplink_bytes(self.params, self.quant),
+                uplink_bytes(self.params, "none"),
+                downlink_bytes(self.params, self.cfg.precision))
+
     # -- local training + edge aggregation (Alg. 1 lines 7-21) ---------------
     def _use_vectorized(self, round_clients) -> bool:
         use, self._warned_ragged = route_engine(
@@ -196,7 +221,7 @@ class FedPhD:
             self._warned_ragged, "FedPhD", method="fedphd")
         return use
 
-    def _local_and_edge_sequential(self, r, assignment, sparse_round, mbytes,
+    def _local_and_edge_sequential(self, r, assignment, sparse_round, wire,
                                    faults=None):
         """Reference path: one jitted step per batch, Python aggregation.
 
@@ -207,12 +232,18 @@ class FedPhD:
         (weights renormalized among them) and count uplink, and LATE
         clients' deltas buffer into ``_late_buf`` for the staleness
         merge at the edge's next aggregation.
+
+        With ``quant`` active, each ON-TIME reporter's delta runs the
+        error-feedback quantize->dequantize round trip and the edge
+        aggregates the reconstructed ``start + deq`` — late deltas ship
+        (and buffer) fp32.
         """
         fl = self.fl
+        up_q, up_f, down = wire
         step_fn = self.step_sparse if sparse_round else self.step_plain
         round_losses: List[float] = []
         loss_mask: List[bool] = []
-        comm_bytes = 0.0
+        up_bytes, down_bytes = 0.0, 0.0
         for e, cids in assignment.items():
             if not cids:
                 continue
@@ -231,6 +262,7 @@ class FedPhD:
                                              opt_state=opt_in,
                                              max_steps=budget)
                 completed = faults is None or faults.completed_of(cid)
+                late = faults is not None and faults.late_of(cid)
                 if self.persistent_opt and completed:
                     self._opt_stack = tree_scatter(self._opt_stack,
                                                    int(cid), opt_out)
@@ -240,11 +272,21 @@ class FedPhD:
                     n_arrived += 1
                 if completed:
                     self.edges[e].update(cl.q_n, cl.n_samples)     # Eq. 19
-                    comm_bytes += self.comm.client_edge(mbytes)     # upload
-                if faults is not None and faults.late_of(cid):
+                    up_bytes += self.comm.client_edge(up_f if late
+                                                      else up_q)    # upload
+                if late:
                     late_models.append(p)
                     late_counts.append(cl.n_samples)
                 elif completed:                       # reporting on time
+                    if self.quant != "none":
+                        delta = jax.tree.map(lambda a, b: a - b, p,
+                                             edge_model)
+                        e_row = store_tree(
+                            tree_gather(self._err_stack, int(cid)), "device")
+                        deq, new_err = _ef_jit(delta, e_row, self.quant)
+                        self._err_stack = tree_scatter(self._err_stack,
+                                                       int(cid), new_err)
+                        p = jax.tree.map(lambda s, d: s + d, edge_model, deq)
                     client_models.append(p)
                     counts.append(cl.n_samples)
                     mus.append(sh_score(cl.q_n, self.q_u))
@@ -272,10 +314,10 @@ class FedPhD:
                     self._edge_models = {}
                 self._edge_models[e] = agg
                 n_down = len(cids) if faults is None else n_arrived
-                comm_bytes += self.comm.client_edge(mbytes) * n_down  # down
-        return round_losses, comm_bytes, loss_mask
+                down_bytes += self.comm.client_edge(down) * n_down  # down
+        return round_losses, up_bytes, down_bytes, loss_mask
 
-    def _local_and_edge_vectorized(self, r, assignment, sparse_round, mbytes,
+    def _local_and_edge_vectorized(self, r, assignment, sparse_round, wire,
                                    faults=None):
         """Device-resident path: one program for all clients + edge agg.
 
@@ -361,6 +403,9 @@ class FedPhD:
                          tree_gather(self._opt_stack, idx_arr), "device")
                          if self.persistent_opt else None),
                      w_late=(jnp.asarray(w_late) if any_late else None),
+                     err=(store_tree(
+                         tree_gather(self._err_stack, idx_arr), "device")
+                         if self.quant != "none" else None),
                      masked=masked, per_client_opt=self.persistent_opt)
         if self.persistent_opt:
             if faults is None:
@@ -374,6 +419,16 @@ class FedPhD:
                     self._opt_stack = tree_scatter(
                         self._opt_stack, idx_arr[comp],
                         tree_gather(out["opt"], comp))
+        if self.quant != "none":
+            # only ON-TIME reporters shipped a quantized payload, so
+            # only their residual rows advance (mirrors the sequential
+            # loop; late/dropped lanes keep their buffers)
+            rep = np.asarray([i for i, (_, cid) in enumerate(order)
+                              if faults is None or faults.reporting_of(cid)])
+            if len(rep):
+                self._err_stack = tree_scatter(
+                    self._err_stack, idx_arr[rep],
+                    tree_gather(out["err"], rep))
         agg_stack = out["agg"]
         # NO host sync here: the (C,) loss array stays a device future
         # until _finish_round — under the pipelined run() the next
@@ -383,7 +438,8 @@ class FedPhD:
         loss_mask = [faults is None or faults.budget_of(cid) > 0
                      for _, cid in order]
 
-        comm_bytes = 0.0
+        up_q, up_f, down = wire
+        up_bytes, down_bytes = 0.0, 0.0
         n_arrived = {e: 0 for e in assignment}
         for e, cid in order:
             cl = self.clients[cid]
@@ -391,7 +447,9 @@ class FedPhD:
                 n_arrived[e] += 1
             if faults is None or faults.completed_of(cid):
                 self.edges[e].update(cl.q_n, cl.n_samples)      # Eq. 19
-                comm_bytes += self.comm.client_edge(mbytes)      # upload
+                late = faults is not None and faults.late_of(cid)
+                up_bytes += self.comm.client_edge(up_f if late
+                                                  else up_q)     # upload
         if r % fl.edge_agg_every == 0:
             if not hasattr(self, "_edge_models"):
                 self._edge_models = {}
@@ -414,8 +472,8 @@ class FedPhD:
                             lambda leaf, _e=e: leaf[_e], out["late"])
                 self._edge_models[e] = agg
                 n_down = len(cids) if faults is None else n_arrived[e]
-                comm_bytes += self.comm.client_edge(mbytes) * n_down
-        return round_losses, comm_bytes, loss_mask
+                down_bytes += self.comm.client_edge(down) * n_down
+        return round_losses, up_bytes, down_bytes, loss_mask
 
     # -- one communication round (Alg. 1 lines 3-32) -------------------------
     def run_round(self, r: int) -> RoundRecord:
@@ -470,26 +528,28 @@ class FedPhD:
             faults = self._faults.draw_round(
                 sel_ids, steps, self.aggregation == "staleness")
 
-        mbytes = self._model_bytes()
+        wire = self._wire_bytes()
         # lines 7-21: per-edge local training + edge aggregation
         if self._use_vectorized([self.clients[c] for c in sel_ids]):
-            round_losses, comm_bytes, loss_mask = \
+            round_losses, up_bytes, down_bytes, loss_mask = \
                 self._local_and_edge_vectorized(
-                    r, assignment, sparse_round, mbytes, faults)
+                    r, assignment, sparse_round, wire, faults)
         else:
-            round_losses, comm_bytes, loss_mask = \
+            round_losses, up_bytes, down_bytes, loss_mask = \
                 self._local_and_edge_sequential(
-                    r, assignment, sparse_round, mbytes, faults)
+                    r, assignment, sparse_round, wire, faults)
 
         pruned_this_round = False
-        # lines 23-31: cloud aggregation every r_g rounds
+        # lines 23-31: cloud aggregation every r_g rounds.  The
+        # edge<->cloud tier ships fp32 uploads (quantization is the
+        # client->edge uplink only) and compute-dtype broadcasts.
         if r % fl.cloud_agg_every == 0 and hasattr(self, "_edge_models"):
             models, counts, mus = [], [], []
             for e, m in self._edge_models.items():
                 models.append(m)
                 counts.append(self.edges[e].n)
                 mus.append(self.edges[e].sh(self.q_u))          # Eq. 20
-                comm_bytes += self.comm.edge_cloud(mbytes)      # upload
+                up_bytes += self.comm.edge_cloud(wire[1])       # upload
             if models:
                 if self.aggregation == "sh":
                     self.params = aggregate_sh(models, counts, mus,
@@ -502,11 +562,11 @@ class FedPhD:
                 self._prune_now(mode="group_norm")
                 self._rebuild_steps()
                 pruned_this_round = True
-                mbytes = self._model_bytes()
+                wire = self._wire_bytes()
                 # buffered late deltas have pre-prune shapes: drop them
                 self._late_buf = {}
             # broadcast + refresh (lines 29-31)
-            comm_bytes += self.comm.edge_cloud(mbytes) * fl.num_edges
+            down_bytes += self.comm.edge_cloud(wire[2]) * fl.num_edges
             self._edge_models = {e: self.params for e in range(fl.num_edges)}
             for e in self.edges:
                 e.refresh()
@@ -515,7 +575,8 @@ class FedPhD:
         # params/cfg the eval hook sees must not leak mutations from a
         # round dispatched before this one is finalized
         return {"round": r, "losses": round_losses,
-                "comm_bytes": comm_bytes, "sel_ids": sel_ids,
+                "up_bytes": up_bytes, "down_bytes": down_bytes,
+                "sel_ids": sel_ids,
                 "pruned": pruned_this_round, "params": self.params,
                 "cfg": self.cfg, "params_m": self._param_count_m(),
                 "edge_sh": [e.sh(self.q_u) for e in self.edges],
@@ -535,7 +596,11 @@ class FedPhD:
             round=r,
             loss=float(np.mean(losses)) if losses
             else (0.0 if mask is not None else float("nan")),
-            comm_gb=pend["comm_bytes"] / 1e9,
+            # totals as the sum of the ROUNDED up/down fields, so
+            # comm_gb == comm_up_gb + comm_down_gb holds exactly
+            comm_gb=pend["up_bytes"] / 1e9 + pend["down_bytes"] / 1e9,
+            comm_up_gb=pend["up_bytes"] / 1e9,
+            comm_down_gb=pend["down_bytes"] / 1e9,
             params_m=pend["params_m"],
             selected=[int(c) for c in pend["sel_ids"]],
             edge_sh=pend["edge_sh"],
@@ -613,6 +678,10 @@ class FedPhD:
             "edge_n": np.asarray([e.n for e in self.edges], np.int64),
             "late_buf": ({str(e): t for e, t in self._late_buf.items()}
                          or None),
+            # quantized-uplink error-feedback residuals (None when
+            # quant == "none"): restoring them bitwise is what keeps a
+            # kill-and-resume trajectory identical to an unbroken run
+            "err_stack": self._err_stack,
         }
         meta = {
             "trainer": "fedphd",
@@ -630,8 +699,9 @@ class FedPhD:
         constructor arguments (same cfg/fl/clients/seed)."""
         to_dev = lambda t: jax.tree.map(jnp.asarray, t)
         cfg = config_from_dict(meta["cfg"])
-        # pre-backend checkpoints carry backend="" — resolve as at init
-        self.cfg = cfg.replace(backend=resolve_backend(cfg.backend))
+        # pre-backend/precision checkpoints carry "" — resolve as at init
+        self.cfg = cfg.replace(backend=resolve_backend(cfg.backend),
+                               precision=resolve_precision(cfg.precision))
         self.pruned = bool(meta["pruned"])
         self.params = to_dev(arrays["params"])
         self.rng = jnp.asarray(arrays["rng"])
@@ -655,6 +725,11 @@ class FedPhD:
             self._faults.set_state(meta["fault"])
         self.history = [RoundRecord.from_dict(d) for d in meta["history"]]
         self._rebuild_steps()
+        if self.quant != "none" and arrays.get("err_stack") is not None:
+            # after _rebuild_steps (which zeroes the stack for the
+            # restored cfg's shapes) — land the saved residuals where
+            # this trainer keeps them
+            self._err_stack = store_tree(arrays["err_stack"], self._store)
         if self.persistent_opt:
             self._opt_stack = adam_stack_from_tree(arrays["opt_stack"],
                                                    self._store)

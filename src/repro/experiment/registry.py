@@ -96,7 +96,7 @@ def _fedphd_factory(prune_mode: str = "",
                       persistent_opt=spec.persistent_opt,
                       state_store=spec.state_store, mesh=_spec_mesh(spec),
                       eval_fn=eval_fn, eval_every=spec.eval_every,
-                      fault=spec.fault)
+                      fault=spec.fault, quant=spec.comm.quant)
     return make
 
 
@@ -108,7 +108,8 @@ def _flat_factory(method: str, aggregation: str = "fedavg") -> TrainerFactory:
                            state_store=spec.state_store,
                            mesh=_spec_mesh(spec),
                            eval_fn=eval_fn, eval_every=spec.eval_every,
-                           aggregation=aggregation, fault=spec.fault)
+                           aggregation=aggregation, fault=spec.fault,
+                           quant=spec.comm.quant)
     return make
 
 

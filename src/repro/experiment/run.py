@@ -44,6 +44,9 @@ class Experiment:
             # thread the spec's compute backend into the model config —
             # the trainer resolves ""/$FEDPHD_BACKEND at construction
             self.model_cfg = self.model_cfg.replace(backend=spec.backend)
+        if spec.precision:
+            # same contract for the precision axis ($FEDPHD_PRECISION)
+            self.model_cfg = self.model_cfg.replace(precision=spec.precision)
         self.images = self.labels = None
         if clients is None:
             clients, self.images, self.labels = make_clients(spec)

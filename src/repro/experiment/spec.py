@@ -21,6 +21,7 @@ import json
 from typing import Optional
 
 from repro.configs.base import FLConfig, fl_from_dict
+from repro.fl.compress import CommSpec
 from repro.fl.faults import FaultSpec
 
 TOPOLOGIES = ("hierarchical", "flat")
@@ -55,6 +56,9 @@ class ExperimentSpec:
     backend: Optional[str] = None   # xla | pallas | ref compute backend
                                     # (None = $FEDPHD_BACKEND or xla);
                                     # threaded into ModelConfig.backend
+    precision: Optional[str] = None  # fp32 | bf16 compute precision
+                                    # (None = $FEDPHD_PRECISION or fp32);
+                                    # threaded into ModelConfig.precision
     persistent_opt: bool = False
     state_store: str = "auto"       # stacked per-client state residency:
                                     # auto | device | host (host keeps
@@ -72,6 +76,9 @@ class ExperimentSpec:
                                     # (default: disabled — bitwise
                                     # identical to the fault-free path);
                                     # sweepable as fault.* axes
+    comm: CommSpec = CommSpec()     # uplink compression (repro.fl.
+                                    # compress): sweepable as comm.quant
+                                    # = none | int8 | fp8
 
     def replace(self, **kw) -> "ExperimentSpec":
         return dataclasses.replace(self, **kw)
@@ -90,6 +97,8 @@ class ExperimentSpec:
             d["data"] = DataSpec(**d["data"])
         if isinstance(d.get("fault"), dict):
             d["fault"] = FaultSpec.from_dict(d["fault"])
+        if isinstance(d.get("comm"), dict):
+            d["comm"] = CommSpec.from_dict(d["comm"])
         if isinstance(d.get("mesh"), dict):
             # JSON numbers may arrive as floats; axis sizes are ints
             d["mesh"] = {str(k): int(v) for k, v in d["mesh"].items()}

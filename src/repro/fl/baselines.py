@@ -45,6 +45,8 @@ from repro.core.aggregation import (aggregate_fedavg, fedavg_weights,
 from repro.data.pipeline import stack_round
 from repro.fl.client import Client, make_local_step, run_local
 from repro.fl.comm import CommModel
+from repro.fl.compress import (QUANTS, downlink_bytes,
+                               ef_roundtrip_jit as _ef_jit, uplink_bytes)
 from repro.fl.engine import (adam_stack_from_tree, make_round_engine,
                              resolve_engine, resolve_store, route_engine,
                              stacked_adam_init, stacked_zeros, store_tree,
@@ -121,8 +123,13 @@ class FlatTrainer:
                  mesh=None, client_axis: str = "data",
                  eval_fn: Optional[Callable] = None, eval_every: int = 0,
                  aggregation: str = "fedavg",
-                 fault: Optional[FaultSpec] = None):
+                 fault: Optional[FaultSpec] = None,
+                 quant: str = "none"):
         assert method in FLAT_METHODS
+        if quant not in QUANTS:
+            raise ValueError(f"unknown quant {quant!r}; expected one of "
+                             f"{QUANTS}")
+        self.quant = quant
         self.method = method
         if aggregation not in ("fedavg", "staleness"):
             raise ValueError(f"unknown flat aggregation {aggregation!r}")
@@ -132,11 +139,13 @@ class FlatTrainer:
         # "staleness" == FedAvg over on-time reporters + the buffered
         # late-delta merge; with no stragglers it IS FedAvg exactly
         self.aggregation = aggregation
-        # pin the resolved compute backend (repro.models.ops) so every
-        # compiled step/round program and the memoized engine key carry
-        # a concrete backend — mirrors FedPhD
-        from repro.models.ops import resolve_backend
-        self.cfg = cfg = cfg.replace(backend=resolve_backend(cfg.backend))
+        # pin the resolved compute backend + precision (repro.models.ops)
+        # so every compiled step/round program and the memoized engine
+        # key carry concrete values — mirrors FedPhD
+        from repro.models.ops import resolve_backend, resolve_precision
+        self.cfg = cfg = cfg.replace(
+            backend=resolve_backend(cfg.backend),
+            precision=resolve_precision(cfg.precision))
         self.fl = fl
         self.clients = clients
         self.lr = lr
@@ -174,7 +183,8 @@ class FlatTrainer:
         self._round_engine = make_round_engine(cfg, fl, method=method,
                                                lr=lr, unroll=1,
                                                mesh=mesh,
-                                               client_axis=client_axis)
+                                               client_axis=client_axis,
+                                               quant=quant)
 
         n = len(clients)
         # stacked (N,) method state lives on device by default; for
@@ -200,6 +210,12 @@ class FlatTrainer:
         self._local_stack = stacked_zeros(
             _split_shared(self.params, cfg)[1], n, host=host) \
             if method == "feddiffuse" else None
+        # per-client error-feedback residuals for the quantized uplink
+        # (repro.fl.compress): fp32, params-congruent, same residency
+        # rules as the other stacked method state
+        self._err_stack = stacked_zeros(self.params, n,
+                                        dtype=np.float32, host=host) \
+            if quant != "none" else None
         self._seen = np.zeros(n, bool)
 
         self.history: List[RoundRecord] = []
@@ -260,8 +276,25 @@ class FlatTrainer:
                 self._seen[cid] = True
             if reporting:
                 counts.append(cl.n_samples)
-                client_models.append(_split_shared(new_p, cfg)[0]
-                                     if method == "feddiffuse" else new_p)
+                up_p = new_p
+                if self.quant != "none":
+                    # quantized uplink: the server decodes start + deq;
+                    # the residual persists as this client's error
+                    # buffer.  Client-local state (MOON prev models,
+                    # FedDiffuse local subtrees, SCAFFOLD variates)
+                    # keeps the TRUE new_p above — it never hits the
+                    # wire.  Delta base is the per-client start (for
+                    # FedDiffuse that includes the local rows, matching
+                    # the vectorized engine's lane start).
+                    delta = jax.tree.map(lambda a, b: a - b, new_p, start)
+                    e_row = store_tree(
+                        tree_gather(self._err_stack, cid), "device")
+                    deq, new_err = _ef_jit(delta, e_row, self.quant)
+                    self._err_stack = tree_scatter(self._err_stack, cid,
+                                                   new_err)
+                    up_p = jax.tree.map(lambda s, d: s + d, start, deq)
+                client_models.append(_split_shared(up_p, cfg)[0]
+                                     if method == "feddiffuse" else up_p)
             elif faults is not None and faults.late_of(cid):
                 late_models.append(new_p)
                 late_counts.append(cl.n_samples)
@@ -382,6 +415,9 @@ class FlatTrainer:
                                    "device")
                         if self.persistent_opt else None),
             w_late=w_late,
+            err=(store_tree(tree_gather(self._err_stack, sel_arr),
+                            "device")
+                 if self.quant != "none" else None),
             masked=padded, per_client_opt=self.persistent_opt)
         # NO host sync here: the (C,) loss array stays a device future
         # until _finish_round — under the pipelined run() the next
@@ -402,6 +438,15 @@ class FlatTrainer:
                 self._late_buf = jax.tree.map(lambda leaf: leaf[0],
                                               out["late"])
         comp_rel = np.flatnonzero(comp)
+
+        if self.quant != "none":
+            # only ON-TIME reporters shipped a quantized payload —
+            # their lanes (and only theirs) persist a new residual
+            rep_rel = np.flatnonzero(rep)
+            if len(rep_rel):
+                self._err_stack = tree_scatter(
+                    self._err_stack, sel_arr[rep_rel],
+                    tree_gather(out["err"], rep_rel))
 
         if self.persistent_opt and len(comp_rel):
             if faults is None:
@@ -452,6 +497,23 @@ class FlatTrainer:
         return losses
 
     # -- one round -----------------------------------------------------------
+    def _wire_bytes(self):
+        """Per-transfer volumes ``(up_quantized, up_full, down)`` in
+        bytes-on-wire (repro.fl.compress).  Only the model subtree a
+        method actually communicates is counted: FedDiffuse ships the
+        shared half, SCAFFOLD adds its fp32 control variates (never
+        quantized) in both directions."""
+        comm_tree = _split_shared(self.params, self.cfg)[0] \
+            if self.method == "feddiffuse" else self.params
+        up_q = uplink_bytes(comm_tree, self.quant)
+        up_f = uplink_bytes(comm_tree, "none")
+        down = downlink_bytes(comm_tree, self.cfg.precision)
+        if self.method == "scaffold":
+            up_q += uplink_bytes(self.params, "none")
+            up_f += uplink_bytes(self.params, "none")
+            down += downlink_bytes(self.params, "fp32")
+        return up_q, up_f, down
+
     def run_round(self, r: int) -> RoundRecord:
         return self._finish_round(self._start_round(r))
 
@@ -500,26 +562,27 @@ class FlatTrainer:
         else:
             losses = self._round_sequential(sel, subs, faults)  # host floats
 
-        if method == "feddiffuse":
-            vol = self.mbytes * shared_fraction(self.params, self.cfg)
-        elif method == "scaffold":
-            vol = self.mbytes * 2  # model + control variate
-        else:
-            vol = self.mbytes
+        up_q, up_f, down = self._wire_bytes()
         if faults is None:
-            comm_gb = self.comm.flat_fl_round(vol, len(sel)) / 1e9
+            up_bytes = len(sel) * self.comm.edge_cloud(up_q)
+            down_bytes = len(sel) * self.comm.edge_cloud(down)
         else:
             # downloads to every arrived client, uploads only from the
-            # clients that finished (dropped clients = zero uplink)
+            # clients that finished (dropped clients = zero uplink);
+            # only on-time reporters shipped the quantized payload
             n_arr = int(np.sum(faults.arrived))
-            n_comp = int(np.sum(faults.completed))
-            comm_gb = (n_arr + n_comp) * self.comm.edge_cloud(vol) / 1e9
+            n_rep = sum(1 for c in sel if faults.completed_of(int(c))
+                        and faults.reporting_of(int(c)))
+            n_full = int(np.sum(faults.completed)) - n_rep
+            up_bytes = n_rep * self.comm.edge_cloud(up_q) \
+                + n_full * self.comm.edge_cloud(up_f)
+            down_bytes = n_arr * self.comm.edge_cloud(down)
         # snapshot end-of-round state the record needs: the params the
         # eval hook sees must not leak mutations from a round
         # dispatched before this one is finalized
         return {
             "round": r, "losses": losses, "sel_ids": sel,
-            "comm_gb": comm_gb,
+            "up_bytes": up_bytes, "down_bytes": down_bytes,
             "params_m": sum(x.size
                             for x in jax.tree.leaves(self.params)) / 1e6,
             "params": self.params, "cfg": self.cfg,
@@ -540,7 +603,14 @@ class FlatTrainer:
         rec = RoundRecord(
             round=r,
             loss=float(np.mean(losses)) if losses else 0.0,
-            comm_gb=pend["comm_gb"],
+            # totals as the sum of the ROUNDED up/down fields, so
+            # comm_gb == comm_up_gb + comm_down_gb holds exactly (the
+            # real value is the same; fault-free flat comm stays
+            # bitwise-equal to the legacy 2n*edge_cloud(v)/1e9 because
+            # rounding commutes with the exact power-of-2 doubling)
+            comm_gb=pend["up_bytes"] / 1e9 + pend["down_bytes"] / 1e9,
+            comm_up_gb=pend["up_bytes"] / 1e9,
+            comm_down_gb=pend["down_bytes"] / 1e9,
             params_m=pend["params_m"],
             selected=[int(c) for c in pend["sel_ids"]],
             availability=pend.get("availability"),
@@ -606,6 +676,7 @@ class FlatTrainer:
             "local_stack": self._local_stack,
             "seen": self._seen,
             "late_buf": self._late_buf,
+            "err_stack": self._err_stack,
         }
         meta = {
             "trainer": "flat",
@@ -636,6 +707,8 @@ class FlatTrainer:
         self._local_stack = to_store(arrays["local_stack"])
         self._seen = np.asarray(arrays["seen"], bool).copy()
         self._late_buf = to_dev(arrays.get("late_buf"))
+        if self.quant != "none" and arrays.get("err_stack") is not None:
+            self._err_stack = to_store(arrays["err_stack"])
         if self.persistent_opt:
             self._opt_stack = adam_stack_from_tree(arrays["opt_stack"],
                                                    self._store)

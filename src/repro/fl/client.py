@@ -22,6 +22,7 @@ from repro.configs.base import FLConfig, ModelConfig
 from repro.core.pruning import depth_lambdas, omega
 from repro.data.pipeline import ClientData
 from repro.models import model
+from repro.models.ops import cast_floats, compute_dtype
 from repro.optim import adam_init, adam_update
 
 
@@ -73,10 +74,20 @@ def make_loss_fn(cfg: ModelConfig, fl: FLConfig, *, method: str = "fedphd",
     op inside (repro.models.ops); ``prune_masks`` switches the U-Net
     forward to the masked sparse-phase path (col/row-masked GEMMs
     instead of training on pre-zeroed weights).
+
+    ``cfg.precision`` is the mixed-precision boundary: under bf16 the
+    float params are cast to bfloat16 HERE, inside the loss closure —
+    so both consumers (``make_local_step`` and the round engine's
+    ``make_train_one``) compute forward+backward in bf16 while
+    ``value_and_grad`` transposes the ``astype`` back to fp32 grads;
+    the params the optimizer sees remain the fp32 master weights.
     """
     lambdas = depth_lambdas(groups, fl.lambda0) if (sparse and groups) else None
+    dt = compute_dtype(cfg.precision)
 
     def loss_fn(params, batch, rng, ctx):
+        if dt != jnp.float32:
+            params = cast_floats(params, dt)
         loss = model.loss_fn(params, cfg, batch, rng, masks=prune_masks)
         if sparse and groups:
             loss = loss + omega(params, groups, lambdas, backend=cfg.backend)

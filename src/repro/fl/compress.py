@@ -1,0 +1,165 @@
+"""Quantized client->edge delta uplink with error feedback.
+
+FedPhD cuts communication structurally (pruning shrinks the model that
+ships); this module cuts it numerically, on the same uplink: each
+on-time client uploads its round delta ``theta_i - start`` quantized to
+int8 or fp8-e4m3 with ONE fp32 scale per parameter leaf, and keeps a
+persistent fp32 *error-feedback* buffer so the quantization residual is
+re-added to the next round's delta instead of being lost — FedDM's
+compression direction (PAPERS.md), which preserves sample quality
+because the error is fed back, not dropped.
+
+Contract:
+
+  * quantization applies to the ON-TIME reporting uplink only.  Late
+    (staleness) deltas, SCAFFOLD control variates, and every download
+    ship uncompressed; MOON/FedDiffuse client-local state is never a
+    wire payload and stays exact.
+  * the edge aggregates the *reconstructed* models ``start + deq`` —
+    what it could actually decode from the wire — so the trained
+    trajectory honestly includes the compression error.
+  * error-feedback buffers are per-client fp32 pytrees congruent with
+    the params.  They ride the stacked per-client state substrate of
+    ``repro.fl.engine`` (host ``state_store`` aware), checkpoint in
+    ``state()``/``restore()``, and reset at the prune boundary (the
+    leaf shapes change under them).
+  * scales are per leaf per client: ``maxabs / qmax``.  fp8-e4m3 does
+    NOT saturate on overflow in XLA (out-of-range casts produce NaN),
+    so values are clipped to +-448 before the cast.
+
+Byte accounting (:func:`uplink_bytes` / :func:`downlink_bytes`) is
+bytes-on-wire: quantized payloads count 1 byte per element plus a 4-byte
+fp32 scale per leaf; unquantized uploads count the fp32 master deltas
+aggregation consumes; downloads count the compute-dtype cast clients
+actually consume (2 bytes/param under bf16).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+QUANTS = ("none", "int8", "fp8")
+
+# fp8 is e4m3fn: max finite magnitude 448; int8 symmetric around 0
+_QMAX = {"int8": 127.0, "fp8": 448.0}
+
+_PRECISION_BYTES = {"": 4, "fp32": 4, "bf16": 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """Declarative comm-compression knobs (lives on
+    ``ExperimentSpec.comm``, so sweeps can grid over ``comm.quant``)."""
+    quant: str = "none"          # none | int8 | fp8 — uplink delta dtype
+
+    def __post_init__(self):
+        if self.quant not in QUANTS:
+            raise ValueError(f"comm.quant={self.quant!r} not in {QUANTS}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.quant != "none"
+
+    def replace(self, **kw) -> "CommSpec":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CommSpec":
+        known = {k: v for k, v in d.items()
+                 if k in {f.name for f in dataclasses.fields(cls)}}
+        return cls(**known)
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize (jit-safe; `quant` is trace-time static)
+# ---------------------------------------------------------------------------
+
+def _quantize_leaf(v, quant: str, axes):
+    """fp32 leaf -> (payload, fp32 scale) with maxabs/qmax scaling over
+    ``axes`` (all axes for a single client, trailing axes for a stacked
+    (C, ...) leaf so every client gets its own scale)."""
+    qmax = _QMAX[quant]
+    amax = jnp.max(jnp.abs(v), axis=axes, keepdims=True)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    if quant == "int8":
+        q = jnp.clip(jnp.round(v / scale), -qmax, qmax).astype(jnp.int8)
+    else:
+        # e4m3 overflow is NaN, not saturation — clip BEFORE the cast
+        q = jnp.clip(v / scale, -qmax, qmax).astype(jnp.float8_e4m3fn)
+    return q, scale
+
+
+def ef_roundtrip(delta, err, quant: str):
+    """Per-client error-feedback round trip over a params-congruent
+    pytree: ``v = delta + err`` is quantized leaf-wise (one scale per
+    leaf), and ``(dequantized, v - dequantized)`` trees come back.
+
+    The caller aggregates ``start + dequantized`` and persists the new
+    residual as the client's error buffer for the next round."""
+    leaves, treedef = jax.tree.flatten(delta)
+    errs = treedef.flatten_up_to(err)
+    out = [_ef_leaf(d, e, quant, stacked=False) for d, e in zip(leaves, errs)]
+    deq = treedef.unflatten([o[0] for o in out])
+    new_err = treedef.unflatten([o[1] for o in out])
+    return deq, new_err
+
+
+# one compiled round trip per (treedef, quant) — the sequential paths
+# of both trainers call this once per reporting client
+ef_roundtrip_jit = jax.jit(ef_roundtrip, static_argnums=2)
+
+
+def ef_roundtrip_stacked(delta, err, quant: str):
+    """Vectorized-engine variant: every leaf carries a leading client
+    axis ``(C, ...)``; scales are per client per leaf (reduced over the
+    trailing axes), matching :func:`ef_roundtrip` client-for-client."""
+    leaves, treedef = jax.tree.flatten(delta)
+    errs = treedef.flatten_up_to(err)
+    out = [_ef_leaf(d, e, quant, stacked=True) for d, e in zip(leaves, errs)]
+    deq = treedef.unflatten([o[0] for o in out])
+    new_err = treedef.unflatten([o[1] for o in out])
+    return deq, new_err
+
+
+def _ef_leaf(d, e, quant: str, *, stacked: bool):
+    v = d.astype(jnp.float32) + e
+    axes = tuple(range(1, v.ndim)) if stacked else None
+    q, scale = _quantize_leaf(v, quant, axes)
+    deq = q.astype(jnp.float32) * scale
+    return deq, v - deq
+
+
+# ---------------------------------------------------------------------------
+# bytes-on-wire accounting (host-side, exact)
+# ---------------------------------------------------------------------------
+
+def tree_counts(tree):
+    """(total elements, number of leaves) of a pytree — static shapes,
+    so every engine computes identical byte totals."""
+    leaves = jax.tree.leaves(tree)
+    return int(sum(int(x.size) for x in leaves)), len(leaves)
+
+
+def uplink_bytes(tree, quant: str, *, precision: str = "fp32") -> int:
+    """One client->edge upload of ``tree``: quantized payloads ship one
+    byte per element plus a 4-byte fp32 scale per leaf; ``none`` ships
+    the fp32 master delta aggregation consumes (uploads do NOT shrink
+    under bf16 compute — the trained result the server needs is the
+    fp32 master)."""
+    n, leaves = tree_counts(tree)
+    if quant == "none":
+        return n * 4
+    return n * 1 + leaves * 4
+
+
+def downlink_bytes(tree, precision: str) -> int:
+    """One edge->client broadcast: clients compute in the resolved
+    precision, so the wire carries the compute-dtype cast (2 bytes per
+    param under bf16; see README for the fp32-master caveat)."""
+    n, _ = tree_counts(tree)
+    return n * _PRECISION_BYTES[precision]

@@ -52,6 +52,7 @@ import numpy as np
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.aggregation import combine_leaf
 from repro.fl.client import make_loss_fn, scaffold_correction
+from repro.fl.compress import ef_roundtrip_stacked
 from repro.optim import AdamState, adam_init, adam_update
 
 ENGINES = ("auto", "vectorized", "sequential")
@@ -270,11 +271,11 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
                       method: str = "fedphd", sparse: bool = False,
                       groups=None, lr: float = 2e-4, unroll: int = 8,
                       prune_masks=None, mesh=None,
-                      client_axis: str = "data"):
+                      client_axis: str = "data", quant: str = "none"):
     """Build the jitted vectorized round program for ``method``.
 
     Plain (non-sparse) engines are memoized on the hashable
-    ``(cfg, fl, method, lr, unroll, mesh, client_axis)`` key: every
+    ``(cfg, fl, method, lr, unroll, mesh, client_axis, quant)`` key: every
     trainer built with the same configs shares one engine function and
     therefore one XLA compile cache — constructing several trainers
     (equivalence tests, benches, sweeps) no longer recompiles the round
@@ -297,8 +298,17 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
     path (block-masked GEMMs instead of pre-zeroed weights); masked
     engines are never memoized.
 
+    ``quant`` (repro.fl.compress: "none" | "int8" | "fp8") enables the
+    quantized-uplink path: the engine takes gathered per-client
+    error-feedback rows via ``err=``, runs the delta quantize->
+    dequantize round trip on device, aggregates the RECONSTRUCTED
+    models ``start + deq`` (what the edge could decode from the wire),
+    and returns the new residual rows as ``"err"``.  Late (staleness)
+    deltas and SCAFFOLD control variates stay fp32 — quantization is
+    the on-time reporting uplink only.
+
     Returns ``engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
-    ctx=None, opt_states=None, w_late=None, masked=True,
+    ctx=None, opt_states=None, w_late=None, err=None, masked=True,
     per_client_opt=False)`` where
 
       edge_params: pytree, leaves (E, ...) — one model per edge server
@@ -312,6 +322,8 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
       opt_states:  stacked per-client Adam rows (with per_client_opt)
       w_late:      optional (E, C) fp32 — staleness-aggregation rows
                    over LATE clients' deltas (unnormalized shares)
+      err:         stacked (C, ...) fp32 error-feedback rows (iff the
+                   engine was built with ``quant != "none"``)
 
     and the result is a dict:
 
@@ -319,6 +331,8 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
       "losses": (C,) per-client mean local loss
       "late":   per-edge weighted late-delta sums (iff w_late given)
       "opt":    updated stacked Adam rows        (iff per_client_opt)
+      "err":    (C, ...) updated error-feedback rows (iff quantizing;
+                the caller scatters back ONLY the on-time reporters)
       "trained": (C, ...) per-client trained params   (moon/feddiffuse,
                  which persist per-client state between rounds)
       "c_new", "dc_mean": SCAFFOLD c_i+ stack and mean control delta
@@ -327,18 +341,20 @@ def make_round_engine(cfg: ModelConfig, fl: FLConfig, *,
         # jax meshes hash and compare by (devices, axis names), so the
         # memo key stays sound across trainers sharing one mesh object
         return _plain_round_engine(cfg, fl, method, lr, unroll, mesh,
-                                   client_axis)
+                                   client_axis, quant)
     return _build_round_engine(cfg, fl, method=method, sparse=sparse,
                                groups=groups, lr=lr, unroll=unroll,
                                prune_masks=prune_masks, mesh=mesh,
-                               client_axis=client_axis)
+                               client_axis=client_axis, quant=quant)
 
 
 @lru_cache(maxsize=64)
-def _plain_round_engine(cfg, fl, method, lr, unroll, mesh, client_axis):
+def _plain_round_engine(cfg, fl, method, lr, unroll, mesh, client_axis,
+                        quant):
     return _build_round_engine(cfg, fl, method=method, sparse=False,
                                groups=None, lr=lr, unroll=unroll,
-                               mesh=mesh, client_axis=client_axis)
+                               mesh=mesh, client_axis=client_axis,
+                               quant=quant)
 
 
 def _make_sharded_engine(engine, mesh, client_axis: str, ctx_axes):
@@ -350,26 +366,28 @@ def _make_sharded_engine(engine, mesh, client_axis: str, ctx_axes):
     from repro.launch.federated import shard_clients
 
     def sharded(edge_params, edge_idx, batches, valid, rngs, w_mat,
-                ctx=None, opt_states=None, w_late=None, masked=True,
-                per_client_opt=False):
+                ctx=None, opt_states=None, w_late=None, err=None,
+                masked=True, per_client_opt=False):
         put = lambda t: shard_clients(t, mesh, client_axis)
         edge_idx, batches, valid, rngs = (
             put(t) for t in (edge_idx, batches, valid, rngs))
         if opt_states is not None:
             opt_states = put(opt_states)
+        if err is not None:
+            err = put(err)
         if ctx:
             ctx = {k: put(v) if ctx_axes.get(k) == 0 else v
                    for k, v in ctx.items()}
         return engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
                       ctx=ctx, opt_states=opt_states, w_late=w_late,
-                      masked=masked, per_client_opt=per_client_opt)
+                      err=err, masked=masked, per_client_opt=per_client_opt)
     return sharded
 
 
 def _build_round_engine(cfg: ModelConfig, fl: FLConfig, *, method: str,
                         sparse: bool, groups, lr: float, unroll: int,
                         prune_masks=None, mesh=None,
-                        client_axis: str = "data"):
+                        client_axis: str = "data", quant: str = "none"):
     loss_fn = make_loss_fn(cfg, fl, method=method, sparse=sparse,
                            groups=groups, prune_masks=prune_masks)
     train_one = make_train_one(loss_fn, method=method, lr=lr, unroll=unroll)
@@ -384,10 +402,10 @@ def _build_round_engine(cfg: ModelConfig, fl: FLConfig, *, method: str,
     # copies live.  (The stacked_epochs batch buffer has no matching
     # output to alias, so donating it would be a no-op plus a warning.)
     @partial(jax.jit, static_argnames=("masked", "per_client_opt"),
-             donate_argnums=(0,), donate_argnames=("opt_states",))
+             donate_argnums=(0,), donate_argnames=("opt_states", "err"))
     def engine(edge_params, edge_idx, batches, valid, rngs, w_mat,
-               ctx=None, opt_states=None, w_late=None, masked: bool = True,
-               per_client_opt: bool = False):
+               ctx=None, opt_states=None, w_late=None, err=None,
+               masked: bool = True, per_client_opt: bool = False):
         ctx = {} if ctx is None else ctx
         start = jax.tree.map(lambda leaf: leaf[edge_idx], edge_params)
         if method == "feddiffuse":
@@ -404,9 +422,23 @@ def _build_round_engine(cfg: ModelConfig, fl: FLConfig, *, method: str,
             lambda p, o, b, v, r, c: train_one(p, o, b, v, r, c, masked),
             in_axes=(0, opt_axes, 0, 0, 0, ctx_axes))(
                 start, opt0, batches, valid, rngs, ctx)
+        if quant != "none" and err is not None:
+            # quantized uplink: the edge can only decode start + deq
+            # from the wire, so THAT is what aggregates; the residual
+            # rows go back to the caller for the next round's feedback
+            up = jax.tree.map(lambda t, s: t.astype(jnp.float32)
+                              - s.astype(jnp.float32), trained, start)
+            deq, new_err = ef_roundtrip_stacked(up, err, quant)
+            recon = jax.tree.map(lambda s, d: s.astype(jnp.float32) + d,
+                                 start, deq)
+            agg_src, err_out = recon, new_err
+        else:
+            agg_src, err_out = trained, None
         out = {"agg": jax.tree.map(lambda leaf: combine_leaf(leaf, w_mat),
-                                   trained),
+                                   agg_src),
                "losses": losses}
+        if err_out is not None:
+            out["err"] = err_out
         if w_late is not None:
             # staleness aggregation: fused (E, C) einsum over the late
             # clients' deltas (their w_mat entries are zero, so they are

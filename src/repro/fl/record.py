@@ -29,6 +29,11 @@ class RoundRecord:
     round: int
     loss: float
     comm_gb: float
+    # bytes-on-wire split (comm_gb = comm_up_gb + comm_down_gb): the
+    # uplink is what comm.quant compresses, so it is reported on its
+    # own.  None on histories recorded before the split existed.
+    comm_up_gb: Optional[float] = None
+    comm_down_gb: Optional[float] = None
     params_m: float = 0.0
     selected: List[int] = dataclasses.field(default_factory=list)
     eval: Any = None

@@ -58,6 +58,14 @@ from repro.kernels.group_l2_norms.ref import group_l2_norms_ref
 
 BACKENDS = ("xla", "pallas", "ref")
 
+# compute-precision axis, resolved exactly like the backend: fp32 keeps
+# today's numerics; bf16 runs the GEMMs/attention in bfloat16 while
+# aggregation, Adam moments, and the master weights stay fp32 (the cast
+# lives in make_train_one/make_local_step — see repro.fl.engine)
+PRECISIONS = ("fp32", "bf16")
+
+_COMPUTE_DTYPE = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+
 
 def resolve_backend(backend: Optional[str] = None) -> str:
     """Explicit choice > ``$FEDPHD_BACKEND`` > ``"xla"``."""
@@ -68,9 +76,50 @@ def resolve_backend(backend: Optional[str] = None) -> str:
     return backend
 
 
+def resolve_precision(precision: Optional[str] = None) -> str:
+    """Explicit choice > ``$FEDPHD_PRECISION`` > ``"fp32"``."""
+    precision = precision or os.environ.get("FEDPHD_PRECISION") or "fp32"
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r}; expected one "
+                         f"of {PRECISIONS}")
+    return precision
+
+
+def compute_dtype(precision: str):
+    """The jnp dtype a resolved precision computes in."""
+    return _COMPUTE_DTYPE[resolve_precision(precision)]
+
+
+def cast_floats(tree, dtype):
+    """Cast every floating leaf of a pytree to ``dtype`` (int/bool
+    leaves — masks, step counters — pass through untouched).
+
+    On the loss path this is the mixed-precision boundary: grads of the
+    cast tree transpose back through ``astype`` to the original (fp32
+    master) dtype, so Adam and aggregation never see low precision."""
+    return jax.tree.map(
+        lambda x: x.astype(dtype)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x, tree)
+
+
 def pallas_interpret() -> bool:
     """Kernels run interpreted everywhere but real TPU."""
     return jax.default_backend() != "tpu"
+
+
+_LOW_PRECISION = (jnp.bfloat16, jnp.float16)
+
+
+def _gemm_cast(x, w):
+    """GEMM-boundary activation cast: when the weights run a reduced
+    compute dtype (the loss path casts params, not inputs — images,
+    x_t, timestep embeddings arrive fp32) the activations follow, so
+    the GEMM inputs stay homogeneous and the reduced-precision compute
+    actually sticks on every backend.  Grads transpose back through the
+    ``astype``.  Full-precision weights leave activations alone."""
+    if w.dtype in _LOW_PRECISION and x.dtype != w.dtype:
+        return x.astype(w.dtype)
+    return x
 
 
 # ---------------------------------------------------------------------------
@@ -192,6 +241,7 @@ def masked_matmul(x, w, col_mask=None, row_mask=None, *, backend: str = ""):
     :func:`_masked_matmul_static`.
     """
     b = resolve_backend(backend)
+    x = _gemm_cast(x, w)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     if _static_masks(col_mask, row_mask):
@@ -231,7 +281,7 @@ def dense(p, x, *, backend: str = "", col_mask=None):
     b = p["b"] if col_mask is None else p["b"] * jnp.asarray(col_mask)
     if resolve_backend(backend) == "xla" and not _static_masks(col_mask, None):
         w = p["w"] if col_mask is None else p["w"] * col_mask[None, :]
-        return x @ w + b
+        return _gemm_cast(x, w) @ w + b
     return masked_matmul(x, p["w"], col_mask, None, backend=backend) + b
 
 
@@ -271,6 +321,7 @@ def conv(p, x, *, stride: int = 1, padding: str = "SAME",
     # so the static gather/scatter specialization can engage
     static = _static_masks(col_mask, row_mask)
 
+    x = _gemm_cast(x, w)
     if kh == kw == 1 and stride == 1:
         w2 = w[0, 0]
         if b == "xla" and not static:
@@ -410,5 +461,7 @@ def group_sq_norms_2d(w2d, num_groups: int, *, backend: str = ""):
     if b == "ref":
         return group_l2_norms_ref(w2d, num_groups)
     K = w2d.shape[0]
-    w3 = w2d.reshape(K, num_groups, -1)
+    # fp32 accumulation regardless of compute dtype — the kernel and
+    # ref oracle already upcast internally; the xla path must match
+    w3 = w2d.astype(jnp.float32).reshape(K, num_groups, -1)
     return jnp.sum(w3 * w3, axis=(0, 2))

@@ -36,6 +36,11 @@ def main():
     ap.add_argument("--criterion", default="l2", choices=("l2", "random"))
     ap.add_argument("--backend", default=None,
                     help="override the checkpoint's compute backend")
+    ap.add_argument("--precision", default=None,
+                    choices=("fp32", "bf16"),
+                    help="serving compute precision (default: the "
+                         "checkpoint's, else $FEDPHD_PRECISION/fp32); "
+                         "bf16 casts the weights once at load")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="directory for req<rid>.npy images")
@@ -52,13 +57,15 @@ def main():
     dense_macs = unet_macs(params, cfg.image_size)
     macs = unet_macs(params, cfg.image_size, masks=masks)
     server = DiffusionServer(params, cfg, slots=args.slots,
-                             num_steps=args.steps, eta=args.eta, masks=masks)
+                             num_steps=args.steps, eta=args.eta, masks=masks,
+                             precision=args.precision or "")
     reqs = [Request(rid=r, seed=args.seed + r) for r in range(args.requests)]
     res = server.run(reqs)
 
     p50 = res.latency_percentile(50) * 1e3
     p99 = res.latency_percentile(99) * 1e3
     print(f"model={cfg.name} backend={cfg.backend} "
+          f"precision={server.precision} "
           f"prune_ratio={args.prune_ratio} steps={args.steps} "
           f"slots={args.slots}")
     print(f"MACs/forward: {macs / 1e6:.1f}M"
@@ -83,6 +90,7 @@ def main():
             "p50_step_ms": p50,
             "p99_step_ms": p99,
             "compiles": server.compile_count(),
+            "precision": server.precision,
             "macs_per_forward": macs,
             "dense_macs_per_forward": dense_macs,
             "faults": res.faults,

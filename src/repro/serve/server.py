@@ -69,10 +69,21 @@ class DiffusionServer:
     """
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 num_steps: int = 10, eta: float = 0.0, masks=None):
+                 num_steps: int = 10, eta: float = 0.0, masks=None,
+                 precision: str = ""):
         from repro.models.unet import apply_unet
-        self.cfg = cfg
+        from repro.models.ops import (cast_floats, compute_dtype,
+                                      resolve_precision)
+        # serving is inference-only: under bf16 the weights themselves
+        # are cast once at construction (no fp32 master needed) and the
+        # ops layer casts activations at each GEMM boundary; the
+        # denoising state x and the DDIM schedule stay fp32
+        self.precision = resolve_precision(precision or cfg.precision)
+        self.cfg = cfg = cfg.replace(precision=self.precision)
         self.params = jax.tree.map(jnp.asarray, params)
+        dt = compute_dtype(self.precision)
+        if dt != jnp.float32:
+            self.params = cast_floats(self.params, dt)
         self.slots = slots
         self.num_steps = num_steps
         self.eta = eta

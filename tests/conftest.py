@@ -50,3 +50,24 @@ def fedphd_backend_matrix():
     backend = resolve_backend(None)
     assert backend == (env or "xla")
     return backend
+
+
+@pytest.fixture(scope="session", autouse=True)
+def fedphd_precision_matrix():
+    """CI matrix knob: FEDPHD_PRECISION=fp32|bf16 pins the default
+    compute precision for every trainer/config that does not set
+    ``ModelConfig.precision`` explicitly (repro.models.ops.
+    resolve_precision reads the env; trainers bake the resolved value
+    into their frozen cfg at construction, exactly like the backend).
+    The precision tests pass explicit values, so both stay covered in
+    every leg.  Fails fast on a typo'd value instead of silently
+    running fp32 twice.
+    """
+    from repro.models.ops import PRECISIONS, resolve_precision
+    env = os.environ.get("FEDPHD_PRECISION")
+    if env and env not in PRECISIONS:
+        raise RuntimeError(f"FEDPHD_PRECISION={env!r}; expected one of "
+                           f"{PRECISIONS}")
+    precision = resolve_precision(None)
+    assert precision == (env or "fp32")
+    return precision

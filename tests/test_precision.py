@@ -1,0 +1,299 @@
+"""PR-9 axes: mixed-precision (bf16) round engines and the quantized
+delta uplink with error feedback (repro.fl.compress).
+
+Locked tolerances (tiny config: 4 clients / 2 edges / 4 rounds with the
+prune at round 3):
+
+- bf16 vs fp32 loss trajectories agree within 0.05 absolute — the loss
+  surface at init is O(1), bf16 keeps ~3 decimal digits, and the fp32
+  master weights stop the gap compounding multiplicatively;
+- int8 error-feedback uplink tracks the fp32 losses within the same
+  0.05 while ``comm_up_gb`` drops ~4x, byte-accurately.
+
+Runs on a registered micro U-Net (8x8, 8 channels) — compile time
+dominates at any larger scale.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE_UNET, register_config
+from repro.configs.base import FLConfig
+from repro.data.synthetic import DatasetSpec
+from repro.experiment import (DataSpec, ExperimentSpec, register_dataset,
+                              run_spec)
+from repro.experiment.sweep import spec_with
+from repro.fl.compress import (CommSpec, downlink_bytes, ef_roundtrip,
+                               ef_roundtrip_stacked, uplink_bytes)
+from repro.models.ops import (PRECISIONS, cast_floats, compute_dtype,
+                              resolve_precision)
+
+LOSS_ATOL = 0.05            # locked: bf16 / int8+EF vs fp32 trajectories
+
+TINY_UNET = SMOKE_UNET.replace(name="ddpm-unet-tiny-prec", image_size=8,
+                               base_channels=8, channel_mults=(1,),
+                               num_res_blocks=1, attn_resolutions=())
+register_config("ddpm-unet-tiny-prec", TINY_UNET, overwrite=True)
+register_dataset("tiny-prec", DatasetSpec("tiny-prec", num_classes=4,
+                                          image_size=8, samples_per_class=32),
+                 overwrite=True)
+
+FL = FLConfig(num_clients=4, num_edges=2, local_epochs=1, edge_agg_every=1,
+              cloud_agg_every=2, rounds=4, sparse_rounds=2, prune_ratio=0.44,
+              sh_a=1000.0)
+
+
+def _spec(**kw) -> ExperimentSpec:
+    base = dict(name="precision-smoke", method="fedavg",
+                model="ddpm-unet-tiny-prec", fl=FL,
+                data=DataSpec(dataset="tiny-prec", batch_size=8), seed=0)
+    base.update(kw)
+    return ExperimentSpec(**base)
+
+
+# completed experiments are read-only to the assertions, so identical
+# specs across tests share one run (specs are frozen -> hashable)
+_RUNS = {}
+
+
+def _run(**kw):
+    spec = _spec(**kw)
+    if spec not in _RUNS:
+        _RUNS[spec] = run_spec(spec)
+    return _RUNS[spec]
+
+
+def _maxdiff(a, b) -> float:
+    return max(float(np.max(np.abs(np.asarray(x, np.float32)
+                                   - np.asarray(y, np.float32))))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# resolution + spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_resolve_precision_contract(monkeypatch):
+    monkeypatch.delenv("FEDPHD_PRECISION", raising=False)
+    assert resolve_precision(None) == "fp32"
+    assert resolve_precision("") == "fp32"
+    assert resolve_precision("bf16") == "bf16"
+    monkeypatch.setenv("FEDPHD_PRECISION", "bf16")
+    assert resolve_precision(None) == "bf16"
+    assert resolve_precision("fp32") == "fp32"     # explicit beats env
+    with pytest.raises(ValueError):
+        resolve_precision("fp16")
+    assert compute_dtype("bf16") == jnp.bfloat16
+    assert compute_dtype("fp32") == jnp.float32
+    assert set(PRECISIONS) == {"fp32", "bf16"}
+
+
+def test_cast_floats_skips_integers():
+    tree = {"w": jnp.ones((2,), jnp.float32), "t": jnp.asarray(3, jnp.int32)}
+    out = cast_floats(tree, jnp.bfloat16)
+    assert out["w"].dtype == jnp.bfloat16
+    assert out["t"].dtype == jnp.int32
+
+
+def test_spec_json_roundtrip_and_sweep_axes():
+    s = _spec(precision="bf16", comm=CommSpec(quant="int8"))
+    rt = ExperimentSpec.from_json(s.to_json())
+    assert rt == s and rt.comm.quant == "int8" and rt.precision == "bf16"
+    # comm.quant is a dotted sweep axis like fault.*
+    sw = spec_with(s, {"comm.quant": "fp8", "precision": "fp32"})
+    assert sw.comm.quant == "fp8" and sw.precision == "fp32"
+    with pytest.raises(ValueError):
+        CommSpec(quant="int4")
+
+
+# ---------------------------------------------------------------------------
+# compress unit behavior
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_ef_roundtrip_error_bound_and_feedback(quant):
+    rng = np.random.default_rng(0)
+    delta = {"a": jnp.asarray(rng.standard_normal((8, 8)), jnp.float32),
+             "b": jnp.asarray(rng.standard_normal((16,)) * 100, jnp.float32)}
+    err = jax.tree.map(jnp.zeros_like, delta)
+    deq, new_err = ef_roundtrip(delta, err, quant)
+    for k in delta:
+        d = np.asarray(delta[k])
+        q = np.asarray(deq[k])
+        e = np.asarray(new_err[k])
+        assert np.all(np.isfinite(q)), f"{quant} produced non-finite deq"
+        # int8: uniform buckets of amax/127, error <= half a bucket.
+        # fp8 e4m3: 3 mantissa bits -> RELATIVE error <= 2^-4 of the
+        # element's own magnitude (floating, not uniform).
+        if quant == "int8":
+            step = np.max(np.abs(d)) / 127.0
+            assert np.max(np.abs(d - q)) <= step * 0.5 + 1e-6
+            bound = step
+        else:
+            assert np.all(np.abs(d - q) <= np.abs(d) * 2.0 ** -4 + 1e-6)
+            bound = np.max(np.abs(d)) * 2.0 ** -4
+        # the residual IS the feedback: deq + err' == delta exactly
+        np.testing.assert_allclose(q + e, d, atol=1e-5 * max(1.0, bound))
+    deq2, _ = ef_roundtrip(delta, new_err, quant)
+    assert np.all(np.isfinite(np.asarray(deq2["a"])))
+
+
+def test_ef_zero_tree_is_exact():
+    z = {"a": jnp.zeros((4, 4), jnp.float32)}
+    deq, err = ef_roundtrip(z, jax.tree.map(jnp.zeros_like, z), "int8")
+    assert float(jnp.abs(deq["a"]).max()) == 0.0
+    assert float(jnp.abs(err["a"]).max()) == 0.0
+
+
+def test_fp8_overflow_clips_not_nan():
+    """XLA's f8e4m3fn cast does NOT saturate — out-of-range values come
+    back NaN unless clipped first.  The quantizer must clip."""
+    big = {"a": jnp.asarray([[5.0e4, -5.0e4, 1.0, 0.0]], jnp.float32)}
+    deq, err = ef_roundtrip(big, jax.tree.map(jnp.zeros_like, big), "fp8")
+    assert np.all(np.isfinite(np.asarray(deq["a"])))
+    assert np.all(np.isfinite(np.asarray(err["a"])))
+
+
+def test_stacked_roundtrip_matches_per_client():
+    """ef_roundtrip_stacked (vectorized engine) == per-client
+    ef_roundtrip (sequential path), client for client, bitwise."""
+    rng = np.random.default_rng(1)
+    C = 3
+    delta = {"w": jnp.asarray(rng.standard_normal((C, 4, 5)), jnp.float32)}
+    err = {"w": jnp.asarray(rng.standard_normal((C, 4, 5)) * 0.1,
+                            jnp.float32)}
+    deq_s, err_s = ef_roundtrip_stacked(delta, err, "int8")
+    for c in range(C):
+        deq_c, err_c = ef_roundtrip({"w": delta["w"][c]},
+                                    {"w": err["w"][c]}, "int8")
+        np.testing.assert_array_equal(np.asarray(deq_s["w"][c]),
+                                      np.asarray(deq_c["w"]))
+        np.testing.assert_array_equal(np.asarray(err_s["w"][c]),
+                                      np.asarray(err_c["w"]))
+
+
+def test_wire_byte_accounting_exact():
+    tree = {"a": np.zeros((10, 3), np.float32), "b": np.zeros(7, np.float32)}
+    assert uplink_bytes(tree, "none") == 37 * 4
+    assert uplink_bytes(tree, "int8") == 37 * 1 + 2 * 4
+    assert uplink_bytes(tree, "fp8") == 37 * 1 + 2 * 4
+    assert downlink_bytes(tree, "fp32") == 37 * 4
+    assert downlink_bytes(tree, "bf16") == 37 * 2
+
+
+# ---------------------------------------------------------------------------
+# trainer integration: precision
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fedavg", "fedphd"])
+def test_bf16_tracks_fp32_losses(method):
+    """bf16 compute with fp32 masters stays within the locked loss
+    tolerance of the fp32 run, and the params the trainer exposes stay
+    fp32 (master weights, not compute casts)."""
+    fp = _run(method=method, precision="fp32")
+    bf = _run(method=method, precision="bf16")
+    assert bf.cfg.precision == "bf16" and fp.cfg.precision == "fp32"
+    for x in jax.tree.leaves(bf.params):
+        assert jnp.asarray(x).dtype == jnp.float32
+    for a, b in zip(fp.history, bf.history):
+        assert abs(a.loss - b.loss) < LOSS_ATOL
+    # downloads halve under bf16; the uplink ships fp32 master deltas
+    assert bf.history[0].comm_down_gb == fp.history[0].comm_down_gb / 2
+    assert bf.history[0].comm_up_gb == fp.history[0].comm_up_gb
+
+
+def test_bf16_seq_vs_vec_close():
+    """Both engines run the same bf16 loss closure; bf16 rounding makes
+    them drift faster than fp32, so the equivalence bar is looser than
+    the fp32 suites' 1e-5."""
+    a = _run(precision="bf16", engine="sequential")
+    b = _run(precision="bf16", engine="vectorized")
+    assert _maxdiff(a.params, b.params) < 1e-2
+    for x, y in zip(a.history, b.history):
+        assert x.comm_gb == y.comm_gb
+
+
+# ---------------------------------------------------------------------------
+# trainer integration: quantized uplink
+# ---------------------------------------------------------------------------
+
+def test_int8_ef_tracks_fp32_and_cuts_uplink():
+    """Locked acceptance: int8+EF stays within LOSS_ATOL of the
+    fp32/none run while the uplink drops ~4x, byte-accurately."""
+    ref = _run()
+    q = _run(comm=CommSpec(quant="int8"))
+    for a, b in zip(ref.history, q.history):
+        assert abs(a.loss - b.loss) < LOSS_ATOL
+    # byte-accurate uplink: N*1 + 4 per leaf vs N*4, at the same linear
+    # cost-model rate -> comm_up_gb scales by exactly the byte ratio
+    up_f = uplink_bytes(ref.params, "none")
+    up_q = uplink_bytes(ref.params, "int8")
+    assert 3.5 < up_f / up_q <= 4.0
+    r, s = ref.history[0], q.history[0]
+    assert s.comm_up_gb == pytest.approx(r.comm_up_gb * up_q / up_f,
+                                         rel=1e-12)
+    assert s.comm_down_gb == r.comm_down_gb        # downloads untouched
+    assert s.comm_gb == s.comm_up_gb + s.comm_down_gb
+
+
+@pytest.mark.parametrize("method", ["fedavg", "scaffold", "fedphd"])
+def test_quant_seq_vs_vec(method):
+    """Engine equivalence under int8+EF: bitwise comm accounting, and
+    params within the quantization-bucket tolerance (buckets can flip
+    near ties between the two execution orders, so the bar is one
+    bucket, not the fp32 suites' 1e-5)."""
+    a = _run(method=method, comm=CommSpec(quant="int8"),
+             engine="sequential")
+    b = _run(method=method, comm=CommSpec(quant="int8"),
+             engine="vectorized")
+    for x, y in zip(a.history, b.history):
+        assert x.comm_gb == y.comm_gb              # bitwise
+        assert x.comm_up_gb == y.comm_up_gb
+        assert x.comm_down_gb == y.comm_down_gb
+    assert _maxdiff(a.params, b.params) < 1e-3
+
+
+def test_comm_split_fields_sum_to_total():
+    """The new up/down decomposition always reconstitutes comm_gb."""
+    e = _run()
+    for h in e.history:
+        assert h.comm_up_gb is not None and h.comm_down_gb is not None
+        assert h.comm_gb == h.comm_up_gb + h.comm_down_gb
+
+
+# ---------------------------------------------------------------------------
+# checkpoint kill-and-resume across sparse -> prune -> plain
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fedphd", "fedavg"])
+def test_quant_bf16_kill_and_resume_bitwise(method, tmp_path):
+    """Sequential engine: killing after round 2 and resuming reproduces
+    the unbroken int8+bf16 run bitwise — every leaf dtype and the
+    error-feedback residuals included — across FedPhD's sparse ->
+    prune -> plain transition (rounds=4, sparse_rounds=2: prune fires
+    at round 3, round 4 runs on the compacted model)."""
+    spec = _spec(method=method, precision="bf16",
+                 comm=CommSpec(quant="int8"), engine="sequential")
+    full = _RUNS.get(spec) or _RUNS.setdefault(spec, run_spec(spec))
+
+    ck = os.path.join(tmp_path, "ckpt")
+    run_spec(spec, rounds=2, ckpt=ck)
+    resumed = run_spec(None, ckpt=ck, resume=True, rounds=spec.fl.rounds)
+
+    assert _maxdiff(full.params, resumed.params) == 0.0
+    for x, y in zip(jax.tree.leaves(full.params),
+                    jax.tree.leaves(resumed.params)):
+        assert jnp.asarray(x).dtype == jnp.asarray(y).dtype
+    for a, b in zip(full.history, resumed.history):
+        assert a.comm_gb == b.comm_gb
+        assert a.comm_up_gb == b.comm_up_gb
+    if method == "fedphd":
+        assert any(h.pruned for h in full.history)
+    # the EF residuals themselves restore bitwise
+    fe, re_ = full.trainer._err_stack, resumed.trainer._err_stack
+    assert fe is not None and re_ is not None
+    for x, y in zip(jax.tree.leaves(fe), jax.tree.leaves(re_)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
