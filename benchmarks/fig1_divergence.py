@@ -8,7 +8,7 @@ import numpy as np
 
 from benchmarks.common import emit, smoke_clients, smoke_fl
 from repro.configs import SMOKE_UNET
-from repro.fl.baselines import run_flat_fl
+from repro.fl.baselines import FlatTrainer
 
 
 def main(rounds: int = 4) -> None:
@@ -17,8 +17,8 @@ def main(rounds: int = 4) -> None:
     for tag, iid_split in (("noniid", False), ("iid", True)):
         clients, images, _ = smoke_clients(iid_split=iid_split)
         t0 = time.perf_counter()
-        res = run_flat_fl("fedavg", SMOKE_UNET, fl, clients, rounds=rounds,
-                          rng_seed=0)
+        res = FlatTrainer("fedavg", SMOKE_UNET, fl, clients, rng_seed=0)
+        res.run(rounds)
         us = (time.perf_counter() - t0) * 1e6 / rounds
         losses = [h["loss"] for h in res.history]
         # the divergence shows up in sample quality (the paper's Fig. 1
@@ -34,9 +34,10 @@ def main(rounds: int = 4) -> None:
     import dataclasses
     clients, _, _ = smoke_clients()
     for E in (1, 2):
-        res = run_flat_fl("fedavg", SMOKE_UNET,
+        res = FlatTrainer("fedavg", SMOKE_UNET,
                           dataclasses.replace(fl, local_epochs=E), clients,
-                          rounds=rounds, rng_seed=0)
+                          rng_seed=0)
+        res.run(rounds)
         emit(f"fig1/fedavg_E{E}", 0.0,
              f"last={res.history[-1]['loss']:.4f}")
 

@@ -19,7 +19,12 @@ baselines in ``benchmarks/baselines/`` and fails CI on a regression:
   ``common.emit_bytes`` with ``us=0``): byte accounting is
   deterministic, so the gate fails on ANY fresh count above the
   baseline (and on a dropped tag).  Zero-latency rows skip the
-  latency check.
+  latency check;
+- **recompile rows** (a ``recompiles=<n>`` tag from an obs-traced
+  bench leg): jit-cache growth beyond the declared compile boundaries
+  is deterministic — "zero steady-state recompiles" is a ROADMAP
+  invariant — so, like bytes, ANY increase over the baseline (or a
+  dropped tag) fails the gate.
 
 Updating a baseline is an explicit, reviewed act: copy the fresh
 ``BENCH_*.json`` over ``benchmarks/baselines/`` and append the new
@@ -60,6 +65,7 @@ DRAFT_THRESHOLD = 0.25
 
 _SPEEDUP = re.compile(r"(?:^|;)speedup=([0-9.]+)x")
 _BYTES = re.compile(r"(?:^|;)bytes=([0-9]+)")
+_RECOMPILES = re.compile(r"(?:^|;)recompiles=([0-9]+)")
 
 
 def _load(path: str) -> Dict[str, dict]:
@@ -74,6 +80,11 @@ def _speedup(row: dict) -> Optional[float]:
 
 def _bytes(row: dict) -> Optional[int]:
     m = _BYTES.search(row.get("derived", ""))
+    return int(m.group(1)) if m else None
+
+
+def _recompiles(row: dict) -> Optional[int]:
+    m = _RECOMPILES.search(row.get("derived", ""))
     return int(m.group(1)) if m else None
 
 
@@ -116,12 +127,27 @@ def compare(baseline: Dict[str, dict], fresh: Dict[str, dict], *,
                 failures.append(f"{name}: bytes {f_by} > baseline {b_by} "
                                 "(byte accounting is deterministic — any "
                                 "increase is a regression)")
+        b_rc, f_rc = _recompiles(base), _recompiles(row)
+        if b_rc is not None:
+            if f_rc is None:
+                verdict = "REGRESSED"
+                failures.append(f"{name}: baseline carries "
+                                f"recompiles={b_rc} but the fresh row "
+                                "has no recompiles= tag")
+            elif f_rc > b_rc:
+                verdict = "REGRESSED"
+                failures.append(f"{name}: recompiles {f_rc} > baseline "
+                                f"{b_rc} (compile counting is "
+                                "deterministic — any unexpected jit-cache "
+                                "growth is a regression)")
         print(f"  {verdict:>9}  {name}: {row['us']:.0f}us "
               f"(baseline {base['us']:.0f}us)"
               + (f" speedup {f_sp:.2f}x (baseline {b_sp:.2f}x)"
                  if b_sp is not None and f_sp is not None else "")
               + (f" bytes {f_by} (baseline {b_by})"
-                 if b_by is not None and f_by is not None else ""))
+                 if b_by is not None and f_by is not None else "")
+              + (f" recompiles {f_rc} (baseline {b_rc})"
+                 if b_rc is not None and f_rc is not None else ""))
     return failures
 
 
@@ -138,6 +164,9 @@ def trajectory_rows(fresh: Dict[str, dict]) -> Dict[str, float]:
         by = _bytes(row)
         if by is not None:
             rows[f"{name}/bytes"] = float(by)
+        rc = _recompiles(row)
+        if rc is not None:
+            rows[f"{name}/recompiles"] = float(rc)
     return rows
 
 

@@ -44,6 +44,8 @@ from repro.fl.faults import (FaultSpec, apply_late, late_delta,
 from repro.fl.record import RoundRecord, RunResult, evals_of
 from repro.models import model
 from repro.models.ops import resolve_backend, resolve_precision
+from repro.obs.compile_tracker import CompileTracker
+from repro.obs.trace import NULL_TRACER
 from repro.optim import adam_init
 
 
@@ -92,7 +94,8 @@ class FedPhD:
                  persistent_opt: bool = False, state_store: str = "auto",
                  mesh=None, client_axis: str = "data",
                  eval_fn: Optional[Callable] = None, eval_every: int = 0,
-                 fault: Optional[FaultSpec] = None, quant: str = "none"):
+                 fault: Optional[FaultSpec] = None, quant: str = "none",
+                 tracer=None):
         # bake the resolved compute backend AND precision into the
         # frozen config so every compiled program (and the checkpoint
         # manifest) pins concrete values even when they came from
@@ -100,6 +103,10 @@ class FedPhD:
         self.cfg = cfg = cfg.replace(
             backend=resolve_backend(cfg.backend),
             precision=resolve_precision(cfg.precision))
+        # obs tracing: NULL_TRACER (the default) makes every span/event
+        # call site a no-op — tracing never touches RNG or numerics
+        self._obs = NULL_TRACER
+        self._obs_compile = None
         if quant not in QUANTS:
             raise ValueError(f"unknown quant {quant!r}; expected one of "
                              f"{QUANTS}")
@@ -147,6 +154,32 @@ class FedPhD:
             self._prune_now(mode=fl.prune_mode)
 
         self._rebuild_steps()
+        if tracer is not None:
+            self.bind_tracer(tracer)
+
+    # -- observability -------------------------------------------------------
+    def bind_tracer(self, tracer) -> None:
+        """Attach an obs tracer (repro.obs): subsequent rounds emit
+        phase spans / fault events / compile counters through it.
+        ``None`` (or the NULL_TRACER) keeps the no-op path."""
+        self._obs = tracer if tracer is not None else NULL_TRACER
+        self._obs_compile = CompileTracker(self._obs) \
+            if (self._obs.enabled
+                and getattr(self._obs, "compile_tracking", False)) else None
+        self._watch_compiles()
+
+    def _watch_compiles(self) -> None:
+        """(Re)point the compile tracker at the current jitted entry
+        points — called after every ``_rebuild_steps`` so the post-prune
+        plain engine gets its own expected first compile."""
+        if self._obs_compile is None:
+            return
+        for name, fn in (("step_plain", self.step_plain),
+                         ("step_sparse", self.step_sparse),
+                         ("engine_plain", self._engine_plain),
+                         ("engine_sparse", self._engine_sparse)):
+            if fn is not None:
+                self._obs_compile.watch(name, fn)
 
     # -- pruning ------------------------------------------------------------
     def _prune_now(self, mode: str) -> None:
@@ -197,6 +230,7 @@ class FedPhD:
                                         dtype=np.float32,
                                         host=self._store == "host") \
             if self.quant != "none" else None
+        self._watch_compiles()
 
     # -- bookkeeping ----------------------------------------------------------
     def _param_count_m(self) -> float:
@@ -329,33 +363,40 @@ class FedPhD:
         ``w_late`` operand's in-engine einsum.
         """
         fl = self.fl
-        order = [(e, cid) for e, cids in assignment.items() for cid in cids]
-        # identical RNG folding to the sequential loop: one split per
-        # client in edge-iteration order
-        subs = []
-        for _ in order:
-            self.rng, sub = jax.random.split(self.rng)
-            subs.append(sub)
-        clients = [self.clients[cid] for _, cid in order]
-        # masking is identity when no client needed padding — elide the
-        # per-step select ops at trace time in that (common) case
-        batches, valid, masked = stack_round([cl.data for cl in clients],
-                                             fl.local_epochs)
-        if faults is not None:
-            # prefix truncation: client i executes only its first
-            # budget_i steps.  Same shapes as the fault-free round.
-            budgets = np.asarray([faults.budget_of(cid) for _, cid in order])
-            prefix = np.arange(valid.shape[1])[None, :] < budgets[:, None]
-            masked = masked or not bool(prefix.all())
-            valid = valid & prefix
-        batches = {k: jnp.asarray(v) for k, v in batches.items()}
-        valid = jnp.asarray(valid)
-        rngs = jnp.stack(subs)
-        edge_models = getattr(self, "_edge_models", {})
-        edge_stack = jax.tree.map(
-            lambda *leaves: jnp.stack(leaves),
-            *[edge_models.get(e, self.params) for e in range(fl.num_edges)])
-        edge_idx = jnp.asarray(np.asarray([e for e, _ in order], np.int32))
+        obs = self._obs
+        with obs.span("round/host_prep", round=r):
+            order = [(e, cid) for e, cids in assignment.items()
+                     for cid in cids]
+            # identical RNG folding to the sequential loop: one split per
+            # client in edge-iteration order
+            subs = []
+            for _ in order:
+                self.rng, sub = jax.random.split(self.rng)
+                subs.append(sub)
+            clients = [self.clients[cid] for _, cid in order]
+            # masking is identity when no client needed padding — elide
+            # the per-step select ops at trace time in that (common) case
+            batches, valid, masked = stack_round([cl.data for cl in clients],
+                                                 fl.local_epochs)
+            if faults is not None:
+                # prefix truncation: client i executes only its first
+                # budget_i steps.  Same shapes as the fault-free round.
+                budgets = np.asarray([faults.budget_of(cid)
+                                      for _, cid in order])
+                prefix = np.arange(valid.shape[1])[None, :] < budgets[:, None]
+                masked = masked or not bool(prefix.all())
+                valid = valid & prefix
+        with obs.span("round/h2d", round=r):
+            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            valid = jnp.asarray(valid)
+            rngs = jnp.stack(subs)
+            edge_models = getattr(self, "_edge_models", {})
+            edge_stack = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves),
+                *[edge_models.get(e, self.params)
+                  for e in range(fl.num_edges)])
+            edge_idx = jnp.asarray(np.asarray([e for e, _ in order],
+                                              np.int32))
 
         # fused aggregation rows: W[e] = normalized Eq. 22/24 weights of
         # edge e's REPORTING clients, zero elsewhere (graceful
@@ -397,16 +438,17 @@ class FedPhD:
         idx_arr = np.asarray([cid for _, cid in order])
         # host-store gathered rows are numpy: stage them to device
         # explicitly so the engine's opt_states donation stays live
-        out = engine(edge_stack, edge_idx, batches, valid, rngs,
-                     jnp.asarray(w_mat),
-                     opt_states=(store_tree(
-                         tree_gather(self._opt_stack, idx_arr), "device")
-                         if self.persistent_opt else None),
-                     w_late=(jnp.asarray(w_late) if any_late else None),
-                     err=(store_tree(
-                         tree_gather(self._err_stack, idx_arr), "device")
-                         if self.quant != "none" else None),
-                     masked=masked, per_client_opt=self.persistent_opt)
+        with obs.span("round/dispatch", round=r):
+            out = engine(edge_stack, edge_idx, batches, valid, rngs,
+                         jnp.asarray(w_mat),
+                         opt_states=(store_tree(
+                             tree_gather(self._opt_stack, idx_arr), "device")
+                             if self.persistent_opt else None),
+                         w_late=(jnp.asarray(w_late) if any_late else None),
+                         err=(store_tree(
+                             tree_gather(self._err_stack, idx_arr), "device")
+                             if self.quant != "none" else None),
+                         masked=masked, per_client_opt=self.persistent_opt)
         if self.persistent_opt:
             if faults is None:
                 self._opt_stack = tree_scatter(self._opt_stack, idx_arr,
@@ -451,28 +493,30 @@ class FedPhD:
                 up_bytes += self.comm.client_edge(up_f if late
                                                   else up_q)     # upload
         if r % fl.edge_agg_every == 0:
-            if not hasattr(self, "_edge_models"):
-                self._edge_models = {}
-            for e, cids in assignment.items():
-                if not cids:
-                    continue
-                if np.any(w_mat[e] > 0):
-                    agg = jax.tree.map(lambda leaf, _e=e: leaf[_e], agg_stack)
-                else:
-                    # no client reported: a zero w_mat row makes the
-                    # einsum row a zero tree — the edge keeps its model
-                    agg = edge_models.get(e, self.params)
-                if staleness:
-                    buf = self._late_buf.pop(e, None)
-                    if buf is not None:     # merge last round's stragglers
-                        agg = apply_late(agg, buf, self.fault.staleness
-                                         if self.fault else 0.0)
-                    if w_late is not None and np.any(w_late[e] > 0):
-                        self._late_buf[e] = jax.tree.map(
-                            lambda leaf, _e=e: leaf[_e], out["late"])
-                self._edge_models[e] = agg
-                n_down = len(cids) if faults is None else n_arrived[e]
-                down_bytes += self.comm.client_edge(down) * n_down
+            with obs.span("round/edge_agg", round=r):
+                if not hasattr(self, "_edge_models"):
+                    self._edge_models = {}
+                for e, cids in assignment.items():
+                    if not cids:
+                        continue
+                    if np.any(w_mat[e] > 0):
+                        agg = jax.tree.map(lambda leaf, _e=e: leaf[_e],
+                                           agg_stack)
+                    else:
+                        # no client reported: a zero w_mat row makes the
+                        # einsum row a zero tree — the edge keeps its model
+                        agg = edge_models.get(e, self.params)
+                    if staleness:
+                        buf = self._late_buf.pop(e, None)
+                        if buf is not None:  # merge last round's stragglers
+                            agg = apply_late(agg, buf, self.fault.staleness
+                                             if self.fault else 0.0)
+                        if w_late is not None and np.any(w_late[e] > 0):
+                            self._late_buf[e] = jax.tree.map(
+                                lambda leaf, _e=e: leaf[_e], out["late"])
+                    self._edge_models[e] = agg
+                    n_down = len(cids) if faults is None else n_arrived[e]
+                    down_bytes += self.comm.client_edge(down) * n_down
         return round_losses, up_bytes, down_bytes, loss_mask
 
     # -- one communication round (Alg. 1 lines 3-32) -------------------------
@@ -527,6 +571,9 @@ class FedPhD:
                      for c in sel_ids]
             faults = self._faults.draw_round(
                 sel_ids, steps, self.aggregation == "staleness")
+            if self._obs.enabled:
+                self._obs.event("fault/draw", round=r,
+                                **faults.summary())
 
         wire = self._wire_bytes()
         # lines 7-21: per-edge local training + edge aggregation
@@ -535,41 +582,48 @@ class FedPhD:
                 self._local_and_edge_vectorized(
                     r, assignment, sparse_round, wire, faults)
         else:
-            round_losses, up_bytes, down_bytes, loss_mask = \
-                self._local_and_edge_sequential(
-                    r, assignment, sparse_round, wire, faults)
+            # the reference loop syncs per batch: host prep, compute and
+            # aggregation interleave, so it gets one dispatch span
+            with self._obs.span("round/dispatch", round=r):
+                round_losses, up_bytes, down_bytes, loss_mask = \
+                    self._local_and_edge_sequential(
+                        r, assignment, sparse_round, wire, faults)
 
         pruned_this_round = False
         # lines 23-31: cloud aggregation every r_g rounds.  The
         # edge<->cloud tier ships fp32 uploads (quantization is the
         # client->edge uplink only) and compute-dtype broadcasts.
         if r % fl.cloud_agg_every == 0 and hasattr(self, "_edge_models"):
-            models, counts, mus = [], [], []
-            for e, m in self._edge_models.items():
-                models.append(m)
-                counts.append(self.edges[e].n)
-                mus.append(self.edges[e].sh(self.q_u))          # Eq. 20
-                up_bytes += self.comm.edge_cloud(wire[1])       # upload
-            if models:
-                if self.aggregation == "sh":
-                    self.params = aggregate_sh(models, counts, mus,
-                                               fl.sh_a, fl.sh_b)  # Eq. 21/22
-                else:
-                    self.params = aggregate_fedavg(models, counts)
-            # line 26-28: structured pruning at r = R_s
-            if (self.prune and not self.pruned
-                    and fl.prune_mode == "group_norm" and r >= fl.sparse_rounds):
-                self._prune_now(mode="group_norm")
-                self._rebuild_steps()
-                pruned_this_round = True
-                wire = self._wire_bytes()
-                # buffered late deltas have pre-prune shapes: drop them
-                self._late_buf = {}
-            # broadcast + refresh (lines 29-31)
-            down_bytes += self.comm.edge_cloud(wire[2]) * fl.num_edges
-            self._edge_models = {e: self.params for e in range(fl.num_edges)}
-            for e in self.edges:
-                e.refresh()
+            with self._obs.span("round/cloud_agg", round=r):
+                models, counts, mus = [], [], []
+                for e, m in self._edge_models.items():
+                    models.append(m)
+                    counts.append(self.edges[e].n)
+                    mus.append(self.edges[e].sh(self.q_u))      # Eq. 20
+                    up_bytes += self.comm.edge_cloud(wire[1])   # upload
+                if models:
+                    if self.aggregation == "sh":
+                        self.params = aggregate_sh(
+                            models, counts, mus, fl.sh_a, fl.sh_b)  # Eq. 21/22
+                    else:
+                        self.params = aggregate_fedavg(models, counts)
+                # line 26-28: structured pruning at r = R_s
+                if (self.prune and not self.pruned
+                        and fl.prune_mode == "group_norm"
+                        and r >= fl.sparse_rounds):
+                    with self._obs.span("round/prune", round=r):
+                        self._prune_now(mode="group_norm")
+                        self._rebuild_steps()
+                    pruned_this_round = True
+                    wire = self._wire_bytes()
+                    # buffered late deltas have pre-prune shapes: drop them
+                    self._late_buf = {}
+                # broadcast + refresh (lines 29-31)
+                down_bytes += self.comm.edge_cloud(wire[2]) * fl.num_edges
+                self._edge_models = {e: self.params
+                                     for e in range(fl.num_edges)}
+                for e in self.edges:
+                    e.refresh()
 
         # snapshot end-of-round state the record needs: edge SH and the
         # params/cfg the eval hook sees must not leak mutations from a
@@ -587,7 +641,8 @@ class FedPhD:
         """Sync the pending round's losses and append its RoundRecord."""
         losses = pend["losses"]
         if not isinstance(losses, list):          # device future -> host
-            losses = [float(x) for x in np.asarray(losses)]
+            with self._obs.span("round/loss_sync", round=pend["round"]):
+                losses = [float(x) for x in np.asarray(losses)]
         r = pend["round"]
         mask = pend.get("loss_mask")
         if mask is not None:        # faults: average over executed clients
@@ -612,6 +667,11 @@ class FedPhD:
         # eval, not the round — otherwise a later run()/resume would
         # re-run an already-applied round and diverge
         self.history.append(rec)
+        if self._obs_compile is not None:
+            # compiles triggered by this round's dispatch/sync are in
+            # the caches by now; growth beyond the first per fn = a
+            # shape/dtype leaked into a trace
+            self._obs_compile.check(round=r)
         if self.eval_fn and self.eval_every and r % self.eval_every == 0:
             rec.eval = self.eval_fn(pend["params"], pend["cfg"], r)
         return rec

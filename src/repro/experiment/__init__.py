@@ -13,43 +13,64 @@ baselines::
     exp = run_spec(None, resume=True, ckpt="runs/smoke/ckpt.npz")
 
 CLI: ``python -m repro.experiment.runner --help``.
-"""
-from repro.experiment.data import (DATASETS, dataset_spec, make_clients,
-                                   register_dataset)
-from repro.experiment.registry import (MethodEntry, make_trainer,
-                                       method_entry, register_method,
-                                       registered_methods)
-from repro.experiment.report import (build_report, report_markdown,
-                                     run_scalars, write_report)
-from repro.experiment.run import (Experiment, checkpoint_exists, run_spec)
-from repro.experiment.spec import (TOPOLOGIES, DataSpec, ExperimentSpec)
-from repro.experiment.cluster import (ClusterClient, FakeCluster, JobStatus,
-                                      K8sCluster, K8sExecutor, render_job,
-                                      worker_main)
-from repro.experiment.sweep import (EXECUTORS, ExecContext, Executor,
-                                    ProcessExecutor, SequentialExecutor,
-                                    SweepResult, SweepRun, SweepSpec,
-                                    load_manifest, manifest_path,
-                                    manifest_status, resolve_executor,
-                                    run_id_of, run_sweep, spec_get,
-                                    spec_with)
-from repro.experiment.trainer import Trainer
-from repro.fl.faults import FaultModel, FaultSpec
-from repro.fl.record import RoundRecord, RunResult, evals_of
 
-__all__ = ["DATASETS", "dataset_spec", "make_clients", "register_dataset",
-           "MethodEntry",
-           "make_trainer", "method_entry", "register_method",
-           "registered_methods", "Experiment", "checkpoint_exists",
-           "run_spec", "TOPOLOGIES", "DataSpec", "ExperimentSpec",
-           "FaultModel", "FaultSpec",
-           "Trainer", "RoundRecord", "RunResult", "evals_of",
-           "SweepResult", "SweepRun", "SweepSpec", "load_manifest",
-           "manifest_path", "manifest_status", "run_id_of", "run_sweep",
-           "spec_get", "spec_with",
-           "EXECUTORS", "ExecContext", "Executor", "ProcessExecutor",
-           "SequentialExecutor", "resolve_executor",
-           "ClusterClient", "FakeCluster", "JobStatus", "K8sCluster",
-           "K8sExecutor", "render_job", "worker_main",
-           "build_report", "report_markdown", "run_scalars",
-           "write_report"]
+Re-exports resolve lazily (PEP 562): ``repro.experiment.resolve`` is a
+dependency-free leaf that ``repro.models.ops`` and ``repro.fl.engine``
+import at module scope for the single ``$FEDPHD_*`` knob code path, so
+importing this package must not eagerly pull the trainer stack in (that
+would be circular: run -> registry -> hfl -> models.ops -> here).
+"""
+from importlib import import_module
+
+# public name -> defining submodule ("." = repro.experiment.<mod>)
+_EXPORTS = {
+    "DATASETS": ".data", "dataset_spec": ".data", "make_clients": ".data",
+    "register_dataset": ".data",
+    "MethodEntry": ".registry", "make_trainer": ".registry",
+    "method_entry": ".registry", "register_method": ".registry",
+    "registered_methods": ".registry",
+    "build_report": ".report", "report_markdown": ".report",
+    "run_scalars": ".report", "write_report": ".report",
+    "Experiment": ".run", "checkpoint_exists": ".run",
+    "default_trace_path": ".run", "run_spec": ".run",
+    "TOPOLOGIES": ".spec", "DataSpec": ".spec", "ExperimentSpec": ".spec",
+    "ObsSpec": ".spec",
+    "ClusterClient": ".cluster", "FakeCluster": ".cluster",
+    "JobStatus": ".cluster", "K8sCluster": ".cluster",
+    "K8sExecutor": ".cluster", "render_job": ".cluster",
+    "worker_main": ".cluster",
+    "EXECUTORS": ".sweep", "ExecContext": ".sweep", "Executor": ".sweep",
+    "ProcessExecutor": ".sweep", "SequentialExecutor": ".sweep",
+    "SweepResult": ".sweep", "SweepRun": ".sweep", "SweepSpec": ".sweep",
+    "load_manifest": ".sweep", "manifest_path": ".sweep",
+    "manifest_status": ".sweep", "resolve_executor": ".sweep",
+    "run_id_of": ".sweep", "run_sweep": ".sweep", "spec_get": ".sweep",
+    "spec_with": ".sweep",
+    "Trainer": ".trainer",
+    "KNOBS": ".resolve", "resolve_knob": ".resolve",
+    "FaultModel": "repro.fl.faults", "FaultSpec": "repro.fl.faults",
+    "RoundRecord": "repro.fl.record", "RunResult": "repro.fl.record",
+    "evals_of": "repro.fl.record",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    target = _EXPORTS.get(name)
+    if target is not None:
+        mod = import_module(target, __name__) if target.startswith(".") \
+            else import_module(target)
+        value = getattr(mod, name)
+        globals()[name] = value        # cache: resolve each name once
+        return value
+    # fall through to submodule access (repro.experiment.runner etc.)
+    try:
+        return import_module("." + name, __name__)
+    except ImportError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,80 @@
+"""Shared CLI surface for the repo's entry points.
+
+``python -m repro.experiment.runner`` and ``python -m repro.serve``
+speak the same flag names (``--out``, ``--metrics``, ``--backend``,
+``--precision``, ``--trace``) and write ONE JSON metrics schema, so CI
+and sweep tooling parse either with the same code:
+
+  {"schema": 1, "kind": "experiment" | "serve", <flat metric keys>}
+
+The metric keys stay flat (no nesting) — existing consumers index
+``m["compiles"]`` etc. directly and the envelope only adds keys.
+
+``--trace`` is the CLI face of the obs layer: bare ``--trace`` enables
+tracing at the entry point's default path, ``--trace path.jsonl`` pins
+the path, and omitting it defers to ``$FEDPHD_OBS`` (the single
+resolution contract of :mod:`repro.experiment.resolve`).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Optional
+
+from repro.experiment.resolve import BACKENDS, PRECISIONS
+from repro.obs.spec import ObsSpec
+from repro.obs.trace import make_tracer
+
+METRICS_SCHEMA = 1
+
+
+def add_compute_flags(ap: argparse.ArgumentParser) -> None:
+    """The shared compute knobs (override the config/checkpoint; the
+    usual precedence: explicit > $FEDPHD_* > config default)."""
+    ap.add_argument("--backend", default=None, choices=BACKENDS,
+                    help="compute backend override (default: the spec/"
+                         "checkpoint's, else $FEDPHD_BACKEND/xla)")
+    ap.add_argument("--precision", default=None, choices=PRECISIONS,
+                    help="compute precision override (default: the spec/"
+                         "checkpoint's, else $FEDPHD_PRECISION/fp32)")
+
+
+def add_obs_flags(ap: argparse.ArgumentParser) -> None:
+    """``--trace [PATH]``: enable obs tracing (bare flag = the entry
+    point's default trace.jsonl location)."""
+    ap.add_argument("--trace", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="enable obs tracing; optional trace.jsonl path "
+                         "(bare --trace writes next to the run's output; "
+                         "omitted entirely defers to $FEDPHD_OBS)")
+
+
+def add_metrics_flag(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--metrics", default=None,
+                    help="write the unified JSON metrics file here "
+                         "(schema: flat keys + {schema, kind})")
+
+
+def cli_obs_spec(trace_arg: Optional[str]) -> ObsSpec:
+    """``--trace`` value -> ObsSpec: flag present = explicitly enabled
+    (with its path, if given); absent = tri-state None, i.e. defer to
+    ``$FEDPHD_OBS``."""
+    if trace_arg is None:
+        return ObsSpec()
+    return ObsSpec(enabled=True, trace=trace_arg)
+
+
+def make_cli_tracer(trace_arg: Optional[str],
+                    default_path: Optional[str] = None):
+    """Build the entry point's tracer straight from its ``--trace``
+    value (entry points without an ExperimentSpec, e.g. serve)."""
+    return make_tracer(cli_obs_spec(trace_arg), default_path=default_path)
+
+
+def write_metrics(path: str, kind: str, metrics: dict) -> None:
+    """The one metrics writer: flat metric keys under a shared
+    ``{schema, kind}`` envelope."""
+    payload = {"schema": METRICS_SCHEMA, "kind": kind, **metrics}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")

@@ -502,11 +502,19 @@ class K8sExecutor:
         ready: List[Tuple[str, int, float]] = [(rid, 1, 0.0)
                                                for rid in pending]
         running: Dict[str, dict] = {}
+        # epoch stamp of when each rid became submittable (executor
+        # start / backoff expiry) — the t0 of its sweep/queue span
+        ready_since: Dict[str, float] = {rid: time.time()
+                                         for rid in pending}
 
         def _submit(rid: str, attempt: int) -> None:
             entry = man["runs"][rid]
             entry["status"] = "running"
             entry["attempts"] = int(entry.get("attempts") or 0) + 1
+            now = time.time()
+            sweep._trace_span(entry, "sweep/queue",
+                              ready_since.pop(rid, now), now,
+                              attempt=int(entry["attempts"]))
             os.makedirs(run_dir(out, rid), exist_ok=True)
             _write_json(run_spec_path(out, rid), entry["spec"])
             # a stale completion token must not satisfy the poll below
@@ -521,14 +529,19 @@ class K8sExecutor:
                 rounds=ctx.rounds, save_every=ctx.save_every,
                 namespace=self.namespace, mount_path=self.mount_path,
                 pvc=self.pvc, env=self.env, devices=self.devices)
+            t_sub = time.time()
             try:
                 name = cluster.submit(job)
             except Exception:   # noqa: BLE001 — a rejected submit is an
+                sweep._trace_span(entry, "sweep/attempt", t_sub,
+                                  time.time(),
+                                  attempt=int(entry["attempts"]),
+                                  outcome="submit-error")
                 _fail_or_retry(rid, attempt,    # attempt like any other
                                "SubmitError:\n" + traceback.format_exc())
                 return
             running[rid] = {
-                "name": name, "attempt": attempt,
+                "name": name, "attempt": attempt, "t0": t_sub,
                 "deadline": (time.monotonic() + ctx.timeout_s)
                 if ctx.timeout_s else None,
             }
@@ -536,14 +549,25 @@ class K8sExecutor:
 
         failed_rid = None
 
+        def _attempt_span(rid: str, st: dict, outcome: str) -> None:
+            sweep._trace_span(man["runs"][rid], "sweep/attempt",
+                              st["t0"], time.time(),
+                              attempt=int(man["runs"][rid].get("attempts")
+                                          or 0),
+                              outcome=outcome)
+
         def _fail_or_retry(rid: str, attempt: int, err: str) -> None:
             nonlocal failed_rid
             entry = man["runs"][rid]
             entry["error"] = err
             if attempt <= ctx.max_retries:
                 entry["status"] = "pending"
-                ready.append((rid, attempt + 1, time.monotonic()
-                              + ctx.backoff_s * 2 ** (attempt - 1)))
+                delay = ctx.backoff_s * 2 ** (attempt - 1)
+                now = time.time()
+                sweep._trace_span(entry, "sweep/backoff", now, now + delay,
+                                  attempt=attempt)
+                ready_since[rid] = now + delay
+                ready.append((rid, attempt + 1, time.monotonic() + delay))
             else:
                 entry["status"] = "failed"
                 if ctx.raise_on_error:
@@ -558,15 +582,23 @@ class K8sExecutor:
             if status.phase == "Succeeded":
                 res = load_result(out, rid)
                 if result_completes(res, entry, ctx.target_rounds(entry)):
+                    _attempt_span(rid, st, "done")
                     sweep._finish_entry(entry, res["history"],
                                         float(res.get("wall_s") or 0.0))
                     sweep.write_manifest(out, man)
                     return
+                _attempt_span(rid, st, "incomplete")
                 _fail_or_retry(rid, st["attempt"],
                                "IncompleteResult: Job succeeded but "
                                "result.json is missing, stale, or short "
                                "of the target round")
                 return
+            # a preempted worker (SIGTERM'd mid-run, checkpoint intact)
+            # is first-class in the trace: its retry resumes, and the
+            # manifest records how often the cluster preempted this run
+            _attempt_span(rid, st,
+                          "preempted" if status.reason == "Preempted"
+                          else "error")
             tail = cluster.logs(st["name"], tail=20)
             _fail_or_retry(rid, st["attempt"],
                            f"JobFailed({status.reason or 'unknown'}):\n"
@@ -594,6 +626,7 @@ class K8sExecutor:
                     progressed = True
                     cluster.delete(st["name"])
                     running.pop(rid)
+                    _attempt_span(rid, st, "timeout")
                     _fail_or_retry(rid, st["attempt"],
                                    f"TimeoutError: Job exceeded "
                                    f"timeout_s={ctx.timeout_s} (deleted)")

@@ -61,13 +61,25 @@ def registered_methods() -> List[str]:
 
 
 def make_trainer(spec: ExperimentSpec, cfg: ModelConfig,
-                 clients: List[Client], eval_fn=None):
-    """Resolve ``spec.method`` and build its trainer."""
+                 clients: List[Client], eval_fn=None, tracer=None):
+    """Resolve ``spec.method`` and build its trainer.
+
+    ``tracer`` (a live :class:`repro.obs.Tracer`) is bound AFTER
+    construction via the trainer's ``bind_tracer`` — the factory
+    signature stays ``(spec, cfg, clients, eval_fn)`` so third-party
+    registrations keep working; trainers without ``bind_tracer``
+    simply aren't traced.
+    """
     entry = method_entry(spec.method)
     if spec.topology and spec.topology != entry.topology:
         raise ValueError(f"spec.topology={spec.topology!r} but method "
                          f"{spec.method!r} is {entry.topology}")
-    return entry.factory(spec, cfg, clients, eval_fn)
+    trainer = entry.factory(spec, cfg, clients, eval_fn)
+    if tracer is not None and tracer.enabled:
+        bind = getattr(trainer, "bind_tracer", None)
+        if bind is not None:
+            bind(tracer)
+    return trainer
 
 
 # ---------------------------------------------------------------------------

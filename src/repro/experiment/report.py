@@ -50,6 +50,23 @@ def run_scalars(entry: Mapping[str, Any]) -> Dict[str, float]:
     }
     if entry.get("wall_s"):
         out["wall_s"] = float(entry["wall_s"])
+    # executor-side trace spans (sweep.json entry["trace"]): surface the
+    # scheduling story — attempts, time queued, time lost to retries
+    trace = entry.get("trace") or []
+    if entry.get("attempts"):
+        out["attempts"] = float(entry["attempts"])
+    queue_s = sum(s["dur_s"] for s in trace
+                  if s.get("name") == "sweep/queue")
+    # retry cost = scheduled backoff windows + wall time of every
+    # attempt that did NOT complete the run
+    retry_s = sum(
+        s["dur_s"] for s in trace
+        if s.get("name") == "sweep/backoff"
+        or (s.get("name") == "sweep/attempt"
+            and s.get("attrs", {}).get("outcome") != "done"))
+    if trace:
+        out["queue_s"] = float(queue_s)
+        out["retry_s"] = float(retry_s)
     for r in reversed(hist):               # last recorded eval wins
         ev = r.get("eval")
         if ev is None:

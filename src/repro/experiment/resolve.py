@@ -1,0 +1,126 @@
+"""The one `$FEDPHD_*` knob-resolution code path.
+
+Every run-shaping knob the repo reads from the environment — the round
+engine, the compute backend, the compute precision, and the obs
+(tracing) switch — resolves through :func:`resolve_knob` with the same
+precedence contract::
+
+    explicit argument  >  $FEDPHD_<KNOB>  >  default
+
+An explicit ``""``/``None`` means "not set" and falls through to the
+env var; an env var set to ``""`` likewise falls through to the
+default (so ``FEDPHD_BACKEND= pytest ...`` behaves like unset).  An
+unrecognized value raises ``ValueError`` at resolution time — never a
+silent fallback — so a typo'd CI matrix leg fails fast instead of
+quietly re-running the default path.
+
+This module is a dependency-free leaf (stdlib only): it is imported at
+module scope by ``repro.models.ops`` and ``repro.fl.engine``, which sit
+below ``repro.experiment`` in the import graph.  That works because
+``repro/experiment/__init__.py`` re-exports its public API lazily
+(PEP 562), so ``import repro.experiment.resolve`` never drags the
+trainer stack in.  The historical per-module helpers —
+``repro.models.ops.resolve_backend``/``resolve_precision`` and
+``repro.fl.engine.resolve_engine`` — survive as thin wrappers over
+:func:`resolve_knob`; the precedence logic lives only here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple
+
+ENGINES = ("auto", "vectorized", "sequential")
+BACKENDS = ("xla", "pallas", "ref")
+PRECISIONS = ("fp32", "bf16")
+OBS_MODES = ("off", "on")
+
+# $FEDPHD_OBS accepts the usual boolean spellings; they normalize onto
+# OBS_MODES before the membership check.
+_OBS_ALIASES = {"1": "on", "true": "on", "yes": "on",
+                "0": "off", "false": "off", "no": "off"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Knob:
+    """One resolvable knob: its env var, legal values, and default."""
+    name: str
+    env: str
+    choices: Tuple[str, ...]
+    default: str
+
+    def normalize(self, value: str) -> str:
+        if self.name == "obs":
+            value = _OBS_ALIASES.get(value.lower(), value.lower())
+        return value
+
+
+KNOBS = {
+    "engine": Knob("engine", "FEDPHD_ENGINE", ENGINES, "auto"),
+    "backend": Knob("backend", "FEDPHD_BACKEND", BACKENDS, "xla"),
+    "precision": Knob("precision", "FEDPHD_PRECISION", PRECISIONS, "fp32"),
+    "obs": Knob("obs", "FEDPHD_OBS", OBS_MODES, "off"),
+}
+
+
+def resolve_knob(name: str, explicit: Optional[str] = None) -> str:
+    """Resolve knob ``name``: ``explicit > $<knob.env> > knob.default``."""
+    knob = KNOBS[name]
+    source = "explicit" if explicit else \
+        ("env" if os.environ.get(knob.env) else "default")
+    value = knob.normalize(explicit or os.environ.get(knob.env, "")
+                           or knob.default)
+    if value not in knob.choices:
+        raise ValueError(
+            f"unknown {knob.name} {value!r} (from {source}); expected one "
+            f"of {knob.choices}")
+    return value
+
+
+def knob_source(name: str, explicit: Optional[str] = None) -> str:
+    """Where the resolved value came from: explicit | env | default."""
+    knob = KNOBS[name]
+    if explicit:
+        return "explicit"
+    return "env" if os.environ.get(knob.env) else "default"
+
+
+def validate_env(name: str) -> Optional[str]:
+    """Fail fast on a typo'd ``$FEDPHD_*`` value (the conftest matrix
+    fixtures); returns the raw env value ("" and unset both -> None)."""
+    knob = KNOBS[name]
+    raw = os.environ.get(knob.env)
+    if not raw:
+        return None
+    if knob.normalize(raw) not in knob.choices:
+        raise RuntimeError(f"{knob.env}={raw!r}; expected one of "
+                           f"{knob.choices}")
+    return raw
+
+
+def resolve_engine(engine: Optional[str] = None) -> Tuple[str, bool]:
+    """Resolve an engine choice to ``(engine, strict)``.
+
+    An explicit caller argument wins and is strict; ``None`` falls back
+    to ``$FEDPHD_ENGINE`` (the CI matrix knob, consumed via the
+    conftest fixture) and finally ``"auto"``.  A strict "vectorized"
+    raises on ragged clients; a non-strict one (env-selected) falls
+    back to the sequential path with a warning so suites that mix
+    ragged fixtures stay green under the matrix.
+    """
+    return resolve_knob("engine", engine), engine is not None
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Explicit choice > ``$FEDPHD_BACKEND`` > ``"xla"``."""
+    return resolve_knob("backend", backend)
+
+
+def resolve_precision(precision: Optional[str] = None) -> str:
+    """Explicit choice > ``$FEDPHD_PRECISION`` > ``"fp32"``."""
+    return resolve_knob("precision", precision)
+
+
+def resolve_obs(obs: Optional[str] = None) -> bool:
+    """Explicit choice > ``$FEDPHD_OBS`` > off; returns the enabled bool."""
+    return resolve_knob("obs", obs) == "on"

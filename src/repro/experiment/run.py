@@ -21,6 +21,7 @@ from repro.experiment.registry import make_trainer
 from repro.experiment.spec import ExperimentSpec
 from repro.fl.client import Client
 from repro.fl.record import RoundRecord
+from repro.obs.trace import make_tracer
 
 CKPT_FORMAT = 1
 
@@ -37,7 +38,8 @@ class Experiment:
 
     def __init__(self, spec: ExperimentSpec, *,
                  clients: Optional[List[Client]] = None,
-                 eval_fn: Optional[Callable] = None):
+                 eval_fn: Optional[Callable] = None,
+                 trace_path: Optional[str] = None):
         self.spec = spec
         self.model_cfg = get_config(spec.model)
         if spec.backend:
@@ -51,7 +53,12 @@ class Experiment:
         if clients is None:
             clients, self.images, self.labels = make_clients(spec)
         self.clients = clients
-        self.trainer = make_trainer(spec, self.model_cfg, clients, eval_fn)
+        # NULL_TRACER when spec.obs resolves disabled — make_trainer then
+        # skips the bind entirely and the trainers keep their default
+        # no-op tracer (the bitwise-no-op invariant)
+        self.tracer = make_tracer(spec.obs, default_path=trace_path)
+        self.trainer = make_trainer(spec, self.model_cfg, clients, eval_fn,
+                                    tracer=self.tracer)
 
     # current (possibly post-prune) model config / params / history
     @property
@@ -85,6 +92,7 @@ class Experiment:
             self.trainer.run_round(r)
             if ckpt and save_every and r % save_every == 0 and r < target:
                 self.save(ckpt)
+        self.tracer.flush()
         return self.trainer.history
 
     # -- checkpointing -------------------------------------------------------
@@ -101,16 +109,27 @@ class Experiment:
              eval_fn: Optional[Callable] = None) -> "Experiment":
         """Rebuild the experiment from its checkpoint and resume state.
         ``clients``/``eval_fn`` must be re-supplied only when the
-        original run injected custom ones."""
+        original run injected custom ones.  A traced run's tracer is
+        rebuilt too (append mode: the trace grows a new in-band meta
+        line per session, so kill-and-resume leaves prior spans
+        intact)."""
         arrays, meta = checkpoint.load(path)
         spec = ExperimentSpec.from_dict(meta["spec"])
-        exp = cls(spec, clients=clients, eval_fn=eval_fn)
+        exp = cls(spec, clients=clients, eval_fn=eval_fn,
+                  trace_path=default_trace_path(path))
         exp.trainer.restore(arrays, meta)
         return exp
 
 
 def checkpoint_exists(path: str) -> bool:
     return os.path.exists(path + ".manifest.json")
+
+
+def default_trace_path(ckpt: Optional[str]) -> Optional[str]:
+    """Where a traced run writes when ``obs.trace`` is unset: next to
+    the checkpoint (``<ckpt>.trace.jsonl``), or None (-> ``trace.jsonl``
+    in the CWD, see :func:`repro.obs.trace.make_tracer`)."""
+    return (ckpt + ".trace.jsonl") if ckpt else None
 
 
 def run_spec(spec: Optional[ExperimentSpec], *, rounds: Optional[int] = None,
@@ -138,8 +157,10 @@ def run_spec(spec: Optional[ExperimentSpec], *, rounds: Optional[int] = None,
                                     f"{ckpt!r}")
         exp = Experiment.load(ckpt, clients=clients, eval_fn=eval_fn)
     else:
-        exp = Experiment(spec, clients=clients, eval_fn=eval_fn)
+        exp = Experiment(spec, clients=clients, eval_fn=eval_fn,
+                         trace_path=default_trace_path(ckpt))
     exp.run(rounds, ckpt=ckpt, save_every=save_every)
     if ckpt:
         exp.save(ckpt)
+    exp.tracer.flush()
     return exp

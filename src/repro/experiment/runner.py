@@ -34,11 +34,14 @@ import os
 from typing import Optional, Sequence, Union
 
 from repro.configs.base import FLConfig
+from repro.experiment.cli import (add_compute_flags, add_metrics_flag,
+                                  add_obs_flags, cli_obs_spec, write_metrics)
 from repro.experiment.report import report_markdown, write_report
 from repro.experiment.run import Experiment, checkpoint_exists, run_spec
 from repro.experiment.spec import DataSpec, ExperimentSpec
 from repro.experiment.sweep import (SweepResult, SweepSpec, manifest_status,
                                     run_sweep)
+from repro.obs.metrics import summarize_trace
 
 PRESETS = {
     # the CI smoke config: 6 clients / 2 edges on the 16x16 smoke U-Net,
@@ -110,6 +113,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--engine",
                     choices=("auto", "vectorized", "sequential"),
                     help="override spec.engine")
+    # the shared CLI surface (same names/semantics as python -m
+    # repro.serve): --backend/--precision/--trace/--metrics
+    add_compute_flags(ap)
+    add_obs_flags(ap)
+    add_metrics_flag(ap)
     ap.add_argument("--seed", type=int, help="override spec.seed")
     ap.add_argument("--eval-every", type=int,
                     help="override spec.eval_every (the CLI's hook DDIM-"
@@ -142,6 +150,15 @@ def _apply_overrides(spec: ExperimentSpec,
         over["seed"] = args.seed
     if args.eval_every is not None:
         over["eval_every"] = args.eval_every
+    if args.backend is not None:
+        over["backend"] = args.backend
+    if args.precision is not None:
+        over["precision"] = args.precision
+    if args.trace is not None:
+        # --trace [PATH] -> an explicitly-enabled ObsSpec (keeps the
+        # spec's other obs knobs, e.g. flush_every from a spec file)
+        over["obs"] = spec.obs.replace(enabled=True,
+                                       trace=args.trace or spec.obs.trace)
     return spec.replace(**over) if over else spec
 
 
@@ -161,15 +178,20 @@ def _main_sweep(args: argparse.Namespace) -> SweepResult:
     bad = [flag for flag, val in (("--method", args.method),
                                   ("--engine", args.engine),
                                   ("--seed", args.seed),
-                                  ("--eval-every", args.eval_every))
+                                  ("--eval-every", args.eval_every),
+                                  ("--backend", args.backend),
+                                  ("--precision", args.precision),
+                                  ("--trace", args.trace),
+                                  ("--metrics", args.metrics))
            if val is not None]
     if args.resume:
         bad.append("--resume")
     if bad:
         raise SystemExit(
             f"--sweep is incompatible with {', '.join(bad)}: declare "
-            "per-run fields in the sweep JSON (base/axes); sweep resume "
-            "is automatic from the manifest")
+            "per-run fields in the sweep JSON (base/axes — obs.* axes "
+            "cover tracing); sweep resume is automatic from the "
+            "manifest and the aggregated metrics land in report.json")
     with open(args.sweep) as f:
         sweep = SweepSpec.from_json(f.read())
     if args.rounds is not None:
@@ -240,6 +262,18 @@ def main(argv: Optional[Sequence[str]] = None
     if args.resume:
         if not checkpoint_exists(ckpt):
             raise SystemExit(f"--resume: no checkpoint at {ckpt}")
+        if args.trace is not None:
+            # a resumed run replays the checkpointed spec, so --trace
+            # routes through the env leg of the same resolution contract
+            # (an explicit enabled=False in that spec still wins); the
+            # trace appends next to the checkpoint, so a custom path
+            # can't be honored here
+            if args.trace:
+                raise SystemExit("--trace PATH is incompatible with "
+                                 "--resume (the resumed trace appends to "
+                                 "<out>/ckpt.npz.trace.jsonl); use bare "
+                                 "--trace")
+            os.environ["FEDPHD_OBS"] = "on"
         exp = run_spec(None, rounds=args.rounds, ckpt=ckpt, resume=True,
                        save_every=args.save_every, eval_fn=_default_eval)
     else:
@@ -265,6 +299,23 @@ def main(argv: Optional[Sequence[str]] = None
     print(f"[{exp.spec.name}/{exp.spec.method}] round {last.round}: "
           f"loss={last.loss:.4f} params={last.params_m:.2f}M "
           f"total_comm={total_comm:.4f}GB -> {args.out}")
+
+    metrics = {"name": exp.spec.name, "method": exp.spec.method,
+               "rounds": last.round, "loss": last.loss,
+               "params_m": last.params_m, "total_comm_gb": total_comm}
+    if exp.tracer.enabled:
+        exp.tracer.flush()
+        ts = summarize_trace(exp.tracer.path)
+        metrics.update(trace=exp.tracer.path,
+                       overlap_ratio=ts["overlap_ratio"],
+                       compiles=ts["compiles"],
+                       recompiles=ts["recompiles"])
+        print(f"trace -> {exp.tracer.path} "
+              f"(overlap={ts['overlap_ratio']} compiles={ts['compiles']} "
+              f"recompiles={ts['recompiles']})")
+    if args.metrics:
+        write_metrics(args.metrics, "experiment", metrics)
+        print(f"wrote metrics to {args.metrics}")
     return exp
 
 

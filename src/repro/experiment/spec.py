@@ -23,6 +23,7 @@ from typing import Optional
 from repro.configs.base import FLConfig, fl_from_dict
 from repro.fl.compress import CommSpec
 from repro.fl.faults import FaultSpec
+from repro.obs.spec import ObsSpec
 
 TOPOLOGIES = ("hierarchical", "flat")
 
@@ -79,6 +80,10 @@ class ExperimentSpec:
     comm: CommSpec = CommSpec()     # uplink compression (repro.fl.
                                     # compress): sweepable as comm.quant
                                     # = none | int8 | fp8
+    obs: ObsSpec = ObsSpec()        # tracing/metrics (repro.obs): default
+                                    # disabled = bitwise no-op; enabled
+                                    # resolves explicit > $FEDPHD_OBS >
+                                    # off; sweepable as obs.* axes
 
     def replace(self, **kw) -> "ExperimentSpec":
         return dataclasses.replace(self, **kw)
@@ -99,6 +104,8 @@ class ExperimentSpec:
             d["fault"] = FaultSpec.from_dict(d["fault"])
         if isinstance(d.get("comm"), dict):
             d["comm"] = CommSpec.from_dict(d["comm"])
+        if isinstance(d.get("obs"), dict):
+            d["obs"] = ObsSpec.from_dict(d["obs"])
         if isinstance(d.get("mesh"), dict):
             # JSON numbers may arrive as floats; axis sizes are ints
             d["mesh"] = {str(k): int(v) for k, v in d["mesh"].items()}

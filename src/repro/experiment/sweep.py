@@ -290,6 +290,29 @@ def _run_ckpt(rid: str) -> str:
     return os.path.join("runs", rid, "ckpt.npz")
 
 
+def _trace_span(entry: dict, name: str, t0: float, t1: float,
+                **attrs) -> None:
+    """Append an executor-side span to the run's manifest trace.
+
+    Same shape as the obs trace.jsonl span lines (repro.obs.trace) but
+    with ``time.time()`` epoch stamps — manifest spans must stay
+    comparable across executor invocations, since retries and
+    kill-and-resume spread one run's attempts over several processes.
+    Stored unconditionally: the executor path is cold (per attempt, not
+    per round), so there is nothing to protect with an obs gate, and
+    the queue/retry/backoff/preemption record survives in ``sweep.json``
+    for ``repro.experiment.report`` to aggregate.
+
+    Span names: ``sweep/queue`` (ready -> launch/submit),
+    ``sweep/attempt`` (launch -> settle; ``attrs.outcome`` in done |
+    error | timeout | worker-died | preempted | incomplete |
+    submit-error), ``sweep/backoff`` (the scheduled retry delay).
+    """
+    entry.setdefault("trace", []).append(
+        {"ev": "span", "name": name, "t0": t0, "t1": t1,
+         "dur_s": t1 - t0, "attrs": attrs})
+
+
 def init_manifest(sweep: SweepSpec, out: str) -> dict:
     """Create — or reconcile with — the on-disk manifest.
 
@@ -325,6 +348,7 @@ def init_manifest(sweep: SweepSpec, out: str) -> dict:
                 "history": [],
                 "error": None,
                 "attempts": 0,
+                "trace": [],
             }
     os.makedirs(out, exist_ok=True)
     write_manifest(out, man)
@@ -451,27 +475,39 @@ class SequentialExecutor(Executor):
 
     def run(self, man: dict, out: str, order: List[str],
             ctx: ExecContext) -> None:
+        t_exec0 = time.time()
         for rid in order:
             entry = man["runs"][rid]
             ckpt = os.path.join(out, entry["ckpt"])
             os.makedirs(os.path.dirname(ckpt), exist_ok=True)
+            # queue = waiting in-process behind the earlier grid points
+            _trace_span(entry, "sweep/queue", t_exec0, time.time())
             last_exc = None
             for attempt in range(1, ctx.max_retries + 2):
                 if attempt > 1:
+                    t_b = time.time()
                     time.sleep(ctx.backoff_s * 2 ** (attempt - 2))
+                    _trace_span(entry, "sweep/backoff", t_b, time.time(),
+                                attempt=attempt - 1)
                 entry["status"] = "running"
                 entry["attempts"] = int(entry.get("attempts") or 0) + 1
                 write_manifest(out, man)
+                t_a = time.time()
                 try:
                     history, wall_s = _attempt(entry["spec"], ckpt,
                                                ctx.rounds, ctx.eval_fn,
                                                ctx.save_every)
                 except Exception as e:  # noqa: BLE001 — recorded+retried
                     last_exc = e
+                    _trace_span(entry, "sweep/attempt", t_a, time.time(),
+                                attempt=int(entry["attempts"]),
+                                outcome="error")
                     entry["error"] = traceback.format_exc()
                     entry["status"] = "pending"  # retry-eligible until
                     write_manifest(out, man)     # the for-else quarantines
                     continue
+                _trace_span(entry, "sweep/attempt", t_a, time.time(),
+                            attempt=int(entry["attempts"]), outcome="done")
                 _finish_entry(entry, history, wall_s)
                 write_manifest(out, man)
                 break
@@ -619,11 +655,17 @@ def _run_procs(man: dict, out: str, order: List[str],
     # (rid, attempt, not_before): retries wait out their backoff here
     ready: List[Tuple[str, int, float]] = [(rid, 1, 0.0) for rid in order]
     running: Dict[str, dict] = {}
+    # epoch stamp of when each rid last became launchable (executor
+    # start, or backoff expiry) — the t0 of its sweep/queue span
+    ready_since: Dict[str, float] = {rid: time.time() for rid in order}
 
     def _launch(rid: str, attempt: int) -> None:
         entry = man["runs"][rid]
         entry["status"] = "running"
         entry["attempts"] = int(entry.get("attempts") or 0) + 1
+        now = time.time()
+        _trace_span(entry, "sweep/queue", ready_since.pop(rid, now), now,
+                    attempt=int(entry["attempts"]))
         ckpt = os.path.join(out, entry["ckpt"])
         os.makedirs(os.path.dirname(ckpt), exist_ok=True)
         recv, send = ctx.Pipe(duplex=False)
@@ -633,10 +675,16 @@ def _run_procs(man: dict, out: str, order: List[str],
         proc.start()
         send.close()    # parent's copy of the child end must not keep
         running[rid] = {"proc": proc, "conn": recv,     # the pipe open
-                        "attempt": attempt,
+                        "attempt": attempt, "t0": time.time(),
                         "deadline": (time.monotonic() + timeout_s)
                         if timeout_s else None}
         write_manifest(out, man)
+
+    def _attempt_span(rid: str, st: dict, outcome: str) -> None:
+        _trace_span(man["runs"][rid], "sweep/attempt", st["t0"],
+                    time.time(),
+                    attempt=int(man["runs"][rid].get("attempts") or 0),
+                    outcome=outcome)
 
     def _fail_or_retry(rid: str, attempt: int, err: str) -> bool:
         """Record the attempt's error; requeue with backoff or
@@ -645,8 +693,13 @@ def _run_procs(man: dict, out: str, order: List[str],
         entry["error"] = err
         if attempt <= max_retries:
             entry["status"] = "pending"
-            ready.append((rid, attempt + 1,
-                          time.monotonic() + backoff_s * 2 ** (attempt - 1)))
+            nb = time.monotonic() + backoff_s * 2 ** (attempt - 1)
+            now = time.time()
+            _trace_span(entry, "sweep/backoff", now,
+                        now + backoff_s * 2 ** (attempt - 1),
+                        attempt=attempt)
+            ready_since[rid] = now + backoff_s * 2 ** (attempt - 1)
+            ready.append((rid, attempt + 1, nb))
         else:
             entry["status"] = "failed"
         write_manifest(out, man)
@@ -676,12 +729,15 @@ def _run_procs(man: dict, out: str, order: List[str],
                 proc.join()
                 progressed = True
                 if msg[0] == "done":
+                    _attempt_span(rid, st, "done")
                     _finish_entry(man["runs"][rid], msg[1], msg[2])
                     write_manifest(out, man)
-                elif _fail_or_retry(rid, st["attempt"], msg[1]) \
-                        and raise_on_error:
-                    failed_rid = rid
-                    break
+                else:
+                    _attempt_span(rid, st, "error")
+                    if _fail_or_retry(rid, st["attempt"], msg[1]) \
+                            and raise_on_error:
+                        failed_rid = rid
+                        break
             elif st["deadline"] is not None \
                     and time.monotonic() > st["deadline"]:
                 # hung (or just slow past the budget): terminate, then
@@ -693,6 +749,7 @@ def _run_procs(man: dict, out: str, order: List[str],
                     proc.join()
                 _reap(rid)
                 progressed = True
+                _attempt_span(rid, st, "timeout")
                 err = (f"TimeoutError: run exceeded "
                        f"timeout_s={timeout_s} (terminated)")
                 if _fail_or_retry(rid, st["attempt"], err) \
@@ -703,6 +760,7 @@ def _run_procs(man: dict, out: str, order: List[str],
                 # dead with no message: segfault / OOM-kill / external
                 _reap(rid)
                 progressed = True
+                _attempt_span(rid, st, "worker-died")
                 err = f"WorkerDied: exitcode={proc.exitcode}"
                 if _fail_or_retry(rid, st["attempt"], err) \
                         and raise_on_error:

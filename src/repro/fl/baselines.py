@@ -31,6 +31,7 @@ losing state.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -55,6 +56,9 @@ from repro.fl.faults import (FaultSpec, apply_late, late_delta,
                              make_fault_model)
 from repro.fl.record import RoundRecord, RunResult, evals_of
 from repro.models import model
+from repro.models.ops import resolve_backend, resolve_precision
+from repro.obs.compile_tracker import CompileTracker
+from repro.obs.trace import NULL_TRACER
 from repro.optim import adam_init, adam_update
 
 FLAT_METHODS = ("fedavg", "fedprox", "feddiffuse", "moon", "scaffold")
@@ -124,7 +128,7 @@ class FlatTrainer:
                  eval_fn: Optional[Callable] = None, eval_every: int = 0,
                  aggregation: str = "fedavg",
                  fault: Optional[FaultSpec] = None,
-                 quant: str = "none"):
+                 quant: str = "none", tracer=None):
         assert method in FLAT_METHODS
         if quant not in QUANTS:
             raise ValueError(f"unknown quant {quant!r}; expected one of "
@@ -139,13 +143,17 @@ class FlatTrainer:
         # "staleness" == FedAvg over on-time reporters + the buffered
         # late-delta merge; with no stragglers it IS FedAvg exactly
         self.aggregation = aggregation
-        # pin the resolved compute backend + precision (repro.models.ops)
-        # so every compiled step/round program and the memoized engine
-        # key carry concrete values — mirrors FedPhD
-        from repro.models.ops import resolve_backend, resolve_precision
+        # pin the resolved compute backend + precision (one code path:
+        # repro.experiment.resolve) so every compiled step/round program
+        # and the memoized engine key carry concrete values — mirrors
+        # FedPhD
         self.cfg = cfg = cfg.replace(
             backend=resolve_backend(cfg.backend),
             precision=resolve_precision(cfg.precision))
+        # obs tracing: NULL_TRACER (the default) makes every span/event
+        # call site a no-op — tracing never touches RNG or numerics
+        self._obs = NULL_TRACER
+        self._obs_compile = None
         self.fl = fl
         self.clients = clients
         self.lr = lr
@@ -219,12 +227,27 @@ class FlatTrainer:
         self._seen = np.zeros(n, bool)
 
         self.history: List[RoundRecord] = []
+        if tracer is not None:
+            self.bind_tracer(tracer)
+
+    # -- observability -------------------------------------------------------
+    def bind_tracer(self, tracer) -> None:
+        """Attach an obs tracer (repro.obs): subsequent rounds emit
+        phase spans / fault events / compile counters through it.
+        ``None`` (or the NULL_TRACER) keeps the no-op path."""
+        self._obs = tracer if tracer is not None else NULL_TRACER
+        self._obs_compile = CompileTracker(self._obs) \
+            if (self._obs.enabled
+                and getattr(self._obs, "compile_tracking", False)) else None
+        if self._obs_compile is not None:
+            self._obs_compile.watch("step_fn", self.step_fn)
+            self._obs_compile.watch("round_engine", self._round_engine)
 
     # -- engine routing ------------------------------------------------------
     def _use_vectorized(self, round_clients) -> bool:
         use, self._warned_ragged = route_engine(
             self.engine, self._engine_strict, round_clients,
-            self._warned_ragged, "run_flat_fl", method=self.method)
+            self._warned_ragged, "FlatTrainer", method=self.method)
         return use
 
     # -- reference path ------------------------------------------------------
@@ -341,30 +364,33 @@ class FlatTrainer:
         return losses
 
     # -- device-resident path ------------------------------------------------
-    def _round_vectorized(self, sel, subs, faults=None):
+    def _round_vectorized(self, sel, subs, faults=None, r=0):
         """E=1 engine round.  Faults stay shape-static: budgets AND a
         prefix into the (C, S) valid mask, non-reporting clients get a
         zero aggregation weight (renormalized among reporters), and
         late deltas return via the ``w_late`` einsum."""
         method, fl, cfg, params = self.method, self.fl, self.cfg, self.params
-        sel_arr = np.asarray(sel)
-        sel_clients = [self.clients[int(cid)] for cid in sel]
-        counts = [cl.n_samples for cl in sel_clients]
-        rep = np.asarray([faults is None or faults.reporting_of(int(c))
-                          for c in sel], bool)
-        comp = np.asarray([faults is None or faults.completed_of(int(c))
-                           for c in sel], bool)
+        obs = self._obs
+        with obs.span("round/host_prep", round=r):
+            sel_arr = np.asarray(sel)
+            sel_clients = [self.clients[int(cid)] for cid in sel]
+            counts = [cl.n_samples for cl in sel_clients]
+            rep = np.asarray([faults is None or faults.reporting_of(int(c))
+                              for c in sel], bool)
+            comp = np.asarray([faults is None or faults.completed_of(int(c))
+                               for c in sel], bool)
 
-        batches, valid, padded = stack_round([cl.data for cl in sel_clients],
-                                             fl.local_epochs)
-        if faults is not None:
-            budgets = np.asarray([faults.budget_of(int(c)) for c in sel])
-            prefix = np.arange(valid.shape[1])[None, :] < budgets[:, None]
-            padded = padded or not bool(prefix.all())
-            valid = valid & prefix
-        batches = {k: jnp.asarray(v) for k, v in batches.items()}
-        valid = jnp.asarray(valid)
-        rngs = jnp.stack(subs)
+            batches, valid, padded = stack_round(
+                [cl.data for cl in sel_clients], fl.local_epochs)
+            if faults is not None:
+                budgets = np.asarray([faults.budget_of(int(c)) for c in sel])
+                prefix = np.arange(valid.shape[1])[None, :] < budgets[:, None]
+                padded = padded or not bool(prefix.all())
+                valid = valid & prefix
+        with obs.span("round/h2d", round=r):
+            batches = {k: jnp.asarray(v) for k, v in batches.items()}
+            valid = jnp.asarray(valid)
+            rngs = jnp.stack(subs)
         # the flat topology is the E=1 special case of the edge engine
         server = jax.tree.map(lambda leaf: leaf[None], params)
         edge_idx = jnp.zeros((len(sel),), jnp.int32)
@@ -409,16 +435,17 @@ class FlatTrainer:
         # host store: gathered rows are numpy — stage the opt rows to
         # device explicitly (numpy inputs would silently defeat the
         # engine's opt_states buffer donation)
-        out = self._round_engine(
-            server, edge_idx, batches, valid, rngs, w_row, ctx=ctx,
-            opt_states=(store_tree(tree_gather(self._opt_stack, sel_arr),
-                                   "device")
-                        if self.persistent_opt else None),
-            w_late=w_late,
-            err=(store_tree(tree_gather(self._err_stack, sel_arr),
-                            "device")
-                 if self.quant != "none" else None),
-            masked=padded, per_client_opt=self.persistent_opt)
+        with obs.span("round/dispatch", round=r):
+            out = self._round_engine(
+                server, edge_idx, batches, valid, rngs, w_row, ctx=ctx,
+                opt_states=(store_tree(tree_gather(self._opt_stack, sel_arr),
+                                       "device")
+                            if self.persistent_opt else None),
+                w_late=w_late,
+                err=(store_tree(tree_gather(self._err_stack, sel_arr),
+                                "device")
+                     if self.quant != "none" else None),
+                masked=padded, per_client_opt=self.persistent_opt)
         # NO host sync here: the (C,) loss array stays a device future
         # until _finish_round — under the pipelined run() the next
         # round's host data prep + H2D overlap this round's compute
@@ -556,11 +583,19 @@ class FlatTrainer:
                      for c in sel]
             faults = self._faults.draw_round(
                 sel, steps, self.aggregation == "staleness")
+            if self._obs.enabled:
+                self._obs.event("fault/draw", round=r,
+                                **faults.summary())
 
         if self._use_vectorized([self.clients[int(c)] for c in sel]):
-            losses = self._round_vectorized(sel, subs, faults)  # dev future
+            losses = self._round_vectorized(sel, subs, faults,
+                                            r=r)               # dev future
         else:
-            losses = self._round_sequential(sel, subs, faults)  # host floats
+            # the reference loop syncs per batch: host prep, compute and
+            # aggregation interleave, so it gets one dispatch span
+            with self._obs.span("round/dispatch", round=r):
+                losses = self._round_sequential(sel, subs,
+                                                faults)        # host floats
 
         up_q, up_f, down = self._wire_bytes()
         if faults is None:
@@ -595,7 +630,8 @@ class FlatTrainer:
         """Sync the pending round's losses and append its RoundRecord."""
         losses = pend["losses"]
         if not isinstance(losses, list):          # device future -> host
-            losses = [float(x) for x in np.asarray(losses)]
+            with self._obs.span("round/loss_sync", round=pend["round"]):
+                losses = [float(x) for x in np.asarray(losses)]
         r = pend["round"]
         mask = pend.get("loss_mask")
         if mask is not None:        # faults: average over executed clients
@@ -620,6 +656,11 @@ class FlatTrainer:
         # eval, not the round — otherwise a later run()/resume would
         # re-run an already-applied round and diverge
         self.history.append(rec)
+        if self._obs_compile is not None:
+            # compiles triggered by this round's dispatch/sync are in
+            # the caches by now; growth beyond the allowance = a
+            # shape/dtype leaked into a trace
+            self._obs_compile.check(round=r)
         if self.eval_fn and self.eval_every and r % self.eval_every == 0:
             rec.eval = self.eval_fn(pend["params"], pend["cfg"], r)
         return rec
@@ -726,7 +767,9 @@ def run_flat_fl(method: str, cfg: ModelConfig, fl: FLConfig,
                 eval_fn: Optional[Callable] = None,
                 eval_every: int = 0, engine: Optional[str] = None,
                 persistent_opt: bool = False) -> FlatFLResult:
-    """Legacy front-end (prefer ``repro.experiment.run_spec``).
+    """Deprecated legacy front-end — use ``repro.experiment.run_spec``
+    (declarative, resumable, traced) or construct :class:`FlatTrainer`
+    directly; this wrapper will be removed after one release.
 
     method in {fedavg, fedprox, feddiffuse, moon, scaffold}.
 
@@ -736,6 +779,9 @@ def run_flat_fl(method: str, cfg: ModelConfig, fl: FLConfig,
     round).  ``eval_fn(params, cfg, round)`` results land in
     ``RoundRecord.eval`` (the unified hook contract).
     """
+    warnings.warn(
+        "run_flat_fl is deprecated; use repro.experiment.run_spec(...) "
+        "or FlatTrainer(...) directly", DeprecationWarning, stacklevel=2)
     trainer = FlatTrainer(method, cfg, fl, clients, lr=lr,
                           rng_seed=rng_seed, engine=engine,
                           persistent_opt=persistent_opt,

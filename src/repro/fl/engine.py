@@ -40,7 +40,6 @@ partitioner splits the vmapped program across devices.
 """
 from __future__ import annotations
 
-import os
 import warnings
 from functools import lru_cache, partial
 from typing import Optional, Tuple
@@ -51,11 +50,12 @@ import numpy as np
 
 from repro.configs.base import FLConfig, ModelConfig
 from repro.core.aggregation import combine_leaf
+# the single $FEDPHD_* precedence code path; resolve_engine is re-exported
+# here for back-compat (see repro.experiment.resolve for the contract)
+from repro.experiment.resolve import ENGINES, resolve_engine
 from repro.fl.client import make_loss_fn, scaffold_correction
 from repro.fl.compress import ef_roundtrip_stacked
 from repro.optim import AdamState, adam_init, adam_update
-
-ENGINES = ("auto", "vectorized", "sequential")
 
 # vmap axes for each method's stacked ctx pytree: 0 = per-client
 # leading (C, ...) axis, None = one copy broadcast to every lane.
@@ -67,24 +67,6 @@ CTX_AXES = {
     "moon": {"global_params": None, "prev_params": 0},
     "scaffold": {"c_local": 0, "c_global": None, "scale": 0},
 }
-
-
-def resolve_engine(engine: Optional[str]) -> Tuple[str, bool]:
-    """Resolve an engine choice to ``(engine, strict)``.
-
-    An explicit caller argument wins and is strict; ``None`` falls back
-    to ``$FEDPHD_ENGINE`` (the CI matrix knob, consumed via the
-    conftest fixture) and finally ``"auto"``.  A strict "vectorized"
-    raises on ragged clients; a non-strict one (env-selected) falls
-    back to the sequential path with a warning so suites that mix
-    ragged fixtures stay green under the matrix.
-    """
-    strict = engine is not None
-    engine = engine or os.environ.get("FEDPHD_ENGINE") or "auto"
-    if engine not in ENGINES:
-        raise ValueError(f"unknown engine {engine!r}; expected one of "
-                         f"{ENGINES}")
-    return engine, strict
 
 
 # ---------------------------------------------------------------------------

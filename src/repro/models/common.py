@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Optional
 
@@ -16,7 +17,9 @@ class ApplyOptions:
     # compute backend for ops-routed tensor ops ("" = cfg.backend /
     # $FEDPHD_BACKEND / "xla" — see repro.models.ops.resolve_backend)
     backend: str = ""
-    use_flash: bool = False         # legacy alias: backend="pallas" for attention
+    # DEPRECATED alias for backend="pallas" on attention: warns at
+    # construction, removed after one release
+    use_flash: bool = False
     remat: bool = True              # activation checkpointing over layer blocks
     deterministic: bool = True      # disable dropout
     # activation-sharding constraints (mesh axis names; () = unconstrained).
@@ -32,6 +35,13 @@ class ApplyOptions:
     ep_axes: tuple = ()             # mesh axes the expert dim shards over
     ep_token_axes: tuple = ()       # mesh axes flat tokens shard over
     wkv_chunk: int = 0              # chunk-parallel WKV (0 = exact scan)
+
+    def __post_init__(self):
+        if self.use_flash:
+            warnings.warn(
+                "ApplyOptions.use_flash is deprecated; use "
+                "backend=\"pallas\" (routes attention through the same "
+                "flash kernel)", DeprecationWarning, stacklevel=3)
 
 
 DEFAULT_OPTS = ApplyOptions()

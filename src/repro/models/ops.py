@@ -41,7 +41,6 @@ the vectorized round program.
 """
 from __future__ import annotations
 
-import os
 from functools import partial
 from typing import Optional
 
@@ -49,6 +48,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# the single $FEDPHD_* precedence code path; resolve_backend /
+# resolve_precision below are its back-compat wrappers (safe at module
+# scope: repro.experiment re-exports lazily, resolve.py is a leaf)
+from repro.experiment.resolve import BACKENDS, PRECISIONS, resolve_backend, \
+    resolve_precision
 from repro.kernels.block_masked_matmul.ops import masked_matmul as _bmm_kernel
 from repro.kernels.block_masked_matmul.ref import block_masked_matmul_ref
 from repro.kernels.flash_attention.ops import flash_attention as _flash_kernel
@@ -56,33 +60,11 @@ from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.group_l2_norms.ops import group_sq_norms_kernel
 from repro.kernels.group_l2_norms.ref import group_l2_norms_ref
 
-BACKENDS = ("xla", "pallas", "ref")
-
 # compute-precision axis, resolved exactly like the backend: fp32 keeps
 # today's numerics; bf16 runs the GEMMs/attention in bfloat16 while
 # aggregation, Adam moments, and the master weights stay fp32 (the cast
 # lives in make_train_one/make_local_step — see repro.fl.engine)
-PRECISIONS = ("fp32", "bf16")
-
 _COMPUTE_DTYPE = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
-
-
-def resolve_backend(backend: Optional[str] = None) -> str:
-    """Explicit choice > ``$FEDPHD_BACKEND`` > ``"xla"``."""
-    backend = backend or os.environ.get("FEDPHD_BACKEND") or "xla"
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; expected one of "
-                         f"{BACKENDS}")
-    return backend
-
-
-def resolve_precision(precision: Optional[str] = None) -> str:
-    """Explicit choice > ``$FEDPHD_PRECISION`` > ``"fp32"``."""
-    precision = precision or os.environ.get("FEDPHD_PRECISION") or "fp32"
-    if precision not in PRECISIONS:
-        raise ValueError(f"unknown precision {precision!r}; expected one "
-                         f"of {PRECISIONS}")
-    return precision
 
 
 def compute_dtype(precision: str):

@@ -1,0 +1,106 @@
+"""Jit-cache growth tracking: compile counts as trace counters.
+
+Generalizes the serve layer's ``compile_count()`` (which read
+``jax.jit``'s private ``_cache_size()`` on one function) into a tracker
+any component can point at its jitted entry points.  The contract:
+
+  * the FIRST compile of each watched function is expected (jit is
+    lazy; the sparse->plain engine swap at the prune boundary is a new
+    function and gets its own expected first compile);
+  * any growth beyond that is an *unexpected recompile* — a shape or
+    dtype leaked into a trace, exactly the regression the ROADMAP's
+    "zero steady-state recompiles" line guards — and is emitted as a
+    ``compile/<name>`` counter with ``attrs.unexpected > 0``.
+
+``_cache_size`` is a private jax API; :func:`cache_size` degrades to
+``None`` on wrappers that don't expose it (e.g. the mesh-sharded
+engine closure), and the tracker silently skips those.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+
+def cache_size(fn) -> Optional[int]:
+    """Entries in a jitted function's compilation cache (None if the
+    object does not expose jit's cache API)."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    try:
+        return int(probe())
+    except Exception:
+        return None
+
+
+class _Watch:
+    __slots__ = ("fn", "last", "allow", "compiles", "unexpected")
+
+    def __init__(self, fn, last):
+        self.fn = fn
+        self.last = last        # cache size at last check
+        self.allow = 1          # expected compiles not yet consumed
+        self.compiles = 0       # growth observed since watch()
+        self.unexpected = 0     # growth beyond the granted allowance
+
+
+class CompileTracker:
+    """Watches jitted functions and emits cache-growth counters.
+
+    Each ``watch()`` call grants ONE expected compile: the initial
+    registration covers jit's lazy first trace, and re-watching at a
+    declared recompile boundary (the trainers re-watch from
+    ``_rebuild_steps`` after pruning) covers the new shape signature —
+    the memoized engines can hand back the same underlying
+    ``PjitFunction`` pre- and post-prune, so fn identity alone cannot
+    distinguish the expected prune-boundary compile from a leak.
+    """
+
+    def __init__(self, tracer):
+        self._tracer = tracer
+        self._watched = {}
+
+    def watch(self, name: str, fn) -> bool:
+        """(Re)register ``fn`` under ``name``, granting one expected
+        compile; entries already in the cache at first watch don't
+        count.  Returns False if ``fn`` does not expose a jit cache
+        (not watched)."""
+        size = cache_size(fn)
+        if size is None:
+            self._watched.pop(name, None)
+            return False
+        prev = self._watched.get(name)
+        if prev is not None and prev.fn is fn:
+            prev.allow += 1                  # declared recompile boundary
+            return True
+        self._watched[name] = _Watch(fn, size)
+        return True
+
+    def check(self, **attrs) -> int:
+        """Poll every watched cache; emit a ``compile/<name>`` counter
+        per grown cache and return the number of *unexpected* compiles
+        seen in this check (growth beyond the granted allowance)."""
+        unexpected_total = 0
+        for name, w in self._watched.items():
+            cur = cache_size(w.fn)
+            if cur is None or cur <= w.last:
+                continue
+            delta = cur - w.last
+            w.last = cur
+            expected = min(delta, w.allow)
+            w.allow -= expected
+            w.compiles += delta
+            unexpected = delta - expected
+            w.unexpected += unexpected
+            unexpected_total += unexpected
+            self._tracer.counter("compile/" + name, delta, total=cur,
+                                 unexpected=unexpected, **attrs)
+        return unexpected_total
+
+    def compiles(self) -> int:
+        """Total compiles observed across watched functions."""
+        return sum(w.compiles for w in self._watched.values())
+
+    def recompiles(self) -> int:
+        """Compiles beyond the granted allowances (the leaks)."""
+        return sum(w.unexpected for w in self._watched.values())

@@ -1,0 +1,57 @@
+"""ObsSpec: the declarative, sweepable obs configuration.
+
+Mirrors FaultSpec's shape: a frozen dataclass field on ExperimentSpec,
+JSON-round-trippable (``to_dict``/``from_dict`` with unknown-key
+filtering so old manifests keep loading), addressable from sweep axes
+as ``"obs.enabled"`` etc.
+
+``enabled`` is a tri-state: ``None`` (the default) defers to
+``$FEDPHD_OBS`` via the single resolve code path, so a spec that never
+mentions obs can still be traced from the environment, while an
+explicit ``True``/``False`` in the spec always wins (same precedence
+contract as engine/backend/precision).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.experiment.resolve import resolve_knob
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsSpec:
+    """Tracing + metrics configuration (disabled by default)."""
+    # tri-state: True/False are explicit; None resolves $FEDPHD_OBS > off
+    enabled: Optional[bool] = None
+    # trace.jsonl path; "" = next to the run's checkpoint (or CWD)
+    trace: str = ""
+    # events buffered before a file flush; 1 = write-through (default:
+    # the trace must be readable the moment a run stops, and the hot
+    # path is only touched when tracing is on anyway)
+    flush_every: int = 1
+    # watch jit caches and flag growth beyond the first compile per fn
+    compile_tracking: bool = True
+
+    def __post_init__(self):
+        if self.flush_every < 1:
+            raise ValueError(f"flush_every must be >= 1, got "
+                             f"{self.flush_every}")
+
+    @property
+    def resolved_enabled(self) -> bool:
+        """``enabled`` if explicit, else ``$FEDPHD_OBS`` > off."""
+        explicit = None if self.enabled is None else \
+            ("on" if self.enabled else "off")
+        return resolve_knob("obs", explicit) == "on"
+
+    def replace(self, **kw) -> "ObsSpec":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ObsSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})

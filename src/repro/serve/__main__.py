@@ -12,11 +12,13 @@ analytic MACs; ``--metrics`` dumps them as JSON for CI.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 
 import numpy as np
 
+from repro.experiment.cli import (add_compute_flags, add_metrics_flag,
+                                  add_obs_flags, make_cli_tracer,
+                                  write_metrics)
 from repro.metrics.flops import unet_macs
 from repro.serve.artifact import load_serving_artifact, masks_for_ratio
 from repro.serve.server import DiffusionServer, Request
@@ -34,18 +36,14 @@ def main():
     ap.add_argument("--prune-ratio", type=float, default=0.0,
                     help="serve through masks at this ratio (0 = dense)")
     ap.add_argument("--criterion", default="l2", choices=("l2", "random"))
-    ap.add_argument("--backend", default=None,
-                    help="override the checkpoint's compute backend")
-    ap.add_argument("--precision", default=None,
-                    choices=("fp32", "bf16"),
-                    help="serving compute precision (default: the "
-                         "checkpoint's, else $FEDPHD_PRECISION/fp32); "
-                         "bf16 casts the weights once at load")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="directory for req<rid>.npy images")
-    ap.add_argument("--metrics", default=None,
-                    help="write a JSON metrics file here")
+    # shared surface with repro.experiment.runner:
+    # --backend/--precision/--trace/--metrics (repro.experiment.cli)
+    add_compute_flags(ap)
+    add_obs_flags(ap)
+    add_metrics_flag(ap)
     args = ap.parse_args()
 
     params, cfg, meta = load_serving_artifact(args.ckpt,
@@ -56,9 +54,13 @@ def main():
                                 criterion=args.criterion)
     dense_macs = unet_macs(params, cfg.image_size)
     macs = unet_macs(params, cfg.image_size, masks=masks)
+    # --trace > $FEDPHD_OBS > off; default path next to the checkpoint
+    tracer = make_cli_tracer(args.trace,
+                             default_path=args.ckpt + ".serve.trace.jsonl")
     server = DiffusionServer(params, cfg, slots=args.slots,
                              num_steps=args.steps, eta=args.eta, masks=masks,
-                             precision=args.precision or "")
+                             precision=args.precision or "",
+                             tracer=tracer if tracer.enabled else None)
     reqs = [Request(rid=r, seed=args.seed + r) for r in range(args.requests)]
     res = server.run(reqs)
 
@@ -82,8 +84,11 @@ def main():
         for rid, img in res.images.items():
             np.save(os.path.join(args.out, f"req{rid}.npy"), img)
         print(f"wrote {len(res.images)} images to {args.out}")
+    if tracer.enabled:
+        tracer.close()
+        print(f"trace -> {tracer.path}")
     if args.metrics:
-        metrics = {
+        write_metrics(args.metrics, "serve", {
             "requests": args.requests,
             "images": len(res.images),
             "requests_per_s": res.requests_per_s,
@@ -94,9 +99,7 @@ def main():
             "macs_per_forward": macs,
             "dense_macs_per_forward": dense_macs,
             "faults": res.faults,
-        }
-        with open(args.metrics, "w") as f:
-            json.dump(metrics, f, indent=2)
+        })
         print(f"wrote metrics to {args.metrics}")
     if len(res.images) != args.requests:
         raise SystemExit(f"served {len(res.images)}/{args.requests} requests")

@@ -27,6 +27,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.diffusion.ddim import ddim_step, ddim_timesteps
 from repro.diffusion.schedule import linear_schedule
+from repro.obs.compile_tracker import CompileTracker, cache_size
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclass(frozen=True)
@@ -70,7 +72,7 @@ class DiffusionServer:
 
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
                  num_steps: int = 10, eta: float = 0.0, masks=None,
-                 precision: str = ""):
+                 precision: str = "", tracer=None):
         from repro.models.unet import apply_unet
         from repro.models.ops import (cast_floats, compute_dtype,
                                       resolve_precision)
@@ -122,6 +124,23 @@ class DiffusionServer:
         self._admit_t = [0.0] * slots
         self.step_latencies_s: List[float] = []
         self.request_latencies_s: Dict[int, float] = {}
+        # obs: NULL_TRACER default = zero-overhead no-op, same contract
+        # as the trainers (repro.obs)
+        self._obs = NULL_TRACER
+        self._obs_compile = None
+        if tracer is not None:
+            self.bind_tracer(tracer)
+
+    def bind_tracer(self, tracer) -> None:
+        """Attach (or detach, with ``None``) an obs tracer; ticks emit
+        ``serve/tick`` spans and the jitted tick program's cache is
+        watched for unexpected recompiles (``compile/tick``)."""
+        self._obs = tracer if tracer is not None else NULL_TRACER
+        self._obs_compile = CompileTracker(self._obs) \
+            if (self._obs.enabled
+                and getattr(self._obs, "compile_tracking", False)) else None
+        if self._obs_compile is not None:
+            self._obs_compile.watch("tick", self._tick)
 
     # -- request lifecycle ---------------------------------------------------
     def _seed_state(self, seed: int):
@@ -168,13 +187,18 @@ class DiffusionServer:
     def step(self) -> List[Tuple[int, np.ndarray]]:
         """One jitted denoising tick over the slot batch; returns the
         ``(rid, image)`` pairs that completed this tick."""
-        active = jnp.asarray([r is not None for r in self._slot_req])
+        occupancy = [r is not None for r in self._slot_req]
+        active = jnp.asarray(occupancy)
         t0 = time.perf_counter()
         self.x, self.sidx, self.keys = self._tick(
             self.params, self.x, self.sidx, active, self.keys)
         self.x.block_until_ready()
         now = time.perf_counter()
         self.step_latencies_s.append(now - t0)
+        self._obs.record_span("serve/tick", t0, now,
+                              active=sum(occupancy))
+        if self._obs_compile is not None:
+            self._obs_compile.check()
         completed = []
         sidx_host = np.asarray(self.sidx)
         for s, req in enumerate(self._slot_req):
@@ -186,8 +210,11 @@ class DiffusionServer:
 
     def compile_count(self) -> int:
         """Number of compiled tick programs (tests assert it stays 1 —
-        slot occupancy/depth is data, not shape)."""
-        return self._tick._cache_size()
+        slot occupancy/depth is data, not shape).  Reads jit's cache
+        through the shared :func:`repro.obs.compile_tracker.cache_size`
+        probe rather than the private ``_cache_size`` directly."""
+        n = cache_size(self._tick)
+        return 0 if n is None else n
 
     # -- serving loop --------------------------------------------------------
     def run(self, requests: RequestSource, *, idle_limit: int = 100,
@@ -216,10 +243,13 @@ class DiffusionServer:
                     break
                 except Exception as e:          # queue fault
                     res.faults.append(f"request source fault: {e!r}")
+                    self._obs.event("serve/fault", kind="source",
+                                    detail=repr(e))
                     faults_in_a_row += 1
                     if faults_in_a_row >= fault_limit:
                         res.faults.append("fault limit reached; treating "
                                           "source as exhausted")
+                        self._obs.event("serve/fault", kind="fault_limit")
                         exhausted = True
                     continue
                 faults_in_a_row = 0
@@ -233,6 +263,7 @@ class DiffusionServer:
                 if idle >= idle_limit:
                     res.faults.append("idle limit reached with empty "
                                       "source; stopping")
+                    self._obs.event("serve/fault", kind="idle_limit")
                     break
                 continue
             idle = 0
@@ -241,4 +272,5 @@ class DiffusionServer:
         res.seconds = time.perf_counter() - t_start
         res.step_latencies_s = self.step_latencies_s[n0_steps:]
         res.request_latencies_s = dict(self.request_latencies_s)
+        self._obs.flush()
         return res

@@ -1,9 +1,15 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches
-must see the real single CPU device; only dryrun.py forces 512."""
-import os
+must see the real single CPU device; only dryrun.py forces 512.
 
+The CI matrix knobs (FEDPHD_ENGINE/BACKEND/PRECISION) all route
+through repro.experiment.resolve — the one ``explicit > $FEDPHD_* >
+default`` code path — so a typo'd leg fails fast here instead of
+silently re-running the default path N times.
+"""
 import jax
 import pytest
+
+from repro.experiment.resolve import KNOBS, resolve_knob, validate_env
 
 
 @pytest.fixture(scope="session")
@@ -11,63 +17,43 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+def _matrix_knob(name):
+    """Validate $<knob.env> and return the resolved default-path value."""
+    env = validate_env(name)        # raises on a typo'd value
+    resolved = resolve_knob(name)
+    assert resolved == (env or KNOBS[name].default)
+    return resolved
+
+
 @pytest.fixture(scope="session", autouse=True)
 def fedphd_engine_matrix():
     """CI matrix knob: FEDPHD_ENGINE=sequential|vectorized|auto pins the
-    default round engine for every FedPhD / run_flat_fl constructed
-    without an explicit engine= (repro.fl.engine.resolve_engine reads
-    the env).  Tests that pass engine= explicitly — the equivalence
+    default round engine for every FedPhD / FlatTrainer constructed
+    without an explicit engine= (repro.experiment.resolve reads the
+    env).  Tests that pass engine= explicitly — the equivalence
     suites — are unaffected, so both paths stay covered in every matrix
-    leg.  Fails fast on a typo'd value instead of silently running the
-    default path twice.
+    leg.
     """
-    from repro.fl.engine import ENGINES, resolve_engine
-    env = os.environ.get("FEDPHD_ENGINE")
-    if env is not None and env not in ENGINES:
-        raise RuntimeError(f"FEDPHD_ENGINE={env!r}; expected one of "
-                           f"{ENGINES}")
-    engine, strict = resolve_engine(None)
-    assert not strict and engine == (env or "auto")
-    return engine
+    return _matrix_knob("engine")
 
 
 @pytest.fixture(scope="session", autouse=True)
 def fedphd_backend_matrix():
     """CI matrix knob: FEDPHD_BACKEND=xla|pallas|ref pins the default
     compute backend for every trainer/config that does not set
-    ``ModelConfig.backend`` explicitly (repro.models.ops.resolve_backend
-    reads the env; trainers bake the resolved value into their frozen
-    cfg at construction).  The backend-parity tests pass explicit
-    backends, so every leg still covers all three.  Fails fast on a
-    typo'd value instead of silently running xla thrice.
+    ``ModelConfig.backend`` explicitly (trainers bake the resolved
+    value into their frozen cfg at construction).  The backend-parity
+    tests pass explicit backends, so every leg still covers all three.
     """
-    from repro.models.ops import BACKENDS, resolve_backend
-    env = os.environ.get("FEDPHD_BACKEND")
-    # "" behaves like unset (resolve_backend's `or` chain skips it)
-    if env and env not in BACKENDS:
-        raise RuntimeError(f"FEDPHD_BACKEND={env!r}; expected one of "
-                           f"{BACKENDS}")
-    backend = resolve_backend(None)
-    assert backend == (env or "xla")
-    return backend
+    return _matrix_knob("backend")
 
 
 @pytest.fixture(scope="session", autouse=True)
 def fedphd_precision_matrix():
     """CI matrix knob: FEDPHD_PRECISION=fp32|bf16 pins the default
     compute precision for every trainer/config that does not set
-    ``ModelConfig.precision`` explicitly (repro.models.ops.
-    resolve_precision reads the env; trainers bake the resolved value
-    into their frozen cfg at construction, exactly like the backend).
+    ``ModelConfig.precision`` explicitly, exactly like the backend.
     The precision tests pass explicit values, so both stay covered in
-    every leg.  Fails fast on a typo'd value instead of silently
-    running fp32 twice.
+    every leg.
     """
-    from repro.models.ops import PRECISIONS, resolve_precision
-    env = os.environ.get("FEDPHD_PRECISION")
-    if env and env not in PRECISIONS:
-        raise RuntimeError(f"FEDPHD_PRECISION={env!r}; expected one of "
-                           f"{PRECISIONS}")
-    precision = resolve_precision(None)
-    assert precision == (env or "fp32")
-    return precision
+    return _matrix_knob("precision")

@@ -19,7 +19,7 @@ from repro.configs import SMOKE_UNET
 from repro.configs.base import FLConfig
 from repro.data import ClientData, shards_per_client
 from repro.data.synthetic import DatasetSpec, make_dataset
-from repro.fl.baselines import FLAT_METHODS, FlatTrainer, run_flat_fl
+from repro.fl.baselines import FLAT_METHODS, FlatTrainer
 
 from repro.fl.client import Client
 
@@ -50,11 +50,19 @@ def assert_params_close(a, b, atol=1e-5):
                                    np.asarray(y, np.float32), atol=atol)
 
 
+def run_flat(method, fl=FL, clients=None, rounds=3, **kw):
+    """run_flat_fl is deprecated — construct FlatTrainer directly.
+    RoundRecord keeps dict-style access, so assertions read the same."""
+    tr = FlatTrainer(method, MICRO_UNET, fl,
+                     make_clients() if clients is None else clients,
+                     rng_seed=0, **kw)
+    tr.run(rounds)
+    return tr
+
+
 def run_pair(method, fl=FL, rounds=3, **kw):
-    seq = run_flat_fl(method, MICRO_UNET, fl, make_clients(), rounds=rounds,
-                      rng_seed=0, engine="sequential", **kw)
-    vec = run_flat_fl(method, MICRO_UNET, fl, make_clients(), rounds=rounds,
-                      rng_seed=0, engine="vectorized", **kw)
+    seq = run_flat(method, fl, rounds=rounds, engine="sequential", **kw)
+    vec = run_flat(method, fl, rounds=rounds, engine="vectorized", **kw)
     return seq, vec
 
 
@@ -96,10 +104,9 @@ def test_persistent_opt_equivalence(method):
 def test_persistent_opt_changes_trajectory():
     """persistent_opt=False must preserve paper semantics (fresh Adam
     per round) — so turning it on must actually change the result."""
-    off = run_flat_fl("fedavg", MICRO_UNET, FL, make_clients(), rounds=2,
-                      rng_seed=0, engine="vectorized")
-    on = run_flat_fl("fedavg", MICRO_UNET, FL, make_clients(), rounds=2,
-                     rng_seed=0, engine="vectorized", persistent_opt=True)
+    off = run_flat("fedavg", rounds=2, engine="vectorized")
+    on = run_flat("fedavg", rounds=2, engine="vectorized",
+                  persistent_opt=True)
     diffs = [float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
              for x, y in zip(jax.tree.leaves(off.params),
                              jax.tree.leaves(on.params))]
@@ -110,8 +117,7 @@ def test_flat_vectorized_raises_on_ragged():
     cls = make_clients()
     cls[0].data.batch_size = 4
     with pytest.raises(ValueError):
-        run_flat_fl("fedavg", MICRO_UNET, FL, cls, rounds=1,
-                    engine="vectorized")
+        run_flat("fedavg", clients=cls, rounds=1, engine="vectorized")
 
 
 def test_flat_auto_ragged_single_warning():
@@ -121,8 +127,7 @@ def test_flat_auto_ragged_single_warning():
     cls[0].data.batch_size = 4
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
-        res = run_flat_fl("fedavg", MICRO_UNET, FL, cls, rounds=2,
-                          engine="auto")
+        res = run_flat("fedavg", clients=cls, rounds=2, engine="auto")
     ragged = [w for w in caught if "sequential" in str(w.message)]
     assert len(ragged) == 1
     assert all(np.isfinite(h["loss"]) for h in res.history)

@@ -298,7 +298,18 @@ def test_legacy_entrypoints_still_work():
     assert hist[1].eval == 1.25                 # unified hook contract
 
     clients, _, _ = make_clients(SPEC)
-    res = run_flat_fl("fedavg", TINY_UNET, SPEC.fl, clients, rounds=1,
-                      rng_seed=0, engine="sequential")
+    with pytest.warns(DeprecationWarning, match="run_flat_fl"):
+        res = run_flat_fl("fedavg", TINY_UNET, SPEC.fl, clients, rounds=1,
+                          rng_seed=0, engine="sequential")
     assert res.history[0]["comm_gb"] == res.history[0].comm_gb
     assert res.history[0]["round"] == 1
+
+
+def test_use_flash_deprecated():
+    """The flash boolean was subsumed by the backend axis; the shim
+    still routes to the pallas attention path but warns."""
+    from repro.models.common import ApplyOptions
+
+    with pytest.warns(DeprecationWarning, match="use_flash"):
+        ApplyOptions(use_flash=True)
+    ApplyOptions()                         # the default stays silent

@@ -7,8 +7,16 @@ from repro.configs import SMOKE_UNET
 from repro.configs.base import FLConfig
 from repro.core.hfl import FedPhD
 from repro.data import SMOKE_DATA, ClientData, make_dataset, shards_per_client
-from repro.fl.baselines import run_flat_fl, run_centralized
+from repro.fl.baselines import FlatTrainer, run_centralized
 from repro.fl.client import Client
+
+
+def run_flat(method, cfg, fl, clients, rounds):
+    """run_flat_fl is deprecated — construct FlatTrainer directly.
+    RoundRecord keeps dict-style access, so assertions read the same."""
+    tr = FlatTrainer(method, cfg, fl, clients, rng_seed=0)
+    tr.run(rounds)
+    return tr
 
 
 @pytest.fixture(scope="module")
@@ -60,14 +68,14 @@ def test_fedphd_sh_tracking(clients, fl_cfg):
 @pytest.mark.parametrize("method", ["fedavg", "fedprox", "feddiffuse",
                                     "scaffold"])
 def test_flat_baselines(method, clients, fl_cfg):
-    res = run_flat_fl(method, SMOKE_UNET, fl_cfg, clients, rounds=2)
+    res = run_flat(method, SMOKE_UNET, fl_cfg, clients, rounds=2)
     assert len(res.history) == 2
     assert all(np.isfinite(h["loss"]) for h in res.history)
 
 
 def test_feddiffuse_cheaper_than_fedavg(clients, fl_cfg):
-    r1 = run_flat_fl("fedavg", SMOKE_UNET, fl_cfg, clients, rounds=1)
-    r2 = run_flat_fl("feddiffuse", SMOKE_UNET, fl_cfg, clients, rounds=1)
+    r1 = run_flat("fedavg", SMOKE_UNET, fl_cfg, clients, rounds=1)
+    r2 = run_flat("feddiffuse", SMOKE_UNET, fl_cfg, clients, rounds=1)
     assert r2.history[0]["comm_gb"] < r1.history[0]["comm_gb"]
 
 
